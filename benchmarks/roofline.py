@@ -1,0 +1,93 @@
+"""Roofline table builder: reads the dry-run artifacts and renders the
+EXPERIMENTS.md §Roofline table (one row per arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+COLS = ("arch", "shape", "mesh", "bottleneck", "compute_s", "memory_s",
+        "collective_s", "step_time_s", "useful_flop_frac", "mfu_bound")
+
+
+def load_records(art_dir: str = ART_DIR) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt(x, nd=3):
+    if isinstance(x, float):
+        return f"{x:.3e}" if (abs(x) < 1e-2 or abs(x) > 1e4) else f"{x:.3f}"
+    return str(x)
+
+
+def table(records: List[Dict], mesh: str = None) -> str:
+    rows = []
+    for r in records:
+        if mesh and r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        mem = r["memory_analysis"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], rl["bottleneck"],
+            fmt(rl["compute_s"]), fmt(rl["memory_s"]),
+            fmt(rl["collective_s"]), fmt(rl["step_time_s"]),
+            f"{rl.get('useful_flop_frac', 0):.3f}",
+            f"{rl.get('mfu_bound', 0) * 100:.2f}%",
+            f"{(mem['peak_size'] or 0) / 2**30:.2f}",
+        ])
+    hdr = ["arch", "shape", "mesh", "bound", "compute[s]", "memory[s]",
+           "collective[s]", "step≥[s]", "useful/HLO", "MFU-bound",
+           "peak GiB/dev"]
+    lines = ["| " + " | ".join(hdr) + " |",
+             "|" + "|".join(["---"] * len(hdr)) + "|"]
+    for row in rows:
+        lines.append("| " + " | ".join(row) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return
+    print(f"# Roofline — BASELINE ({len(recs)} cells)\n")
+    for mesh in ("pod16x16", "pod2x16x16"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        if sub:
+            print(f"\n## mesh {mesh} ({len(sub)} cells)\n")
+            print(table(sub))
+    # bottleneck census
+    census: Dict[str, int] = {}
+    for r in recs:
+        census[r["roofline"]["bottleneck"]] = census.get(
+            r["roofline"]["bottleneck"], 0) + 1
+    print("\nbottleneck census:", census)
+
+    opt_dir = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun_opt")
+    opt = load_records(opt_dir) if os.path.isdir(opt_dir) else []
+    if opt:
+        print(f"\n# Roofline — OPTIMIZED archs after §Perf ({len(opt)} cells)\n")
+        print(table(opt))
+        base = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+        print("\n## step-bound improvement vs baseline\n")
+        for r in opt:
+            b = base.get((r["arch"], r["shape"], r["mesh"]))
+            if b:
+                s0 = b["roofline"]["step_time_s"]
+                s1 = r["roofline"]["step_time_s"]
+                print(f"  {r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} "
+                      f"{s0:9.3f}s → {s1:9.3f}s  ({s0 / max(s1, 1e-12):5.2f}×)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``
+
+Sections (one per paper table/figure + the roofline deliverable):
+  1. reader/op scaling (Fig. 5)          — bench_reader_scaling
+  2. per-op scaling exponents (§VI)      — bench_ops
+  3. case studies (§VII, Figs. 7-13)     — bench_case_studies
+  4. roofline table (all dry-run cells)  — roofline
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+def main():
+    t0 = time.time()
+    print("=" * 72)
+    print("repro benchmarks — Pipit on TPU")
+    print("=" * 72)
+
+    from . import bench_reader_scaling
+    print("\n## [1/5] Reader & op scaling vs trace size (paper Fig. 5)")
+    print(json.dumps(bench_reader_scaling.bench(), indent=1))
+
+    from . import bench_ops
+    print("\n## [2/5] Per-operation scaling exponents (paper §VI)")
+    print(json.dumps(bench_ops.bench(), indent=1))
+
+    from . import bench_case_studies
+    print("\n## [3/5] Case studies (paper §VII, Figs. 7-13)")
+    print(json.dumps(bench_case_studies.bench(), indent=1))
+
+    from . import bench_kernels
+    print("\n## [4/5] Pallas kernel block-size roofline")
+    print(json.dumps(bench_kernels.bench(), indent=1))
+
+    from . import roofline
+    print("\n## [5/5] Roofline table (from dry-run artifacts)")
+    roofline.main()
+
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

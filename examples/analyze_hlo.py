@@ -1,0 +1,46 @@
+"""Analyze a compiled multi-pod program with Pipit (beyond-paper case study):
+the dry-run's partitioned HLO becomes a modeled per-device timeline that
+comm_matrix / comm_comp_breakdown / flat_profile dissect.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --out experiments/dryrun --save-hlo
+    PYTHONPATH=src python examples/analyze_hlo.py \
+        experiments/dryrun/qwen1.5-0.5b__train_4k__pod16x16.hlo.gz
+"""
+
+import gzip
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core.trace import Trace  # noqa: E402
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return
+    path = sys.argv[1]
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        hlo = f.read()
+    t = Trace.from_hlo(hlo, n_procs=8)
+    print(f"modeled timeline: {len(t)} events on {t.num_processes} devices\n")
+    print("flat profile by op kind:")
+    print(t.flat_profile().head(10))
+    cm = t.comm_matrix()
+    print(f"\ncomm matrix (ring traffic): dev0→dev1 = {cm[0,1]/1e9:.2f} GB")
+    bd = t.comm_comp_breakdown()
+    comp = float(np.asarray(bd['comp_only']).mean())
+    comm = float(np.asarray(bd['comm_only']).mean())
+    ov = float(np.asarray(bd['overlap']).mean())
+    tot = comp + comm + ov
+    print(f"\nmodeled step breakdown: compute {comp/tot:.1%}, "
+          f"exposed comm {comm/tot:.1%}, overlapped {ov/tot:.1%}")
+    print("(exposed comm is the hillclimb target — see EXPERIMENTS.md §Perf)")
+
+
+if __name__ == "__main__":
+    main()

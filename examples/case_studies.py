@@ -1,0 +1,28 @@
+"""Paper §VII case studies on structure-preserving generated traces.
+
+    PYTHONPATH=src python examples/case_studies.py --study load_imbalance
+    PYTHONPATH=src python examples/case_studies.py --study all
+"""
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.bench_case_studies import STUDIES  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--study", default="all", choices=list(STUDIES) + ["all"])
+    args = ap.parse_args()
+    names = list(STUDIES) if args.study == "all" else [args.study]
+    for n in names:
+        print(f"\n=== {n} ===")
+        print(json.dumps(STUDIES[n](), indent=1))
+
+
+if __name__ == "__main__":
+    main()

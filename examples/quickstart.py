@@ -1,0 +1,48 @@
+"""Quickstart (paper Fig. 1): read a CSV trace, inspect the events frame,
+and run the first analysis ops.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import io
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.trace import Trace  # noqa: E402
+
+FIG1 = """Timestamp (s), Event Type, Name, Process
+0, Enter, main(), 0
+1, Enter, foo(), 0
+3, Enter, MPI_Send, 0
+5, Leave, MPI_Send, 0
+8, Enter, baz(), 0
+18, Leave, baz(), 0
+25, Leave, foo(), 0
+100, Leave, main(), 0
+0, Enter, main(), 1
+1, Enter, foo(), 1
+3, Enter, MPI_Recv, 1
+6, Leave, MPI_Recv, 1
+8, Enter, baz(), 1
+18, Leave, baz(), 1
+25, Leave, foo(), 1
+95, Leave, main(), 1
+"""
+
+foo_bar = Trace.from_csv(io.StringIO(FIG1))
+print("events frame (paper Fig. 1):")
+print(foo_bar.events[["Timestamp (ns)", "Event Type", "Name", "Process"]])
+
+print("\nflat profile (paper §IV-B):")
+print(foo_bar.flat_profile())
+
+print("\ntime profile, 4 bins:")
+print(foo_bar.time_profile(num_bins=4))
+
+print("\ncalling context tree:")
+for node in foo_bar.cct.nodes[1:]:
+    print("  " * node.depth + node.name)
+
+print("\nidle time per process:")
+print(foo_bar.idle_time())

@@ -1,0 +1,5 @@
+from .hlostats import collective_stats, shape_bytes, DTYPE_BYTES
+from .roofline import roofline_terms, HW
+
+__all__ = ["collective_stats", "shape_bytes", "DTYPE_BYTES",
+           "roofline_terms", "HW"]

@@ -1,0 +1,48 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Target hardware: TPU v5e —
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+    compute term    = HLO_FLOPs  / (chips × peak)      [s]
+    memory term     = HLO_bytes  / (chips × HBM bw)    [s]
+    collective term = wire_bytes /  link bw            [s]  (wire bytes are
+                      already per-device from the ring model)
+
+``flops``/``bytes`` come from ``compiled.cost_analysis()`` which reports
+*whole-program* numbers on the CPU backend (sum over the 256/512 partitions);
+dividing by chip count gives per-chip work.  The dominant term names the
+bottleneck; MODEL_FLOPS/HLO_FLOPs exposes remat/capacity/attention waste.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+__all__ = ["HW", "roofline_terms"]
+
+HW = {
+    "peak_flops": 197e12,      # bf16 / chip
+    "hbm_bw": 819e9,           # bytes/s / chip
+    "ici_bw": 50e9,            # bytes/s / link
+}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   chips: int, model_flops: Optional[float] = None,
+                   hw: Dict[str, float] = HW) -> Dict[str, float]:
+    t_compute = flops / chips / hw["peak_flops"]
+    t_memory = hbm_bytes / chips / hw["hbm_bw"]
+    t_collective = wire_bytes / hw["ici_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    out = dict(terms)
+    out["bottleneck"] = dom.replace("_s", "")
+    out["step_time_s"] = max(terms.values())        # roofline lower bound
+    out["chips"] = chips
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flop_frac"] = model_flops / max(flops, 1.0)
+        out["mfu_bound"] = (model_flops / chips / hw["peak_flops"]
+                            / max(out["step_time_s"], 1e-30))
+    return out

@@ -1,0 +1,16 @@
+"""pipit-lm-100m: the paper-native end-to-end driver config — a ~100M dense
+LM our trainer runs for a few hundred steps while the Pipit tracer records
+the execution (examples/train_traced.py)."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pipit-lm-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, d_ff=3072, vocab=32000, tie_embeddings=True,
+    rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="pipit-lm-100m-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, d_ff=128, vocab=512, tie_embeddings=True,
+    rope_theta=1e4,
+)

@@ -1,0 +1,15 @@
+"""qwen1.5-110b [hf]: dense 80L d=8192 64H (GQA kv=8) d_ff=49152
+vocab=152064, QKV bias."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense", n_layers=80, d_model=8192,
+    n_heads=64, n_kv_heads=8, d_ff=49152, vocab=152064, qkv_bias=True,
+    rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="qwen1.5-110b-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=8, n_kv_heads=2, d_ff=192, vocab=512, qkv_bias=True,
+    rope_theta=1e4,
+)

@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: Pipit, a programmatic trace-analysis
+library on a columnar event model (here NumPy-backed; pandas is unavailable).
+
+Public surface mirrors the paper's API: ``Trace`` with ``from_*`` readers and
+the §IV operations as methods, ``Filter`` DSL, ``EventFrame`` as the
+DataFrame-equivalent escape hatch for custom wrangling.
+"""
+
+from .cct import CCT, CCTNode
+from .constants import (ENTER, ET, EXC, INC, INSTANT, LEAVE, MPI_RECV,
+                        MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD,
+                        TS)
+from .filters import Filter, time_window_filter
+from .frame import Categorical, EventFrame, concat
+from .ops_patterns import mass, matrix_profile
+from .trace import Trace
+
+__all__ = [
+    "Trace", "EventFrame", "Categorical", "concat", "Filter",
+    "time_window_filter", "CCT", "CCTNode", "mass", "matrix_profile",
+    "TS", "ET", "NAME", "PROC", "THREAD", "ENTER", "LEAVE", "INSTANT",
+    "INC", "EXC", "MSG_SIZE", "PARTNER", "TAG", "MPI_SEND", "MPI_RECV",
+]

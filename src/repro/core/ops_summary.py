@@ -1,0 +1,182 @@
+"""Summary/aggregation operations (paper §IV-B, §IV-D in part).
+
+All functions take a Trace whose structure columns (matching, parent,
+time.inc/time.exc) are already materialized; Trace methods guarantee that.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, NAME, PROC, TS)
+from .frame import Categorical, EventFrame
+
+
+def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = NAME,
+                 per_process: bool = False) -> EventFrame:
+    """Total metric per function, aggregated over the whole trace (§IV-B)."""
+    ev = trace.events
+    ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
+    keys = [groupby_column, PROC] if per_process else [groupby_column]
+    aggs = {m: "sum" for m in metrics}
+    prof = ent.groupby_agg(keys, aggs, count_name="count")
+    # NaN-safe: unmatched enters carry NaN metrics
+    for m in metrics:
+        prof[m] = np.nan_to_num(prof[m])
+    order = np.argsort(-prof[metrics[0]], kind="stable")
+    return prof.take(order)
+
+
+def time_profile(trace, num_bins: int = 32, metric: str = EXC,
+                 normalized: bool = False, backend: str = "numpy") -> EventFrame:
+    """Flat profile over time (§IV-B): bins × functions matrix.
+
+    Each matched call contributes its exclusive time, modeled as uniformly
+    spread over its [enter, leave) span.  Exact O(N + bins·functions) NumPy
+    sweep (no N×bins matrix); ``backend="pallas"`` routes the dense tiled
+    kernel in repro.kernels.time_bin (TPU target; interpret-mode on CPU).
+    """
+    ev = trace.events
+    ts = np.asarray(ev[TS], np.float64)
+    if len(ev) == 0:
+        return EventFrame({"bin_start": np.asarray([]), "bin_end": np.asarray([])})
+    t0, t1 = float(ts.min()), float(ts.max())
+    if t1 <= t0:
+        t1 = t0 + 1.0
+    edges = np.linspace(t0, t1, num_bins + 1)
+
+    is_enter = ev.cat(ET).mask_eq(ENTER)
+    match = np.asarray(ev.column("_matching_event"), np.int64)
+    sel = np.nonzero(is_enter & (match >= 0))[0]
+    starts = ts[sel]
+    ends = ts[match[sel]]
+    inc = ends - starts
+    w = np.nan_to_num(np.asarray(ev.column(metric), np.float64)[sel])
+    rate = np.where(inc > 0, w / np.maximum(inc, 1e-30), 0.0)
+    name_codes = ev.codes(NAME)[sel]
+    cats = ev.cat(NAME).categories
+    nf = len(cats)
+
+    if backend == "pallas":
+        from ..kernels.ops import time_profile_matrix
+        # normalize to bin units: f32 kernel arithmetic loses ns-scale
+        # precision at bin boundaries otherwise
+        bw = (t1 - t0) / num_bins
+        prof = np.asarray(time_profile_matrix(
+            (starts - t0) / bw, (ends - t0) / bw, name_codes, rate * bw,
+            n_funcs=nf, n_bins=num_bins, t0=0.0, t1=float(num_bins))).T
+    else:
+        prof = _exact_profile(starts, ends, rate, name_codes, edges, nf)
+
+    # zero-duration calls: all weight in their bin
+    zsel = inc <= 0
+    if np.any(zsel & (w > 0)):
+        b = np.clip(np.searchsorted(edges, starts[zsel], side="right") - 1, 0, num_bins - 1)
+        np.add.at(prof, (b, name_codes[zsel]), w[zsel])
+
+    if normalized:
+        denom = prof.sum(axis=1, keepdims=True)
+        prof = prof / np.maximum(denom, 1e-30)
+    out = EventFrame({"bin_start": edges[:-1], "bin_end": edges[1:]})
+    keep = np.nonzero(prof.sum(axis=0) > 0)[0]
+    order = keep[np.argsort(-prof[:, keep].sum(axis=0), kind="stable")]
+    for f in order:
+        out[str(cats[f])] = prof[:, f]
+    return out
+
+
+def _exact_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
+    """C(t) = Σ rate_i·clamp(t−s_i, 0, e_i−s_i) evaluated at edges, per name.
+
+    Decomposed into five cumulative histograms so cost is O(N + bins·names):
+      C(t) = t·(P−Q) − (Ps−Qs) + R
+    with P=Σr·1[s≤t], Q=Σr·1[e≤t], Ps=Σr·s·1[s≤t], Qs=Σr·s·1[e≤t],
+    R=Σr·(e−s)·1[e≤t].
+    """
+    nb = len(edges) - 1
+    # index of first edge >= value  →  contributes to cumulative at that edge on
+    si = np.searchsorted(edges, starts, side="left")
+    ei = np.searchsorted(edges, ends, side="left")
+    H = np.zeros((5, nb + 2, nf))
+    np.add.at(H[0], (si, name_codes), rate)                    # P
+    np.add.at(H[1], (ei, name_codes), rate)                    # Q
+    np.add.at(H[2], (si, name_codes), rate * starts)           # Ps
+    np.add.at(H[3], (ei, name_codes), rate * starts)           # Qs
+    np.add.at(H[4], (ei, name_codes), rate * (ends - starts))  # R
+    cum = np.cumsum(H[:, : nb + 1, :], axis=1)  # value at each edge
+    t = edges[:, None]
+    C = t * (cum[0] - cum[1]) - (cum[2] - cum[3]) + cum[4]
+    return np.maximum(np.diff(C, axis=0), 0.0)
+
+
+def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
+                   top_functions: Optional[int] = None) -> EventFrame:
+    """Per-function imbalance = max over processes / mean over processes (§IV-D)."""
+    ev = trace.events
+    ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
+    vals = np.nan_to_num(np.asarray(ent.column(metric), np.float64))
+    names = ent.codes(NAME)
+    procs = np.asarray(ent[PROC], np.int64)
+    cats = ent.cat(NAME).categories
+    nprocs = trace.num_processes
+    nf = len(cats)
+    tot = np.zeros((nf, nprocs))
+    np.add.at(tot, (names, procs), vals)
+    active = tot.sum(axis=1) > 0
+    mean = tot.sum(axis=1) / max(nprocs, 1)
+    mx = tot.max(axis=1)
+    imb = np.where(mean > 0, mx / np.maximum(mean, 1e-30), 0.0)
+    topk = np.argsort(-tot, axis=1)[:, :num_processes]
+    sel = np.nonzero(active)[0]
+    order = sel[np.argsort(-mean[sel], kind="stable")]
+    if top_functions:
+        order = order[:top_functions]
+    return EventFrame({
+        NAME: Categorical(order.astype(np.int32), cats),
+        f"{metric}.imbalance": imb[order],
+        "Top processes": np.asarray([list(map(int, topk[i])) for i in order], dtype=object),
+        f"{metric}.mean": mean[order],
+        f"{metric}.max": mx[order],
+    })
+
+
+def idle_time(trace, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
+              k: Optional[int] = None) -> EventFrame:
+    """Total idle (wait/recv) time per process (§IV-D), sorted descending."""
+    ev = trace.events
+    ent_mask = ev.cat(ET).mask_eq(ENTER) & ev.cat(NAME).mask_isin(idle_functions)
+    ent = ev.mask(ent_mask)
+    nprocs = trace.num_processes
+    out = np.zeros(nprocs)
+    np.add.at(out, np.asarray(ent[PROC], np.int64),
+              np.nan_to_num(np.asarray(ent.column(INC), np.float64)))
+    order = np.argsort(-out, kind="stable")
+    res = EventFrame({PROC: order.astype(np.int32), "idle_time": out[order]})
+    return res.head(k) if k else res
+
+
+def multi_run_analysis(traces: Sequence, metric: str = EXC, top_n: int = 16,
+                       label_column: str = "Run") -> EventFrame:
+    """Joined flat profiles across runs (§IV-D, Fig. 12)."""
+    profs = [flat_profile(t, metrics=[metric]) for t in traces]
+    # union of top-N function names across runs, ordered by total weight
+    weights = {}
+    for p in profs:
+        names = p[NAME]
+        vals = p[metric]
+        for nm, v in zip(names[:top_n], vals[:top_n]):
+            weights[nm] = weights.get(nm, 0.0) + float(v)
+    cols = [nm for nm, _ in sorted(weights.items(), key=lambda kv: -kv[1])]
+    labels = []
+    mat = np.zeros((len(traces), len(cols)))
+    for i, (t, p) in enumerate(zip(traces, profs)):
+        labels.append(getattr(t, "label", None) or f"run{i}")
+        lut = {nm: float(v) for nm, v in zip(p[NAME], p[metric])}
+        for j, c in enumerate(cols):
+            mat[i, j] = lut.get(c, 0.0)
+    out = EventFrame({label_column: np.asarray(labels, dtype=object)})
+    for j, c in enumerate(cols):
+        out[c] = mat[:, j]
+    return out

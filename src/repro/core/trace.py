@@ -1,0 +1,261 @@
+"""The Trace object — Pipit's user-facing entry point (paper §III).
+
+A Trace wraps the columnar events EventFrame plus lazily-derived structure
+(enter/leave matching, call depth, caller/callee links, inclusive/exclusive
+metrics, message matching, the unified CCT) and exposes every §IV analysis
+operation as a method.  Readers live in :mod:`repro.readers` and are
+re-exported here as ``Trace.from_*`` constructors.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import ops_comm, ops_logical, ops_patterns, ops_summary, structure
+from .cct import CCT
+from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, LEAVE, MATCH,
+                        MATCH_TS, NAME, PARENT, PROC, TS)
+from .filters import Filter
+from .frame import EventFrame
+
+__all__ = ["Trace"]
+
+
+class Trace:
+    """A parallel execution trace: events + derived structure + analysis API."""
+
+    def __init__(self, events: EventFrame, definitions: Optional[dict] = None,
+                 label: Optional[str] = None):
+        self.events = events
+        self.definitions = definitions or {}
+        self.label = label
+        self._structured = False
+        self._cct: Optional[CCT] = None
+        self._msg_match: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # constructors (delegate to repro.readers; imported lazily to avoid
+    # circular imports)
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_csv(cls, path: str, **kw) -> "Trace":
+        from ..readers.csvreader import read_csv
+        return read_csv(path, **kw)
+
+    @classmethod
+    def from_jsonl(cls, path: str, **kw) -> "Trace":
+        from ..readers.jsonl import read_jsonl
+        return read_jsonl(path, **kw)
+
+    @classmethod
+    def from_chrome(cls, path: str, **kw) -> "Trace":
+        from ..readers.chrome import read_chrome
+        return read_chrome(path, **kw)
+
+    @classmethod
+    def from_otf2_json(cls, path: str, **kw) -> "Trace":
+        from ..readers.otf2j import read_otf2_json
+        return read_otf2_json(path, **kw)
+
+    @classmethod
+    def from_hlo(cls, hlo_text: str, **kw) -> "Trace":
+        from ..readers.hlo import read_hlo
+        return read_hlo(hlo_text, **kw)
+
+    @classmethod
+    def from_events(cls, events: EventFrame, label: Optional[str] = None) -> "Trace":
+        return cls(events, label=label)
+
+    # ------------------------------------------------------------------
+    # basics
+    # ------------------------------------------------------------------
+    @property
+    def num_processes(self) -> int:
+        if len(self.events) == 0:
+            return 0
+        return int(np.asarray(self.events[PROC]).max()) + 1
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Trace(label={self.label!r}, events={len(self.events)}, "
+                f"processes={self.num_processes})")
+
+    # ------------------------------------------------------------------
+    # derived structure (lazy, cached in the frame itself)
+    # ------------------------------------------------------------------
+    def _ensure_structure(self) -> None:
+        if self._structured:
+            return
+        ev = self.events
+        matching, depth, order = structure.match_events(ev)
+        parent = structure.compute_parents(ev, matching, depth, order)
+        inc, exc = structure.compute_inc_exc(ev, matching, parent)
+        ev[MATCH] = matching
+        ev["_depth"] = depth
+        ev[PARENT] = parent
+        ev[INC] = inc
+        ev[EXC] = exc
+        ts = np.asarray(ev[TS], np.float64)
+        ev[MATCH_TS] = np.where(matching >= 0, ts[np.maximum(matching, 0)], np.nan)
+        self._structured = True
+
+    def _ensure_messages(self) -> None:
+        if self._msg_match is None:
+            self._msg_match = structure.match_messages(self.events)
+
+    # paper-named entry points -----------------------------------------
+    def _match_caller_callee(self) -> None:
+        self._ensure_structure()
+
+    def calc_inc_metrics(self) -> None:
+        self._ensure_structure()
+
+    def calc_exc_metrics(self) -> None:
+        self._ensure_structure()
+
+    def _create_cct(self) -> CCT:
+        return self.cct
+
+    @property
+    def cct(self) -> CCT:
+        if self._cct is None:
+            self._ensure_structure()
+            self._cct = CCT.build(self.events,
+                                  np.asarray(self.events.column(PARENT), np.int64),
+                                  np.asarray(self.events.column("_depth")))
+            self.events["_cct_node"] = self._cct.event_node
+        return self._cct
+
+    # ------------------------------------------------------------------
+    # §IV-B summary ops
+    # ------------------------------------------------------------------
+    def flat_profile(self, metrics: Sequence[str] = (EXC,), per_process: bool = False,
+                     groupby_column: str = NAME) -> EventFrame:
+        self._ensure_structure()
+        return ops_summary.flat_profile(self, metrics=metrics, per_process=per_process,
+                                        groupby_column=groupby_column)
+
+    def time_profile(self, num_bins: int = 32, metric: str = EXC,
+                     normalized: bool = False, backend: str = "numpy") -> EventFrame:
+        self._ensure_structure()
+        return ops_summary.time_profile(self, num_bins=num_bins, metric=metric,
+                                        normalized=normalized, backend=backend)
+
+    # ------------------------------------------------------------------
+    # §IV-C communication ops
+    # ------------------------------------------------------------------
+    def comm_matrix(self, output: str = "size") -> np.ndarray:
+        self._ensure_messages()
+        return ops_comm.comm_matrix(self, output=output)
+
+    def message_histogram(self, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+        return ops_comm.message_histogram(self, bins=bins)
+
+    def comm_by_process(self, output: str = "size") -> EventFrame:
+        return ops_comm.comm_by_process(self, output=output)
+
+    def comm_over_time(self, num_bins: int = 32, output: str = "size"):
+        return ops_comm.comm_over_time(self, num_bins=num_bins, output=output)
+
+    def comm_comp_breakdown(self, comm_matcher: Optional[Callable[[str], bool]] = None
+                            ) -> EventFrame:
+        self._ensure_structure()
+        return ops_comm.comm_comp_breakdown(self, comm_matcher=comm_matcher)
+
+    # ------------------------------------------------------------------
+    # §IV-D performance-issue ops
+    # ------------------------------------------------------------------
+    def load_imbalance(self, metric: str = EXC, num_processes: int = 5,
+                       top_functions: Optional[int] = None) -> EventFrame:
+        self._ensure_structure()
+        return ops_summary.load_imbalance(self, metric=metric,
+                                          num_processes=num_processes,
+                                          top_functions=top_functions)
+
+    def idle_time(self, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
+                  k: Optional[int] = None) -> EventFrame:
+        self._ensure_structure()
+        return ops_summary.idle_time(self, idle_functions=idle_functions, k=k)
+
+    def detect_pattern(self, start_event: Optional[str] = None, **kw) -> List[EventFrame]:
+        return ops_patterns.detect_pattern(self, start_event=start_event, **kw)
+
+    def calculate_lateness(self) -> EventFrame:
+        return ops_logical.calculate_lateness(self)
+
+    def lateness_by_process(self) -> EventFrame:
+        return ops_logical.lateness_by_process(self)
+
+    def critical_path_analysis(self) -> List[EventFrame]:
+        return ops_logical.critical_path_analysis(self)
+
+    @staticmethod
+    def multirun_analysis(traces: Sequence["Trace"], metric: str = EXC,
+                          top_n: int = 16) -> EventFrame:
+        for t in traces:
+            t._ensure_structure()
+        return ops_summary.multi_run_analysis(traces, metric=metric, top_n=top_n)
+
+    # ------------------------------------------------------------------
+    # §IV-E data reduction
+    # ------------------------------------------------------------------
+    def filter(self, f: Filter) -> "Trace":
+        sub = self.events.mask(f.mask(self.events))
+        out = Trace(self._strip_structure(sub), definitions=self.definitions,
+                    label=self.label)
+        return out
+
+    def slice_time(self, start: float, end: float, trim: str = "overlap") -> "Trace":
+        """Events whose call interval overlaps [start, end] (default), or whose
+        own timestamp falls inside with trim="within"."""
+        self._ensure_structure()
+        ev = self.events
+        ts = np.asarray(ev[TS], np.float64)
+        if trim == "within":
+            m = (ts >= start) & (ts <= end)
+        else:
+            mts = np.asarray(ev.column(MATCH_TS), np.float64)
+            lo = np.fmin(ts, mts)
+            hi = np.fmax(ts, mts)
+            lo = np.where(np.isnan(lo), ts, lo)
+            hi = np.where(np.isnan(hi), ts, hi)
+            m = (hi >= start) & (lo <= end)
+        return Trace(self._strip_structure(ev.mask(m)),
+                     definitions=self.definitions, label=self.label)
+
+    def filter_processes(self, procs: Sequence[int]) -> "Trace":
+        m = np.isin(np.asarray(self.events[PROC], np.int64), np.asarray(list(procs)))
+        return Trace(self._strip_structure(self.events.mask(m)),
+                     definitions=self.definitions, label=self.label)
+
+    @staticmethod
+    def _strip_structure(ev: EventFrame) -> EventFrame:
+        # row indices in derived columns are invalidated by row selection
+        return ev.drop(MATCH, MATCH_TS, "_depth", PARENT, INC, EXC, "_cct_node")
+
+    # ------------------------------------------------------------------
+    # visualization (delegates; matplotlib optional)
+    # ------------------------------------------------------------------
+    def plot_timeline(self, **kw):
+        from . import viz
+        return viz.plot_timeline(self, **kw)
+
+    def plot_time_profile(self, **kw):
+        from . import viz
+        return viz.plot_time_profile(self, **kw)
+
+    def plot_comm_matrix(self, **kw):
+        from . import viz
+        return viz.plot_comm_matrix(self, **kw)
+
+    def plot_comm_by_process(self, **kw):
+        from . import viz
+        return viz.plot_comm_by_process(self, **kw)
+
+    def plot_message_histogram(self, **kw):
+        from . import viz
+        return viz.plot_message_histogram(self, **kw)

@@ -1,0 +1,3 @@
+from .synthetic import SyntheticLMStream
+
+__all__ = ["SyntheticLMStream"]

@@ -1,0 +1,7 @@
+from .sharding import (ShardingRules, DEFAULT_RULES, rules_for, spec_tree,
+                       batch_spec, logical_to_spec)
+from .compression import compress_int8, decompress_int8, ErrorFeedbackState
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "rules_for", "spec_tree",
+           "batch_spec", "logical_to_spec", "compress_int8",
+           "decompress_int8", "ErrorFeedbackState"]

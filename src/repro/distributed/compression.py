@@ -1,0 +1,107 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 512+ chips the inter-pod all-reduce of bf16 gradients dominates the
+collective term (DCN links are ~10× slower than intra-pod ICI).  We provide
+int8 block-quantized compression with error feedback:
+
+    q = round(g / scale)   with per-block scale = max|g| / 127
+    residual r ← g − q·scale is carried to the next step (error feedback keeps
+    SGD convergence; Karimireddy et al., 2019).
+
+The compressed all-reduce moves 4×/2× fewer bytes on the pod axis; the
+decompress-accumulate happens in f32.  Used by the trainer when
+``grad_compression="int8"``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_int8", "decompress_int8", "ErrorFeedbackState",
+           "compressed_psum"]
+
+_BLOCK = 256
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: jax.Array
+
+
+def _blocked(x: jax.Array) -> Tuple[jax.Array, int, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // _BLOCK)
+    pad = nb * _BLOCK - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(nb, _BLOCK), n, pad
+
+
+def compress_int8(g: jax.Array, ef: Optional[ErrorFeedbackState] = None
+                  ) -> Tuple[jax.Array, jax.Array, ErrorFeedbackState]:
+    """g → (q int8 [nb,B], scale f32 [nb,1], new error-feedback state)."""
+    gf = g.astype(jnp.float32)
+    if ef is not None:
+        gf = gf + ef.residual.astype(jnp.float32)
+    blocks, n, pad = _blocked(gf)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    resid = (blocks - deq).reshape(-1)
+    if pad:
+        resid = resid[:n]
+    return q, scale, ErrorFeedbackState(resid.reshape(g.shape).astype(g.dtype))
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape, dtype) -> jax.Array:
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return deq[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(g: jax.Array, axis_name: str,
+                    ef: Optional[ErrorFeedbackState] = None
+                    ) -> Tuple[jax.Array, ErrorFeedbackState]:
+    """int8-compressed all-reduce over ``axis_name`` (use under shard_map).
+
+    The int8 payload is summed in int32 (values fit: ≤127×n_pods), scales are
+    maxed — a conservative scheme that keeps the wire format at 1 byte/elem.
+    """
+    q, scale, ef2 = compress_int8(g, ef)
+    qs = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    smax = jax.lax.pmax(scale, axis_name)
+    out = decompress_int8(qs.astype(jnp.float32) / 1.0, smax, g.shape,
+                          jnp.float32)
+    n = jax.lax.psum(1, axis_name)
+    return (out / n).astype(g.dtype), ef2
+
+
+def pairwise_compressed_mean(g: jax.Array, axis_name: str, n_pods: int,
+                             ef: Optional[ErrorFeedbackState] = None
+                             ) -> Tuple[jax.Array, ErrorFeedbackState]:
+    """Cross-pod gradient mean with an **int8 wire format** (shard_map only).
+
+    Every pod quantizes its full gradient once and exchanges the int8 payload
+    + f32 block scales with the other pods via ``ppermute`` hops (n−1 hops),
+    accumulating in f32 locally.  Wire bytes/element = (n−1)·1 B vs a bf16
+    all-reduce's 2·(n−1)/n·2 B — a 2× cut at n=2 (the production multi-pod
+    mesh), equal at n=4; for big n use a ring reduce-scatter with per-hop
+    requantization instead (future work).  Error feedback carries the
+    quantization residual to the next step.
+    """
+    q, scale, ef2 = compress_int8(g, ef)
+    acc = (q.astype(jnp.float32) * scale)
+    qr, sr = q, scale
+    for _ in range(n_pods - 1):
+        perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+        qr = jax.lax.ppermute(qr, axis_name, perm)
+        sr = jax.lax.ppermute(sr, axis_name, perm)
+        acc = acc + qr.astype(jnp.float32) * sr
+    out = acc.reshape(-1)[: g.size].reshape(g.shape) / n_pods
+    return out.astype(jnp.float32), ef2

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as a triple:
+    <name>.py — ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+    ops.py    — jit'd public wrappers with shape plumbing + fallbacks
+    ref.py    — pure-jnp oracles the tests assert against
+
+Kernels (TPU is the *target*; this container validates them with
+``interpret=True``):
+    flash_attention — blocked causal/local GQA attention (MXU 128-aligned)
+    time_bin        — Pipit's time_profile overlap histogram (the paper's
+                      hottest analysis loop, §IV-B) as an events×bins tiler
+    topk_gating     — MoE router top-k gating with fused softmax
+"""

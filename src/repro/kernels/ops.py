@@ -1,0 +1,53 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python for correctness); on a real TPU pass
+``interpret=False`` (or set ``REPRO_PALLAS_COMPILE=1``).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .time_bin import time_bin as _time_bin
+from .topk_gating import topk_gating as _topk
+
+__all__ = ["flash_attention_gqa", "time_profile_matrix", "router_topk"]
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "prefix_len",
+                                             "bq", "bk"))
+def flash_attention_gqa(q, k, v, *, causal=True, window=None, prefix_len=0,
+                        bq=128, bk=256):
+    """GQA layout [B,S,H,D] / [B,S,KVH,D] → [B,S,H,D] via the flash kernel.
+
+    KV heads are broadcast to the query-head count before the kernel (the
+    kernel operates on a flat batch×head axis)."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), G, axis=1).reshape(B * H, -1, D)
+    out = _flash(qf, kf, vf, causal=causal, window=window,
+                 prefix_len=prefix_len, bq=bq, bk=bk, interpret=_INTERPRET)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("n_funcs", "n_bins", "t0", "t1"))
+def time_profile_matrix(start, end, func, rate=None, *, n_funcs, n_bins,
+                        t0, t1):
+    return _time_bin(start, end, func, rate, n_funcs=n_funcs, n_bins=n_bins,
+                     t0=t0, t1=t1, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def router_topk(logits, k: int):
+    return _topk(logits, k, interpret=_INTERPRET)

@@ -1,0 +1,64 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch pipit-lm-100m \
+        --steps 200 --batch 16 --seq 256 [--smoke] [--trace out.jsonl]
+
+On real hardware this builds the production mesh and the pjit'd cell from
+``launch.steps``; on this container it runs the Trainer on the local device
+(optionally with a reduced config) and emits a Pipit trace of the run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config
+from ..data import SyntheticLMStream
+from ..runtime import Tracer, Trainer, TrainLoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="pipit-lm-100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--trace", default=None,
+                    help="write the run's Pipit trace (jsonl) here")
+    ap.add_argument("--f32", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    loop = TrainLoopConfig(
+        steps=args.steps, microbatches=args.microbatches, peak_lr=args.lr,
+        warmup_steps=max(args.steps // 10, 1), ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        dtype=jnp.float32 if args.f32 else jnp.bfloat16)
+    tracer = Tracer()
+    trainer = Trainer(cfg, loop, tracer=tracer)
+    stream = SyntheticLMStream(cfg.vocab, args.batch, args.seq)
+    out = trainer.run(stream)
+    stream.close()
+    losses = out["losses"]
+    print(json.dumps({
+        "arch": cfg.name, "steps": out["steps"],
+        "loss_first": losses[0], "loss_last": losses[-1],
+        "mean_step_time_s": out["mean_step_time"],
+        "straggler_events": out["straggler_events"],
+    }, indent=1))
+    if args.trace:
+        tracer.save_jsonl(args.trace)
+        print(f"trace written to {args.trace}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Model zoo: a unified functional LM covering dense / MoE / SSM / hybrid /
+enc-dec / VLM families, plus ``input_specs`` stand-ins for the dry-run."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .config import SHAPES, ModelConfig, ShapeConfig
+from .encdec import EncDecLM
+from .lm import LM
+
+__all__ = ["LM", "EncDecLM", "build_model", "input_specs", "ModelConfig",
+           "ShapeConfig", "SHAPES"]
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return EncDecLM(cfg) if cfg.family == "encdec" else LM(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a given cell.
+
+    * train  → {tokens, labels} (+frames/img_embeds by family)
+    * prefill→ {tokens} (+frames/img_embeds)
+    * decode → {token, pos} (+cache built separately via model.init_cache)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token against a cache of length S
+        out = {"token": jax.ShapeDtypeStruct((B, 1), i32),
+               "pos": jax.ShapeDtypeStruct((), i32)}
+    if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+        out["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_frames, cfg.d_model),
+                                             dtype)
+    if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+        out["img_embeds"] = jax.ShapeDtypeStruct((B, cfg.img_tokens,
+                                                  cfg.d_model), dtype)
+    return out

@@ -1,0 +1,201 @@
+"""Attention cores: chunked (flash-style) training/prefill attention, banded
+local-window attention, and single-token decode attention.
+
+All paths are pure ``jnp`` + ``lax`` (shardable under pjit); the Pallas TPU
+kernel in :mod:`repro.kernels.flash_attention` implements the same math for
+the MXU and is validated against :func:`reference_attention` in interpret
+mode.  The chunked scan keeps peak memory at O(S·chunk) instead of O(S²),
+which is what lets the 32k-token cells compile inside a v5e HBM budget.
+
+GQA layout: q ``[B,S,H,D]``, k/v ``[B,S,KVH,D]`` with ``H = KVH*G``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+
+__all__ = ["reference_attention", "chunked_attention", "local_attention",
+           "decode_attention"]
+
+_NEG = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window, prefix_len: int = 0):
+    """[Sq,Sk] boolean allowed-mask from absolute positions.  ``prefix_len``
+    keeps the first N keys always attendable (Hymba meta tokens)."""
+    d = qpos[:, None] - kpos[None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    if window is not None:
+        m &= d < window
+    if prefix_len:
+        m |= ((kpos < prefix_len)[None, :] & (d >= 0))
+    return m
+
+
+def reference_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                        scale=None):
+    """O(S²) oracle used by tests and tiny shapes."""
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale or D ** -0.5
+    qq = q.reshape(B, Sq, KVH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qq.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    s = jnp.where(_mask(qpos, kpos, causal, window)[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                      chunk: int = 1024, scale=None, prefix_len: int = 0,
+                      unroll: int = 1):
+    """Online-softmax attention scanning over KV chunks (flash-style).
+
+    ``window`` may be a traced scalar (the gemma3 local/global switch); block
+    skipping is impossible then, but masking stays correct.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale or D ** -0.5
+    chunk = min(chunk, Sk)
+    nk = -(-Sk // chunk)
+    pad = nk * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = constrain(jnp.moveaxis(k.reshape(B, nk, chunk, KVH, D), 1, 0),
+                   None, "act_batch", None, "act_kv", None)
+    vc = constrain(jnp.moveaxis(v.reshape(B, nk, chunk, KVH, D), 1, 0),
+                   None, "act_batch", None, "act_kv", None)
+    qq = constrain((q.reshape(B, Sq, KVH, G, D) * scale).astype(q.dtype),
+                   "act_batch", "act_seq", "act_kv_group", "act_q_group", None)
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, ki = inp
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qq.astype(jnp.float32),
+                       kci.astype(jnp.float32))
+        kpos = ki * chunk + jnp.arange(chunk)
+        allow = _mask(qpos, kpos, causal, window, prefix_len) & (kpos < Sk)[None, :]
+        s = jnp.where(allow[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqc,bchd->bhgqd", p, vci.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        m_new = constrain(m_new, "act_batch", "act_kv_group", "act_q_group",
+                          "act_seq")
+        l_new = constrain(l_new, "act_batch", "act_kv_group", "act_q_group",
+                          "act_seq")
+        acc_new = constrain(acc_new, "act_batch", "act_kv_group",
+                            "act_q_group", "act_seq", None)
+        return (m_new, l_new, acc_new), None
+
+    m0 = constrain(jnp.full((B, KVH, G, Sq), _NEG, jnp.float32),
+                   "act_batch", "act_kv_group", "act_q_group", "act_seq")
+    l0 = constrain(jnp.zeros((B, KVH, G, Sq), jnp.float32),
+                   "act_batch", "act_kv_group", "act_q_group", "act_seq")
+    a0 = constrain(jnp.zeros((B, KVH, G, Sq, D), jnp.float32),
+                   "act_batch", "act_kv_group", "act_q_group", "act_seq", None)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kc, vc, jnp.arange(nk)),
+                                  unroll=min(unroll, nk) if unroll > 1 else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def local_attention(q, k, v, *, window: int, chunk: int = 512, scale=None,
+                    unroll: int = 1):
+    """Banded sliding-window attention: each query chunk attends only to the
+    KV band ``[qstart - window, qend)`` — O(S·(window+chunk)) compute instead
+    of O(S²).  ``window`` must be static here.  Causal by construction;
+    sequences start at position 0.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale or D ** -0.5
+    chunk = min(chunk, Sq)
+    nq = -(-Sq // chunk)
+    qpad = nq * chunk - Sq
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    band = window + chunk                      # kv span a query chunk can see
+    band = -(-band // chunk) * chunk           # round up to chunk multiple
+    # pad KV left by `band` and right up to nq*chunk so every slice is in
+    # range (dynamic_slice clamps out-of-range starts, silently shifting the
+    # window — the explicit pad prevents that)
+    assert Sq == Sk, "local_attention is self-attention"
+    k = jnp.pad(k, ((0, 0), (band, nq * chunk - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (band, nq * chunk - Sk), (0, 0), (0, 0)))
+    qb = constrain(jnp.moveaxis(q.reshape(B, nq, chunk, H, D), 1, 0),
+                   None, "act_batch", None, "act_heads", None)
+    k = constrain(k, "act_batch", None, "act_kv", None)
+    v = constrain(v, "act_batch", None, "act_kv", None)
+
+    def body(_, inp):
+        qi, i = inp
+        qstart = i * chunk
+        # band start in padded-kv coordinates: (qstart + chunk - band) + band
+        kstart = qstart + chunk
+        kci = jax.lax.dynamic_slice_in_dim(k, kstart, band, axis=1)
+        vci = jax.lax.dynamic_slice_in_dim(v, kstart, band, axis=1)
+        qq = qi.reshape(B, chunk, KVH, G, D) * scale
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qq.astype(jnp.float32),
+                       kci.astype(jnp.float32))
+        qpos = qstart + jnp.arange(chunk)
+        kpos = qstart + chunk - band + jnp.arange(band)
+        allow = _mask(qpos, kpos, True, window)
+        allow &= ((kpos >= 0) & (kpos < Sk))[None, :]
+        s = jnp.where(allow[None, None, None], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqc,bchd->bqhgd", p, vci.astype(jnp.float32))
+        return None, constrain(o.reshape(B, chunk, H, D),
+                               "act_batch", None, "act_heads", None)
+
+    _, ob = jax.lax.scan(body, None, (qb, jnp.arange(nq)),
+                         unroll=min(unroll, nq) if unroll > 1 else 1)
+    out = jnp.moveaxis(ob, 0, 1).reshape(B, nq * chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, kv_len, window=None, scale=None):
+    """Single-token attention against a full cache.
+
+    q ``[B,1,H,D]``; k/v ``[B,Smax,KVH,D]`` where positions ``>= kv_len`` are
+    unwritten.  Direct (unchunked) einsum: the score tensor is only
+    ``[B,H,Smax]`` and XLA handles a sequence-sharded cache with a distributed
+    softmax (partial max/sum + all-reduce).
+    """
+    B, _, H, D = q.shape
+    Smax, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = scale or D ** -0.5
+    qq = q.reshape(B, KVH, G, D) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qq.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    kpos = jnp.arange(Smax)
+    qpos = kv_len  # the new token's position
+    allow = kpos < kv_len + 1
+    allow &= kpos <= qpos
+    if window is not None:
+        allow &= kpos > qpos - window
+    s = jnp.where(allow[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)

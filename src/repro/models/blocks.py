@@ -1,0 +1,392 @@
+"""Per-layer building blocks shared by every architecture family.
+
+A *layer spec* (``LayerSpec``) describes one transformer layer: which mixer it
+uses (attention / SSD / both-in-parallel), its attention window, and whether
+the FFN is dense or MoE.  ``layer_defs`` emits the ParamDef tree for one such
+layer; ``layer_apply`` runs it in ``train``/``prefill``/``decode`` mode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import ssm as ssm_lib
+from ..distributed.sharding import constrain
+from .config import ModelConfig
+from .layers import ParamDef, apply_rope, gelu, rms_norm, rope, swiglu_act
+from .moe import moe_ffn
+
+__all__ = ["LayerSpec", "layer_defs", "layer_apply", "cache_defs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                    # attn | ssm | hybrid
+    window: Optional[int] = None  # sliding window (None = full)
+    moe: bool = False
+    cross: bool = False           # enc-dec decoder cross-attention
+    causal: bool = True
+    rope_theta: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# parameter definitions
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig, prefix: str = "") -> Dict[str, ParamDef]:
+    d, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    out = {
+        prefix + "ln": ParamDef((d,), ("embed",), "zeros"),
+        prefix + "wq": ParamDef((d, H * hd), ("embed", "heads")),
+        prefix + "wk": ParamDef((d, KVH * hd), ("embed", "kv")),
+        prefix + "wv": ParamDef((d, KVH * hd), ("embed", "kv")),
+        prefix + "wo": ParamDef((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        out[prefix + "bq"] = ParamDef((H * hd,), ("heads",), "zeros")
+        out[prefix + "bk"] = ParamDef((KVH * hd,), ("kv",), "zeros")
+        out[prefix + "bv"] = ParamDef((KVH * hd,), ("kv",), "zeros")
+    return out
+
+
+def _ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_headdim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N
+    return {
+        "sln": ParamDef((d,), ("embed",), "zeros"),
+        "w_zx": ParamDef((d, 2 * d_in), ("embed", "ssm_in")),
+        "w_bc": ParamDef((d, 2 * N), ("embed", None)),
+        "w_dt": ParamDef((d, nh), ("embed", None)),
+        "conv_w": ParamDef((cfg.conv_width, conv_ch), (None, "ssm_in")),
+        "conv_b": ParamDef((conv_ch,), ("ssm_in",), "zeros"),
+        "A_log": ParamDef((nh,), (None,), "zeros"),
+        "Dskip": ParamDef((nh,), (None,), "ones"),
+        "dt_bias": ParamDef((nh,), (None,), "zeros"),
+        "w_so": ParamDef((d_in, d), ("ssm_in", "embed")),
+    }
+
+
+def _ffn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    out = {"fln": ParamDef((d,), ("embed",), "zeros")}
+    if cfg.act == "swiglu":
+        out["w_gate"] = ParamDef((d, f), ("embed", "mlp"))
+        out["w_up"] = ParamDef((d, f), ("embed", "mlp"))
+    else:
+        out["w_up"] = ParamDef((d, f), ("embed", "mlp"))
+    out["w_down"] = ParamDef((f, d), ("mlp", "embed"))
+    return out
+
+
+def _moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    out = {
+        "fln": ParamDef((d,), ("embed",), "zeros"),
+        "router": ParamDef((d, E), ("embed", None)),
+        "we_gate": ParamDef((E, d, f), ("experts", "embed", "expert_mlp")),
+        "we_up": ParamDef((E, d, f), ("experts", "embed", "expert_mlp")),
+        "we_down": ParamDef((E, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        out["ws_gate"] = ParamDef((d, fs), ("embed", "mlp"))
+        out["ws_up"] = ParamDef((d, fs), ("embed", "mlp"))
+        out["ws_down"] = ParamDef((fs, d), ("mlp", "embed"))
+        out["ws_sig"] = ParamDef((d, 1), ("embed", None), "zeros")
+    return out
+
+
+def layer_defs(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, ParamDef]:
+    out: Dict[str, ParamDef] = {}
+    if spec.mixer in ("attn", "hybrid"):
+        out.update(_attn_defs(cfg))
+    if spec.mixer in ("ssm", "hybrid"):
+        out.update(_ssm_defs(cfg))
+    if spec.cross:
+        out.update(_attn_defs(cfg, prefix="x_"))
+    if spec.mixer != "ssm":                       # pure-SSM blocks have no FFN
+        out.update(_moe_defs(cfg) if spec.moe else _ffn_defs(cfg))
+    return out
+
+
+def cache_defs(cfg: ModelConfig, spec: LayerSpec, batch: int, cache_len: int,
+               ring: bool = True) -> Dict[str, ParamDef]:
+    """KV/state cache ParamDefs for one layer at serve time.
+
+    Local-window layers get a ring buffer of ``window`` slots (bounded cache —
+    what makes long_500k feasible on gemma3/hymba); full-attention layers get
+    ``cache_len`` slots.
+    """
+    out: Dict[str, ParamDef] = {}
+    KVH, hd = cfg.n_kv_heads, cfg.hd
+    if spec.mixer in ("attn", "hybrid"):
+        S = min(spec.window, cache_len) if (spec.window and ring) else cache_len
+        out["k_cache"] = ParamDef((batch, S, KVH, hd), ("batch", "kv_seq", "kv", None), "zeros")
+        out["v_cache"] = ParamDef((batch, S, KVH, hd), ("batch", "kv_seq", "kv", None), "zeros")
+        if cfg.meta_tokens:
+            out["k_meta"] = ParamDef((batch, cfg.meta_tokens, KVH, hd),
+                                     ("batch", None, "kv", None), "zeros")
+            out["v_meta"] = ParamDef((batch, cfg.meta_tokens, KVH, hd),
+                                     ("batch", None, "kv", None), "zeros")
+    if spec.mixer in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * cfg.d_model
+        nh = d_in // cfg.ssm_headdim
+        out["ssm_h"] = ParamDef((batch, nh, cfg.ssm_headdim, cfg.ssm_state),
+                                ("batch", None, None, None), "zeros")
+        out["conv_state"] = ParamDef((batch, cfg.conv_width - 1,
+                                      d_in + 2 * cfg.ssm_state),
+                                     ("batch", None, "ssm_in"), "zeros")
+    if spec.cross:
+        out["x_k_cache"] = ParamDef((batch, cfg.enc_frames, KVH, hd),
+                                    ("batch", None, "kv", None), "zeros")
+        out["x_v_cache"] = ParamDef((batch, cfg.enc_frames, KVH, hd),
+                                    ("batch", None, "kv", None), "zeros")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attn_apply(p, x, cfg: ModelConfig, spec: LayerSpec, mode: str,
+                pos, cache: Optional[dict], prefix: str = "",
+                cross_src: Optional[jax.Array] = None, cache_len: int = 0):
+    """Returns (out, new_cache_entries).
+
+    ``cache_len`` is the serve-time cache budget (static); local-window layers
+    allocate ``min(window, cache_len)`` ring slots.
+    """
+    B, S, d = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xn = rms_norm(x, p[prefix + "ln"], cfg.norm_eps)
+    q = xn @ p[prefix + "wq"]
+    if prefix + "bq" in p:
+        q = q + p[prefix + "bq"]
+    q = q.reshape(B, S, H, hd)
+    new_cache = {}
+    theta = spec.rope_theta or cfg.rope_theta
+
+    inner_unroll = 1_000_000 if cfg.cost_probe else 1
+    if cross_src is not None or (prefix and mode == "decode"):
+        # cross-attention: K/V from encoder output (cached after prefill)
+        if mode == "decode":
+            k = cache[prefix + "k_cache"]
+            v = cache[prefix + "v_cache"]
+            new_cache[prefix + "k_cache"] = k   # pass-through (static enc KV)
+            new_cache[prefix + "v_cache"] = v
+        else:
+            k = (cross_src @ p[prefix + "wk"]).reshape(B, -1, KVH, hd)
+            v = (cross_src @ p[prefix + "wv"]).reshape(B, -1, KVH, hd)
+            if mode == "prefill":
+                new_cache[prefix + "k_cache"] = k
+                new_cache[prefix + "v_cache"] = v
+        out = attn_lib.chunked_attention(q, k, v, causal=False,
+                                         unroll=inner_unroll)
+        y = out.reshape(B, S, H * hd) @ p[prefix + "wo"]
+        return y, new_cache
+
+    k = (xn @ p[prefix + "wk"])
+    v = (xn @ p[prefix + "wv"])
+    if prefix + "bk" in p:
+        k = k + p[prefix + "bk"]
+        v = v + p[prefix + "bv"]
+    k = constrain(k.reshape(B, S, KVH, hd), "act_batch", "act_seq", "act_kv",
+                  None)
+    v = constrain(v.reshape(B, S, KVH, hd), "act_batch", "act_seq", "act_kv",
+                  None)
+    if spec.causal:                                   # rope on causal LM layers
+        positions = pos + jnp.arange(S)
+        cos, sin = rope(positions[None], hd, theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if cfg.attn_broadcast_kv and mode != "decode" and KVH < H:
+        k = jnp.repeat(k, H // KVH, axis=2)
+        v = jnp.repeat(v, H // KVH, axis=2)
+
+    if mode == "decode":
+        Sc = cache[prefix + "k_cache"].shape[1]
+        slot = pos % Sc
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache[prefix + "k_cache"], k.astype(cache[prefix + "k_cache"].dtype),
+            slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache[prefix + "v_cache"], v.astype(cache[prefix + "v_cache"].dtype),
+            slot, axis=1)
+        new_cache[prefix + "k_cache"] = kc
+        new_cache[prefix + "v_cache"] = vc
+        if cfg.meta_tokens and prefix + "k_meta" in cache:
+            new_cache[prefix + "k_meta"] = cache[prefix + "k_meta"]
+            new_cache[prefix + "v_meta"] = cache[prefix + "v_meta"]
+            out = _merge_meta(q, cache[prefix + "k_meta"],
+                              cache[prefix + "v_meta"], kc, vc, pos, Sc)
+        elif spec.window and Sc <= spec.window:       # ring buffer: bounded
+            out = _ring_decode(q, kc, vc, jnp.minimum(pos + 1, Sc))
+        else:
+            out = attn_lib.decode_attention(q, kc, vc, kv_len=pos,
+                                            window=spec.window)
+    else:
+        if mode == "prefill":
+            Sc = min(spec.window, cache_len) if spec.window else cache_len
+            new_cache[prefix + "k_cache"] = _ring_layout(k, S, Sc)
+            new_cache[prefix + "v_cache"] = _ring_layout(v, S, Sc)
+            if cfg.meta_tokens:
+                new_cache[prefix + "k_meta"] = k[:, :cfg.meta_tokens]
+                new_cache[prefix + "v_meta"] = v[:, :cfg.meta_tokens]
+        if spec.window and not cfg.meta_tokens:
+            out = attn_lib.local_attention(q, k, v, window=spec.window,
+                                           unroll=inner_unroll)
+        else:
+            out = attn_lib.chunked_attention(
+                q, k, v, causal=spec.causal, window=spec.window,
+                prefix_len=cfg.meta_tokens, unroll=inner_unroll)
+    y = constrain(out.reshape(B, S, H * hd) @ p[prefix + "wo"],
+                  "act_batch", "act_seq", "act_embed")
+    return y, new_cache
+
+
+def _ring_layout(k: jax.Array, S: int, Sc: int) -> jax.Array:
+    """Place prefill K/V of length S into an Sc-slot cache so that position p
+    sits at slot ``p % Sc`` (ring invariant the decode step maintains)."""
+    if S >= Sc:
+        return jnp.roll(k[:, -Sc:], shift=S % Sc, axis=1)
+    pad = [(0, 0)] * k.ndim
+    pad[1] = (0, Sc - S)
+    return jnp.pad(k, pad)
+
+
+def _ring_decode(q, kc, vc, kv_len):
+    """Attention over a fully-valid ring buffer (first kv_len slots valid)."""
+    B, _, H, D = q.shape
+    Sc, KVH = kc.shape[1], kc.shape[2]
+    G = H // KVH
+    qq = q.reshape(B, KVH, G, D) * (D ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qq.astype(jnp.float32),
+                   kc.astype(jnp.float32))
+    valid = jnp.arange(Sc) < kv_len
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    pmax = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", pmax, vc.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _merge_meta(q, k_meta, v_meta, kc, vc, pos, Sc):
+    """Recompute decode attention over [meta ∪ ring] exactly (meta tokens are
+    always attendable in Hymba).  Concatenate and mask."""
+    B, _, H, D = q.shape
+    KVH = kc.shape[2]
+    G = H // KVH
+    kk = jnp.concatenate([k_meta, kc], axis=1)
+    vv = jnp.concatenate([v_meta, vc], axis=1)
+    M = k_meta.shape[1]
+    qq = q.reshape(B, KVH, G, D) * (D ** -0.5)
+    s = jnp.einsum("bhgd,bshd->bhgs", qq.astype(jnp.float32),
+                   kk.astype(jnp.float32))
+    ring_valid = jnp.arange(Sc) < jnp.minimum(pos + 1, Sc)
+    valid = jnp.concatenate([jnp.ones(M, bool), ring_valid])
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, vv.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def _ssm_apply(p, x, cfg: ModelConfig, mode: str, cache: Optional[dict]):
+    B, S, d = x.shape
+    d_in = cfg.ssm_expand * d
+    nh = d_in // cfg.ssm_headdim
+    N = cfg.ssm_state
+    xn = rms_norm(x, p["sln"], cfg.norm_eps)
+    zx = xn @ p["w_zx"]
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bc = xn @ p["w_bc"]
+    dt = jax.nn.softplus((xn @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xbc = jnp.concatenate([xin, bc], axis=-1)
+    new_cache = {}
+    if mode == "decode":
+        conv_state, yt = ssm_lib.conv1d_step(cache["conv_state"], xbc[:, 0],
+                                             p["conv_w"], p["conv_b"])
+        new_cache["conv_state"] = conv_state
+        xs, Bm, Cm = yt[..., :d_in], yt[..., d_in:d_in + N], yt[..., d_in + N:]
+        h, y = ssm_lib.ssd_step(cache["ssm_h"], xs.reshape(B, nh, cfg.ssm_headdim),
+                                dt[:, 0], A, Bm, Cm)
+        new_cache["ssm_h"] = h
+        y = y.reshape(B, 1, d_in)
+    else:
+        yconv = ssm_lib.causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+        xs = yconv[..., :d_in].reshape(B, S, nh, cfg.ssm_headdim)
+        Bm = yconv[..., d_in:d_in + N]
+        Cm = yconv[..., d_in + N:]
+        y, h = ssm_lib.ssd_chunked(xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+                                   unroll=1_000_000 if cfg.cost_probe else 1)
+        if mode == "prefill":
+            new_cache["ssm_h"] = h
+            new_cache["conv_state"] = xbc[:, -(cfg.conv_width - 1):]
+        y = y.reshape(B, S, d_in)
+    y = y + (xs.reshape(B, -1, nh, cfg.ssm_headdim)
+             * p["Dskip"].astype(x.dtype)[None, None, :, None]).reshape(y.shape)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_so"], new_cache
+
+
+def _ffn_apply(p, x, cfg: ModelConfig, spec: LayerSpec, mode: str = "train"):
+    xn = rms_norm(x, p["fln"], cfg.norm_eps)
+    if spec.moe:
+        B, S, d = xn.shape
+        flat = xn.reshape(B * S, d)
+        y = moe_ffn(flat, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+                    topk=cfg.topk, capacity_factor=cfg.capacity_factor,
+                    dropless=(mode == "decode"),
+                    groups=1 if mode == "decode" else cfg.moe_groups)
+        if "ws_gate" in p:
+            shared = swiglu_act(flat @ p["ws_gate"], flat @ p["ws_up"]) @ p["ws_down"]
+            sig = jax.nn.sigmoid((flat @ p["ws_sig"]).astype(jnp.float32))
+            y = y + (shared.astype(jnp.float32) * sig).astype(y.dtype)
+        return y.reshape(B, S, d)
+    if cfg.act == "swiglu":
+        h = swiglu_act(xn @ p["w_gate"], xn @ p["w_up"])
+    else:
+        h = gelu(xn @ p["w_up"])
+    h = constrain(h, "act_batch", "act_seq", "act_ff")
+    return constrain(h @ p["w_down"], "act_batch", "act_seq", "act_embed")
+
+
+def layer_apply(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+                spec: LayerSpec, mode: str = "train", pos=0,
+                cache: Optional[dict] = None,
+                enc_out: Optional[jax.Array] = None, cache_len: int = 0):
+    """One full layer.  Returns (x_out, new_cache_dict)."""
+    new_cache: Dict[str, Any] = {}
+    if spec.mixer == "attn":
+        y, nc = _attn_apply(p, x, cfg, spec, mode, pos, cache,
+                            cache_len=cache_len)
+        new_cache.update(nc)
+        x = x + y
+    elif spec.mixer == "ssm":
+        y, nc = _ssm_apply(p, x, cfg, mode, cache)
+        new_cache.update(nc)
+        x = x + y
+    elif spec.mixer == "hybrid":
+        ya, nca = _attn_apply(p, x, cfg, spec, mode, pos, cache,
+                              cache_len=cache_len)
+        ys, ncs = _ssm_apply(p, x, cfg, mode, cache)
+        new_cache.update(nca)
+        new_cache.update(ncs)
+        x = x + 0.5 * (ya + ys)
+    if spec.cross:
+        y, nc = _attn_apply(p, x, cfg, dataclasses.replace(spec, causal=False),
+                            mode, pos, cache, prefix="x_", cross_src=enc_out,
+                            cache_len=cache_len)
+        new_cache.update(nc)
+        x = x + y
+    if spec.mixer != "ssm":
+        x = x + _ffn_apply(p, x, cfg, spec, mode=mode)
+    return x, new_cache

@@ -1,0 +1,94 @@
+"""Encoder-decoder LM (Whisper-style).  The audio conv frontend is a stub per
+the assignment: ``input_specs()`` supplies precomputed frame embeddings
+``[B, enc_frames, d_model]``; a learned linear projection stands in for the
+conv stack.  Encoder uses sinusoidal positions + bidirectional attention;
+decoder is a causal LM with cross-attention whose K/V are cached at prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import LayerSpec, cache_defs, layer_apply, layer_defs
+from .config import ModelConfig
+from .layers import ParamDef, abstract_tree, init_tree, rms_norm, softmax_xent
+from .lm import LM, _REMAT_POLICIES, _stack_defs
+
+__all__ = ["EncDecLM", "sinusoidal_positions"]
+
+
+def sinusoidal_positions(S: int, d: int) -> np.ndarray:
+    pos = np.arange(S)[:, None]
+    dim = np.arange(d // 2)[None]
+    ang = pos / (10000.0 ** (dim / (d // 2)))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1).astype(np.float32)
+
+
+class EncDecLM(LM):
+    """Whisper-shaped model; reuses the LM scan machinery for the decoder."""
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        # decoder layers: causal self-attn + cross-attn + FFN
+        self.pattern = (LayerSpec(mixer="attn", cross=True),)
+        self.period = 1
+        self.n_periods = cfg.n_layers
+        self.tail = ()
+        self.enc_spec = LayerSpec(mixer="attn", causal=False)
+
+    def param_defs(self) -> Dict[str, Any]:
+        defs = super().param_defs()
+        cfg = self.cfg
+        d = cfg.d_model
+        defs["blocks"] = _stack_defs(layer_defs(cfg, self.pattern[0]),
+                                     self.n_periods)
+        defs["frontend"] = ParamDef((d, d), ("embed", "embed2"))
+        defs["enc_blocks"] = _stack_defs(layer_defs(cfg, self.enc_spec),
+                                         cfg.enc_layers)
+        defs["enc_ln"] = ParamDef((d,), ("embed",), "zeros")
+        return defs
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = frames @ params["frontend"]
+        pos = jnp.asarray(sinusoidal_positions(frames.shape[1], cfg.d_model))
+        x = x + pos[None].astype(x.dtype)
+
+        def body(xc, blk):
+            xc, _ = layer_apply(blk, xc, cfg, self.enc_spec, mode="train")
+            return xc, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, policy=_REMAT_POLICIES.get(cfg.remat),
+                                  prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                            unroll=min(max(cfg.cost_probe, 1),
+                                       cfg.enc_layers))
+        return rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+    # -- public entry points --------------------------------------------------
+    def forward(self, params, tokens, img_embeds=None, frames=None):
+        assert frames is not None, "encoder-decoder needs frames"
+        enc_out = self.encode(params, frames)
+        x, prefix = self._embed_tokens(params, tokens)
+        x, _ = self._run_blocks(params, x, "train", 0, enc_out=enc_out)
+        return self._logits(params, x), prefix
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, prefix = self.forward(params, batch["tokens"],
+                                      frames=batch["frames"])
+        return softmax_xent(logits, batch["labels"], self.cfg.vocab)
+
+    def prefill(self, params, tokens, cache_len: int, img_embeds=None,
+                frames=None):
+        enc_out = self.encode(params, frames)
+        x, _ = self._embed_tokens(params, tokens)
+        x, cache = self._run_blocks(params, x, "prefill", 0,
+                                    cache_len=cache_len, enc_out=enc_out)
+        logits = self._logits(params, x[:, -1:])
+        return cache, logits[:, 0], tokens.shape[1]

@@ -1,0 +1,110 @@
+"""Shared neural-net layers and the parameter-definition machinery.
+
+Parameters are declared once as ``ParamDef`` pytrees carrying (shape, logical
+axes, init); the same tree produces concrete arrays (``init_tree``), shape
+stand-ins for the dry-run (``abstract_tree``), and ``PartitionSpec`` trees
+(``spec_tree`` via the sharding rules in :mod:`repro.distributed.sharding`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDef", "init_tree", "abstract_tree", "map_defs", "rms_norm",
+           "rope", "apply_rope", "gelu", "swiglu_act", "softmax_xent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis name per dim
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 1.0                    # stddev multiplier (normal)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def map_defs(fn: Callable[[ParamDef], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_def)
+
+
+def init_tree(tree, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize a ParamDef tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std
+                        ).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_tree(tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins (for .lower() without allocation)."""
+    return map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * (1.0 + gamma.astype(dt))
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """Rotary embedding tables for integer positions [..., S] -> cos,sin [..., S, hd/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; cos/sin: [B, S, hd/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype) if cos.ndim == 3 else cos
+    s = sin[..., None, :].astype(x.dtype) if sin.ndim == 3 else sin
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu_act(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean next-token cross-entropy; labels >= vocab (padding ids) masked out.
+
+    logits [B,S,V] (V possibly padded beyond vocab), labels [B,S] int32.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    mask = (labels >= 0) & (labels < vocab)
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,295 @@
+"""Unified decoder-only LM covering the dense / MoE / SSM / hybrid / VLM
+families.  Layers are stacked and scanned (``lax.scan``) in *periods*: most
+archs scan ``n_layers`` identical layers (period 1); gemma3 scans groups of
+(5 local + 1 global) so the 5:1 attention pattern stays static inside the
+scan body — no ``lax.cond``, exact FLOP accounting, compact HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import LayerSpec, cache_defs, layer_apply, layer_defs
+from ..distributed.sharding import constrain
+from .config import ModelConfig
+from .layers import (ParamDef, abstract_tree, init_tree, map_defs, rms_norm,
+                     softmax_xent)
+
+__all__ = ["LM", "plan_layers"]
+
+_REMAT_POLICIES = {
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims_saveable":
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything_saveable": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def plan_layers(cfg: ModelConfig) -> Tuple[Tuple[LayerSpec, ...], int,
+                                           Tuple[LayerSpec, ...]]:
+    """(pattern within a period, n_periods, tail specs)."""
+    if cfg.family == "ssm":
+        base = LayerSpec(mixer="ssm")
+    elif cfg.family == "hybrid":
+        base = LayerSpec(mixer="hybrid", window=cfg.window, moe=False)
+    elif cfg.family == "moe":
+        base = LayerSpec(mixer="attn", moe=True)
+    else:                      # dense | vlm
+        base = LayerSpec(mixer="attn", window=cfg.window)
+
+    if cfg.global_every:       # gemma3-style local:global interleave
+        local = LayerSpec(mixer="attn", window=cfg.window, rope_theta=1e4)
+        glob = LayerSpec(mixer="attn", window=None, rope_theta=cfg.rope_theta)
+        pattern = tuple([local] * (cfg.global_every - 1) + [glob])
+        n_periods = cfg.n_layers // len(pattern)
+        tail = tuple([local] * (cfg.n_layers - n_periods * len(pattern)))
+        return pattern, n_periods, tail
+    return (base,), cfg.n_layers, ()
+
+
+def _stack_defs(defs: Dict[str, ParamDef], *lead: int) -> Dict[str, ParamDef]:
+    lead_axes = tuple(["layers"] + ["layers_inner"] * (len(lead) - 1))
+    return {k: ParamDef(tuple(lead) + d.shape, lead_axes + d.axes, d.init,
+                        d.scale)
+            for k, d in defs.items()}
+
+
+class LM:
+    """Functional model: all methods are pure and jit/pjit-friendly."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.pattern, self.n_periods, self.tail = plan_layers(cfg)
+        self.period = len(self.pattern)
+
+    # -- parameters ---------------------------------------------------------
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d, V = cfg.d_model, cfg.padded_vocab
+        defs: Dict[str, Any] = {
+            "embed": ParamDef((V, d), ("vocab", "embed"),
+                              scale=float(np.sqrt(V / d))),
+            "final_ln": ParamDef((d,), ("embed",), "zeros"),
+        }
+        layer = layer_defs(cfg, self.pattern[0])
+        for s in self.pattern[1:]:
+            assert set(layer_defs(cfg, s)) == set(layer), "period must be homogeneous"
+        defs["blocks"] = _stack_defs(layer, self.n_periods, self.period) \
+            if self.period > 1 else _stack_defs(layer, self.n_periods)
+        if self.tail:
+            defs["tail"] = _stack_defs(layer_defs(cfg, self.tail[0]),
+                                       len(self.tail))
+        if not cfg.tie_embeddings:
+            defs["unembed"] = ParamDef((d, V), ("embed", "vocab"))
+        if cfg.meta_tokens:
+            defs["meta"] = ParamDef((cfg.meta_tokens, d), (None, "embed"),
+                                    scale=float(np.sqrt(d)))
+        return defs
+
+    def init(self, key: jax.Array, dtype=jnp.bfloat16):
+        return init_tree(self.param_defs(), key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return abstract_tree(self.param_defs(), dtype)
+
+    # -- cache --------------------------------------------------------------
+    def cache_defs(self, batch: int, cache_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        per = {}
+        for i, s in enumerate(self.pattern):
+            cd = cache_defs(cfg, s, batch, cache_len)
+            for k, v in cd.items():
+                per.setdefault(k, []).append((i, v))
+        # all pattern positions must produce the same cache keys & shapes per
+        # kind; stack [n_periods, period, ...] grouped by (key, shape)
+        out: Dict[str, Any] = {}
+        blocks: Dict[str, ParamDef] = {}
+        for k, items in per.items():
+            shapes = {v.shape for _, v in items}
+            assert len(shapes) == 1 or self.period == len(self.pattern), k
+        # group identical-shape keys; for gemma3 local/global have different
+        # cache lengths → separate entries per pattern position group
+        groups: Dict[Tuple[str, Tuple[int, ...]], List[int]] = {}
+        for k, items in per.items():
+            for i, v in items:
+                groups.setdefault((k, v.shape), []).append(i)
+        for (k, shape), idxs in groups.items():
+            proto = dict(per[k])[idxs[0]]
+            name = f"{k}@{'-'.join(map(str, idxs))}"
+            blocks[name] = ParamDef((self.n_periods, len(idxs)) + proto.shape,
+                                    ("layers", "layers_inner") + proto.axes,
+                                    "zeros")
+        out["blocks"] = blocks
+        if self.tail:
+            tl = {}
+            for k, v in cache_defs(cfg, self.tail[0], batch, cache_len).items():
+                tl[k] = ParamDef((len(self.tail),) + v.shape,
+                                 ("layers",) + v.axes, "zeros")
+            out["tail"] = tl
+        return out
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                   abstract: bool = False):
+        """Zeroed (or ShapeDtypeStruct) cache.  SSD states are f32 (they
+        accumulate); KV/conv caches use the activation dtype."""
+        defs = self.cache_defs(batch, cache_len)
+
+        def mk(path, d):
+            name = str(path[-1].key) if path else ""
+            dt = jnp.float32 if name.startswith("ssm_h") else dtype
+            if abstract:
+                return jax.ShapeDtypeStruct(d.shape, dt)
+            return jnp.zeros(d.shape, dt)
+
+        return jax.tree_util.tree_map_with_path(
+            mk, defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+    # -- cache <-> per-layer views -----------------------------------------
+    @staticmethod
+    def _cache_slice(cblk: Dict[str, jax.Array], i: int) -> Dict[str, jax.Array]:
+        """Per-pattern-position cache view from grouped '@' keys."""
+        out = {}
+        for name, arr in cblk.items():
+            k, idxs = name.split("@")
+            idxs = [int(j) for j in idxs.split("-")]
+            if i in idxs:
+                out[k] = arr[idxs.index(i)]
+        return out
+
+    @staticmethod
+    def _cache_unslice(names, per_pos: List[Dict[str, jax.Array]]):
+        """Inverse of _cache_slice: re-stack per-position dicts."""
+        out = {}
+        for name in names:
+            k, idxs = name.split("@")
+            idxs = [int(j) for j in idxs.split("-")]
+            out[name] = jnp.stack([per_pos[i][k] for i in idxs], axis=0)
+        return out
+
+    # -- forward ------------------------------------------------------------
+    def _prefix_embeds(self, params, batch: int) -> Optional[jax.Array]:
+        if self.cfg.meta_tokens:
+            return jnp.broadcast_to(params["meta"][None],
+                                    (batch,) + params["meta"].shape)
+        return None
+
+    def _embed_tokens(self, params, tokens, img_embeds=None):
+        x = params["embed"][tokens]
+        pre = []
+        if img_embeds is not None:
+            pre.append(img_embeds.astype(x.dtype))
+        mt = self._prefix_embeds(params, tokens.shape[0])
+        if mt is not None:
+            pre.append(mt)
+        prefix_len = sum(p.shape[1] for p in pre)
+        if pre:
+            x = jnp.concatenate(pre + [x], axis=1)
+        return constrain(x, "act_batch", "act_seq", "act_embed"), prefix_len
+
+    def _run_blocks(self, params, x, mode: str, pos, cache=None,
+                    cache_len: int = 0, enc_out=None):
+        cfg = self.cfg
+        collect = mode == "prefill"
+        cblk = cache["blocks"] if (cache is not None and mode == "decode") else None
+
+        def body(xc, inp):
+            blk = inp[0] if isinstance(inp, tuple) else inp
+            cin = inp[1] if isinstance(inp, tuple) else None
+            per_pos = []
+            for i, spec in enumerate(self.pattern):
+                p_i = jax.tree_util.tree_map(lambda a: a[i], blk) \
+                    if self.period > 1 else blk
+                c_i = self._cache_slice(cin, i) if cin is not None else None
+                xc, nc = layer_apply(p_i, xc, cfg, spec, mode=mode, pos=pos,
+                                     cache=c_i, enc_out=enc_out,
+                                     cache_len=cache_len)
+                xc = constrain(xc, "act_batch", "act_seq", "act_embed")
+                per_pos.append(nc)
+            ys = None
+            if collect or mode == "decode":
+                names = cin.keys() if cin is not None else None
+                if names is None:
+                    # build grouped names from produced caches
+                    names = self._group_names(per_pos)
+                ys = self._cache_unslice(list(names), per_pos)
+            return xc, ys
+
+        if mode == "train" and cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=_REMAT_POLICIES.get(cfg.remat), prevent_cse=False)
+
+        xs = params["blocks"] if cblk is None else (params["blocks"], cblk)
+        layer_unroll = min(max(cfg.cost_probe, 1), self.n_periods)
+        x, new_cblk = jax.lax.scan(body, x, xs, unroll=layer_unroll)
+
+        new_tail = {}
+        if self.tail:
+            tcache = cache["tail"] if (cache is not None and mode == "decode") \
+                else None
+            per_pos = []
+            for t, spec in enumerate(self.tail):
+                p_t = jax.tree_util.tree_map(lambda a: a[t], params["tail"])
+                c_t = jax.tree_util.tree_map(lambda a: a[t], tcache) \
+                    if tcache is not None else None
+                x, nc = layer_apply(p_t, x, cfg, spec, mode=mode, pos=pos,
+                                    cache=c_t, enc_out=enc_out,
+                                    cache_len=cache_len)
+                per_pos.append(nc)
+            if per_pos and per_pos[0]:
+                new_tail = {k: jnp.stack([pp[k] for pp in per_pos])
+                            for k in per_pos[0]}
+        new_cache = None
+        if collect or mode == "decode":
+            new_cache = {"blocks": new_cblk}
+            if self.tail:
+                new_cache["tail"] = new_tail
+        return x, new_cache
+
+    def _group_names(self, per_pos: List[Dict[str, jax.Array]]) -> List[str]:
+        groups: Dict[Tuple[str, Tuple[int, ...]], List[int]] = {}
+        for i, d in enumerate(per_pos):
+            for k, v in d.items():
+                groups.setdefault((k, tuple(v.shape)), []).append(i)
+        return [f"{k}@{'-'.join(map(str, idxs))}" for (k, _), idxs in groups.items()]
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+        w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        return constrain(x @ w, "act_batch", "act_seq", "act_vocab")
+
+    # -- public entry points -------------------------------------------------
+    def forward(self, params, tokens, img_embeds=None):
+        x, prefix = self._embed_tokens(params, tokens, img_embeds)
+        x, _ = self._run_blocks(params, x, "train", 0)
+        return self._logits(params, x), prefix
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, prefix = self.forward(params, batch["tokens"],
+                                      batch.get("img_embeds"))
+        if prefix:
+            logits = logits[:, prefix:]
+        return softmax_xent(logits, batch["labels"], self.cfg.vocab)
+
+    def prefill(self, params, tokens, cache_len: int, img_embeds=None):
+        """Returns (cache, last-token logits, next_pos)."""
+        x, prefix = self._embed_tokens(params, tokens, img_embeds)
+        S_total = x.shape[1]
+        x, cache = self._run_blocks(params, x, "prefill", 0,
+                                    cache_len=cache_len)
+        logits = self._logits(params, x[:, -1:])
+        return cache, logits[:, 0], S_total
+
+    def decode_step(self, params, cache, token, pos, cache_len: int):
+        """token [B,1] int32; pos: scalar (tokens so far incl. prefix).
+        Returns (logits [B,V], new_cache)."""
+        x = params["embed"][token]
+        x, new_cache = self._run_blocks(params, x, "decode", pos, cache=cache,
+                                        cache_len=cache_len)
+        return self._logits(params, x)[:, 0], new_cache

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN with static-capacity gather/scatter dispatch.
+
+Switch-Transformer-style routing adapted for TPU/pjit:
+
+1. router logits → top-k experts + gate probs per token,
+2. tokens sorted by expert id; rank-within-expert computed vectorially,
+3. assignments over ``capacity`` are dropped (capacity_factor configurable),
+4. an index table gathers tokens into ``[G, E, C, d]``,
+5. batched expert matmuls (``E`` shardable along the ``model``/EP axis),
+6. weighted scatter-add back to token order.
+
+**Grouped dispatch** (``groups=G > 1``) is the scale-out path: tokens are
+split into G groups aligned with the data-parallel shards, and capacity,
+sorting, and gather/scatter all happen *within* a group.  Dispatch then never
+crosses the data axis — measured on qwen2-moe train_4k this removed ~97% of
+the per-device collective traffic (EXPERIMENTS.md §Perf iteration 2).
+
+All shapes static → compiles under pjit; FLOPs counted by ``cost_analysis``
+are the actual routed matmuls, so the roofline's MODEL_FLOPS/HLO_FLOPs ratio
+directly exposes capacity waste.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+
+__all__ = ["moe_ffn", "route_topk"]
+
+
+def route_topk(router_logits: jax.Array, topk: int
+               ) -> Tuple[jax.Array, jax.Array]:
+    """[..., E] logits → ([..., k] expert ids, [..., k] gates)."""
+    gates, idx = jax.lax.top_k(router_logits, topk)
+    gates = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    return idx.astype(jnp.int32), gates
+
+
+def moe_ffn(x: jax.Array, w_router: jax.Array, w_gate: jax.Array,
+            w_up: jax.Array, w_down: jax.Array, *, topk: int,
+            capacity_factor: float = 1.25, dropless: bool = False,
+            groups: int = 1) -> jax.Array:
+    """x [T, d]; router [d, E]; w_gate/w_up [E, d, f]; w_down [E, f, d].
+
+    ``dropless=True`` sets capacity C=Tg (a token hits an expert at most
+    once, so nothing can overflow) — required at decode time where T is tiny.
+    ``groups`` splits tokens into independently-dispatched groups (align with
+    the data-parallel shard count so dispatch never crosses devices).
+    """
+    T, d = x.shape
+    E = w_gate.shape[0]
+    G = groups if T % groups == 0 else 1
+    Tg = T // G
+    if dropless:
+        C = Tg
+    else:
+        C = max(int(Tg * topk / E * capacity_factor), 1)
+        C = -(-C // 8) * 8                       # lane-align capacity
+        C = min(C, Tg)
+
+    xg = constrain(x.reshape(G, Tg, d), "act_batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        w_router.astype(jnp.float32))
+    idx, gates = route_topk(logits, topk)                 # [G,Tg,k]
+
+    K = Tg * topk
+    flat_e = idx.reshape(G, K)
+    flat_g = gates.reshape(G, K)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), topk)[None], (G, K))
+
+    order = jnp.argsort(flat_e, axis=1)                   # stable per group
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    # rank within (group, expert) via global bincount with group offsets
+    ge = (jnp.arange(G, dtype=jnp.int32)[:, None] * E + e_sorted).reshape(-1)
+    counts = jnp.zeros(G * E, jnp.int32).at[ge].add(1).reshape(G, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.int32),
+         jnp.cumsum(counts, axis=1)[:, :-1].astype(jnp.int32)], axis=1)
+    rank = (jnp.arange(K, dtype=jnp.int32)[None]
+            - jnp.take_along_axis(starts, e_sorted, axis=1))
+    keep = rank < C
+
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)    # overflow slot
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=1)
+    gate_sorted = jnp.take_along_axis(flat_g, order, axis=1)
+    gi = jnp.arange(G, dtype=jnp.int32)[:, None]
+    tok_tab = jnp.full((G, E * C + 1), Tg, jnp.int32).at[gi, slot].set(tok_sorted)
+    gate_tab = jnp.zeros((G, E * C + 1), jnp.float32).at[gi, slot].set(gate_sorted)
+    tok_tab, gate_tab = tok_tab[:, :-1], gate_tab[:, :-1]
+
+    xp = constrain(jnp.concatenate([xg, jnp.zeros((G, 1, d), x.dtype)],
+                                   axis=1), "act_batch", None, None)
+    # vmapped gather: batched-index take_along_axis makes GSPMD all-gather
+    # the [G,Tg,d] tokens; the vmap form keeps the gather group-local
+    xe = jax.vmap(lambda xpr, tok: xpr[tok])(xp, tok_tab)     # [G,E*C,d]
+    xe = constrain(xe.reshape(G, E, C, d), "act_batch", "act_exp", None, None)
+
+    h = constrain(jnp.einsum("gecd,edf->gecf", xe, w_gate),
+                  "act_batch", "act_exp", None, "act_ff")
+    u = constrain(jnp.einsum("gecd,edf->gecf", xe, w_up),
+                  "act_batch", "act_exp", None, "act_ff")
+    y = constrain(jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, w_down),
+                  "act_batch", "act_exp", None, None)
+
+    # combine in the activation dtype: the gate-weighted sum has ≤ topk
+    # terms, and the cross-model all-reduce of the combined tokens is the
+    # biggest remaining collective — bf16 halves it (f32 in f32 tests).
+    cdt = x.dtype
+    yw = constrain(
+        (y.reshape(G, E * C, d).astype(jnp.float32)
+         * gate_tab[..., None]).astype(cdt),
+        "act_batch", None, None)
+    # combine via a *vmapped* scatter-add: explicit [gi, tok] batch indices
+    # defeat GSPMD's scatter partitioner (it replicates the [G,Tg,d] target —
+    # 3×17 GB of per-layer collectives on qwen3-moe, §Perf iterations 3-4);
+    # the vmap form marks G as a scatter batch dim and the combine stays
+    # local up to one model-axis all-reduce of the E-sharded contributions.
+    zeros = constrain(jnp.zeros((G, Tg + 1, d), cdt),
+                      "act_batch", None, None)
+    out = jax.vmap(lambda z, t, yv: z.at[t].add(yv))(zeros, tok_tab, yw)
+    out = constrain(out[:, :Tg], "act_batch", None, None)
+    return out.reshape(T, d).astype(x.dtype)

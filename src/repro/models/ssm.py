@@ -1,0 +1,129 @@
+"""Mamba-2 SSD (state-space duality) core: chunked parallel form for
+training/prefill, O(1)-state recurrent form for decode.
+
+Math (per head h, head dim P, state N):
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t        (state update)
+    y_t = C_t · h_t + D · x_t                             (readout)
+
+The chunked algorithm splits the sequence into chunks of ``Q`` tokens; within
+a chunk the quadratic "attention-like" form runs on the MXU, states are passed
+between chunks by a ``lax.scan``.  This is the TPU-native adaptation of the
+paper's SSD blocked algorithm (arXiv:2405.21060).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+
+__all__ = ["ssd_chunked", "ssd_reference", "ssd_step", "causal_conv1d",
+           "conv1d_step"]
+
+
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """Sequential oracle.  x [B,S,H,P]; dt [B,S,H]; A [H]; Bm/Cm [B,S,N]."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((B, H, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # [B,H,P],[B,H],[B,N],[B,N]
+        decay = jnp.exp(A[None] * dtt)              # [B,H]
+        h = h * decay[..., None, None] + (
+            dtt[..., None, None] * xt[..., None] * bt[:, None, None, :])
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h  # y [B,S,H,P]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 256, h0=None,
+                unroll: int = 1):
+    """Chunked SSD.  Same signature/returns as :func:`ssd_reference`."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    xc = constrain(jnp.moveaxis(x.reshape(B, nc, Q, H, P), 1, 0).astype(f32),
+                   None, "act_batch", None, "act_ssm_heads", None)
+    dtc = constrain(jnp.moveaxis(dt.reshape(B, nc, Q, H), 1, 0).astype(f32),
+                    None, "act_batch", None, "act_ssm_heads")
+    bc = constrain(jnp.moveaxis(Bm.reshape(B, nc, Q, N), 1, 0).astype(f32),
+                   None, "act_batch", None, None)
+    cc = constrain(jnp.moveaxis(Cm.reshape(B, nc, Q, N), 1, 0).astype(f32),
+                   None, "act_batch", None, None)
+    h = jnp.zeros((B, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h = constrain(h, "act_batch", "act_ssm_heads", None, None)
+
+    def body(h, inp):
+        xq, dtq, bq, cq = inp           # [B,Q,H,P],[B,Q,H],[B,Q,N],[B,Q,N]
+        a = A[None, None] * dtq          # [B,Q,H] log-decay per step
+        cum = jnp.cumsum(a, axis=1)      # inclusive cumsum
+        # --- intra-chunk (quadratic, MXU-friendly) -----------------------
+        g = jnp.einsum("bsn,btn->bst", cq, bq)                  # [B,Q,Q]
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]          # [B,s,t,H]
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        L = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)
+        m = g[..., None] * L * dtq[:, None, :, :]                # [B,s,t,H]
+        y = jnp.einsum("bsth,bthp->bshp", m, xq)                 # [B,Q,H,P]
+        # --- inter-chunk: contribution of the carried state --------------
+        y += jnp.einsum("bsn,bhpn,bsh->bshp", cq, h, jnp.exp(cum))
+        # --- state passing -------------------------------------------------
+        tot = cum[:, -1:, :]                                     # [B,1,H]
+        w = dtq * jnp.exp(tot - cum)                             # [B,Q,H]
+        h_in = jnp.einsum("btn,bthp,bth->bhpn", bq, xq, w)
+        h = h * jnp.exp(tot[:, 0])[:, :, None, None] + h_in
+        h = constrain(h, "act_batch", "act_ssm_heads", None, None)
+        y = constrain(y, "act_batch", None, "act_ssm_heads", None)
+        return h, y
+
+    h, yc = jax.lax.scan(body, h, (xc, dtc, bc, cc),
+                         unroll=min(unroll, nc) if unroll > 1 else 1)
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, nc * Q, H, P)
+    return y[:, :S].astype(x.dtype), h
+
+
+def ssd_step(h, xt, dtt, A, bt, ct):
+    """One decode step.  h [B,H,P,N]; xt [B,H,P]; dtt [B,H]; bt/ct [B,N]."""
+    decay = jnp.exp(A[None] * dtt)
+    h = h * decay[..., None, None] + (
+        dtt[..., None, None] * xt.astype(jnp.float32)[..., None]
+        * bt.astype(jnp.float32)[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+    return h, y.astype(xt.dtype)
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x [B,S,Cch]; w [W,Cch]; b [Cch]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):   # W is 4 — tiny static unroll
+        y = y + xp[:, i:i + S].astype(jnp.float32) * w[i][None, None]
+    return jax.nn.silu(y + b[None, None]).astype(x.dtype)
+
+
+def conv1d_step(conv_state, xt, w, b):
+    """Decode-time conv.  conv_state [B,W-1,C]; xt [B,C] → (new_state, yt)."""
+    W = w.shape[0]
+    window = jnp.concatenate([conv_state, xt[:, None]], axis=1)  # [B,W,C]
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b[None]
+    return window[:, 1:], jax.nn.silu(y).astype(xt.dtype)

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup", "cosine_schedule"]
+
+
+def linear_warmup(step, peak_lr: float, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return peak_lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, peak_lr, warmup_steps)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,35 @@
+"""repro.readers — multi-format trace readers into the uniform data model
+(paper §III-B).
+
+Every reader returns a :class:`repro.core.Trace` whose events frame has at
+least the canonical columns ``Timestamp (ns) / Event Type / Name / Process``
+plus normalized message columns (``_msg_size``, ``_partner``, ``_tag``) when
+the format records communication.  Formats:
+
+=================  ==========================================================
+``csvreader``      the paper's Fig. 1 CSV
+``jsonl``          Pipit-native JSON-lines (one event per line)
+``chrome``         Chrome Trace Format (Nsight Systems / PyTorch profiler
+                   exports use this envelope)
+``otf2j``          schema-faithful OTF2 rendering (definitions + per-location
+                   event streams; the binary OTF2 C library is unavailable
+                   offline, so archives are JSON with OTF2's exact structure)
+``hlo``            compiled XLA programs (post-SPMD HLO text) → modeled
+                   per-device timelines; the bridge that lets Pipit analyze
+                   our own TPU framework's planned executions
+``parallel``       multiprocessing driver that fans out any reader over
+                   per-location shards (paper §VI)
+=================  ==========================================================
+"""
+
+from .chrome import read_chrome
+from .csvreader import read_csv
+from .hlo import read_hlo
+from .jsonl import read_jsonl, write_jsonl
+from .otf2j import read_otf2_json, write_otf2_json
+from .parallel import read_parallel
+
+__all__ = [
+    "read_csv", "read_jsonl", "write_jsonl", "read_chrome", "read_otf2_json",
+    "write_otf2_json", "read_hlo", "read_parallel",
+]

@@ -1,0 +1,91 @@
+"""Chrome Trace Format reader (paper's Nsight-Systems / PyTorch-profiler path).
+
+CTF is the JSON envelope both the PyTorch profiler and Nsight exports emit:
+``{"traceEvents": [{"ph": "B"|"E"|"X"|"i", "ts": us, "dur": us, "pid": ..,
+"tid": .., "name": .., "args": {..}}, ...]}``.  ``X`` (complete) events are
+split into Enter/Leave pairs; ``pid``→Process, ``tid``→Thread.  Message /
+flow events (``ph`` in s/t/f) become MpiSend/MpiRecv instants so the comm
+ops work on GPU traces too.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import numpy as np
+
+from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
+                              MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
+from ..core.frame import Categorical, EventFrame
+from ..core.trace import Trace
+
+_ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
+
+
+def read_chrome(path_or_buf, label: Optional[str] = None) -> Trace:
+    if isinstance(path_or_buf, str):
+        with open(path_or_buf) as f:
+            doc = json.load(f)
+        label = label or path_or_buf
+    else:
+        doc = json.load(path_or_buf)
+    events = doc["traceEvents"] if isinstance(doc, dict) else doc
+
+    # normalize pids to dense process ids
+    pids = sorted({e.get("pid", 0) for e in events})
+    pid_of = {p: i for i, p in enumerate(pids)}
+
+    ts, et, names, procs, threads = [], [], [], [], []
+    sizes, partners, tags = [], [], []
+    has_msg = False
+
+    def emit(t, code, name, pid, tid, size=np.nan, partner=-1, tag=0):
+        ts.append(int(t * 1000))  # us -> ns
+        et.append(code)
+        names.append(name)
+        procs.append(pid_of.get(pid, 0))
+        threads.append(tid)
+        sizes.append(size)
+        partners.append(partner)
+        tags.append(tag)
+
+    for e in events:
+        ph = e.get("ph", "X")
+        name = str(e.get("name", ""))
+        pid = e.get("pid", 0)
+        tid = int(e.get("tid", 0) or 0)
+        t = float(e.get("ts", 0.0))
+        args = e.get("args") or {}
+        if ph == "X":
+            dur = float(e.get("dur", 0.0))
+            emit(t, 0, name, pid, tid)
+            emit(t + dur, 1, name, pid, tid)
+        elif ph == "B":
+            emit(t, 0, name, pid, tid)
+        elif ph == "E":
+            emit(t, 1, name, pid, tid)
+        elif ph in ("i", "I", "n"):
+            emit(t, 2, name, pid, tid)
+        elif ph == "s":  # flow start == send
+            has_msg = True
+            emit(t, 2, MPI_SEND, pid, tid, size=float(args.get("size", 0.0)),
+                 partner=int(args.get("partner", -1)), tag=int(e.get("id", 0)))
+        elif ph in ("t", "f"):  # flow step/finish == recv
+            has_msg = True
+            emit(t, 2, MPI_RECV, pid, tid, size=float(args.get("size", 0.0)),
+                 partner=int(args.get("partner", -1)), tag=int(e.get("id", 0)))
+        # metadata events (ph == "M") are folded into definitions
+    ev = EventFrame({
+        TS: np.asarray(ts, np.int64),
+        ET: Categorical.from_codes(np.asarray(et, np.int32), _ET_CATS),
+        NAME: np.asarray(names, dtype=object),
+        PROC: np.asarray(procs, np.int64),
+        THREAD: np.asarray(threads, np.int64),
+    })
+    if has_msg:
+        ev[MSG_SIZE] = np.asarray(sizes)
+        ev[PARTNER] = np.asarray(partners, np.int64)
+        ev[TAG] = np.asarray(tags, np.int64)
+    defs = {"pids": pids}
+    return Trace(ev, definitions=defs, label=label)

@@ -1,0 +1,77 @@
+"""CSV trace reader — the paper's Fig. 1 format.
+
+Header names are matched case-insensitively after stripping; a timestamp
+header of ``Timestamp (s)`` / ``(ms)`` / ``(us)`` is converted to ns.  Extra
+columns are kept verbatim (numeric when they parse as floats).
+"""
+
+from __future__ import annotations
+
+import io
+from typing import Optional
+
+import numpy as np
+
+from ..core.constants import ET, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS
+from ..core.frame import Categorical, EventFrame
+from ..core.trace import Trace
+
+_UNIT = {"(s)": 1e9, "(ms)": 1e6, "(us)": 1e3, "(ns)": 1.0}
+
+_CANON = {
+    "timestamp": TS, "time": TS, "event type": ET, "event": ET, "name": NAME,
+    "function": NAME, "process": PROC, "rank": PROC, "thread": THREAD,
+    "msg size": MSG_SIZE, "size": MSG_SIZE, "partner": PARTNER, "tag": TAG,
+}
+
+
+def _canon_header(h: str):
+    h = h.strip()
+    scale = 1.0
+    low = h.lower()
+    for u, s in _UNIT.items():
+        if low.endswith(u):
+            low = low[: -len(u)].strip()
+            scale = s
+    return _CANON.get(low, h), scale
+
+
+def read_csv(path_or_buf, label: Optional[str] = None) -> Trace:
+    if isinstance(path_or_buf, str):
+        with open(path_or_buf) as f:
+            text = f.read()
+        label = label or path_or_buf
+    else:
+        text = path_or_buf.read()
+    lines = [ln for ln in text.splitlines() if ln.strip()]
+    if not lines:
+        return Trace(EventFrame(), label=label)
+    raw_headers = [h for h in lines[0].split(",")]
+    headers, scales = [], []
+    for h in raw_headers:
+        name, scale = _canon_header(h)
+        headers.append(name)
+        scales.append(scale)
+    ncol = len(headers)
+    cols = [[] for _ in range(ncol)]
+    for ln in lines[1:]:
+        parts = [p.strip() for p in ln.split(",")]
+        if len(parts) < ncol:
+            parts += [""] * (ncol - len(parts))
+        for i in range(ncol):
+            cols[i].append(parts[i])
+
+    ev = EventFrame()
+    for i, h in enumerate(headers):
+        vals = cols[i]
+        arr: object
+        try:
+            arr = np.asarray([float(v) if v else np.nan for v in vals])
+            if h == TS:
+                arr = (arr * scales[i]).astype(np.int64)
+            elif h in (PROC, THREAD, PARTNER, TAG):
+                arr = np.nan_to_num(arr, nan=-1).astype(np.int64)
+        except ValueError:
+            arr = Categorical.from_values(np.asarray(vals, dtype=object).astype(str))
+        ev[h] = arr
+    return Trace(ev, label=label)

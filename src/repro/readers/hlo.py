@@ -1,0 +1,212 @@
+"""HLO reader: a compiled XLA program becomes a Pipit trace.
+
+This closes the paper's loop on a CPU-only container: the *planned*
+execution of a real compiled multi-pod program is modeled as a per-device
+event timeline that every Pipit operation (comm_matrix, comm_comp_breakdown,
+time_profile, critical path) can analyze.
+
+Model (documented in DESIGN.md §Hardware adaptation):
+
+* the entry computation's instructions execute in text order, one logical
+  "process" per modeled device (SPMD ⇒ identical programs);
+* compute ops (fusion/dot/etc.) take ``max(flops/peak, bytes/hbm_bw)``
+  seconds; dot FLOPs come from resolved operand shapes, byte counts from the
+  result + operand shapes on the line;
+* collectives take ``wire_bytes/link_bw`` and emit ring MpiSend/MpiRecv
+  instants to the neighbor device; ``*-start``/``*-done`` pairs model
+  *asynchronous* collectives: the transfer runs on thread 1 while compute
+  continues on thread 0 — Pipit's ``comm_comp_breakdown`` then measures the
+  overlap the compiler actually scheduled;
+* ``while`` bodies are expanded ``trip_count`` times (parsed from the loop
+  condition).
+
+Timestamps are nanoseconds.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..analysis.hlostats import DTYPE_BYTES, shape_bytes
+from ..analysis.roofline import HW
+from ..core.constants import (ENTER, ET, LEAVE, MPI_RECV, MPI_SEND, MSG_SIZE,
+                              NAME, PARTNER, PROC, TAG, THREAD, TS)
+from ..core.frame import EventFrame
+from ..core.trace import Trace
+
+__all__ = ["read_hlo"]
+
+_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_OPKIND = re.compile(r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)?\s*([a-z][\w\-]*)\(")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_WHILE = re.compile(r"while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "iota", "broadcast", "reshape", "transpose", "copy"}
+
+
+def _line_bytes(line: str) -> int:
+    return sum(shape_bytes(f"{m.group(1)}[{m.group(2)}]")
+               for m in re.finditer(r"(\w+)\[([\d,]*)\]", line)
+               if m.group(1) in DTYPE_BYTES)
+
+
+def _dot_flops(line: str, shapes: Dict[str, tuple]) -> float:
+    m = _DEF.match(line)
+    if not m:
+        return 0.0
+    res = 1
+    for x in m.group(3).split(","):
+        if x:
+            res *= int(x)
+    ops = re.findall(r"%([\w\.\-]+)", line)
+    k = 1
+    c = _CONTRACT.search(line)
+    if c and len(ops) >= 2:
+        lhs = shapes.get(ops[1], ())
+        for ci in (int(x) for x in c.group(1).split(",") if x):
+            if ci < len(lhs):
+                k *= lhs[ci]
+    return 2.0 * res * k
+
+
+def read_hlo(hlo_text: str, *, n_procs: int = 8, label: Optional[str] = None,
+             hw: Dict[str, float] = HW, group_size: int = 256,
+             max_events_per_proc: int = 200_000) -> Trace:
+    shapes: Dict[str, tuple] = {}
+    comp_lines: Dict[str, List[str]] = {}
+    comp = "?"
+    entry = None
+    trips: Dict[str, int] = {}
+    conds: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" "):
+            h = _COMP_HDR.match(line.strip())
+            if h and "{" in line:
+                comp = h.group(1)
+                comp_lines.setdefault(comp, [])
+                if line.startswith("ENTRY"):
+                    entry = comp
+        m = _DEF.match(line)
+        if m:
+            shapes[m.group(1)] = tuple(int(x) for x in m.group(3).split(",") if x)
+        w = _WHILE.search(line)
+        if w:
+            conds[w.group(2)] = w.group(1)
+        comp_lines.setdefault(comp, []).append(line)
+    for body, cond in conds.items():
+        consts: List[int] = []
+        for line in comp_lines.get(cond, []):
+            consts += [int(x) for x in _CONST_INT.findall(line)]
+        trips[body] = max(consts) if consts else 1
+
+    # -- single-device schedule --------------------------------------------
+    events: List[tuple] = []   # (t_enter, t_leave, name, thread, partner_sz)
+    pending_async: Dict[str, float] = {}
+
+    def emit(comp_name: str, t0: float) -> float:
+        t = t0
+        for line in comp_lines.get(comp_name, []):
+            if len(events) >= max_events_per_proc:
+                return t
+            k = _OPKIND.search(line)
+            if not k:
+                continue
+            kind = k.group(1)
+            if kind in _SKIP:
+                continue
+            if kind == "while":
+                w = _WHILE.search(line)
+                if w:
+                    body = w.group(2)
+                    for it in range(trips.get(body, 1)):
+                        t = emit(body, t)
+                        if len(events) >= max_events_per_proc:
+                            return t
+                continue
+            base = next((c for c in _COLLECTIVES if kind.startswith(c)), None)
+            if base is not None:
+                g = group_size
+                fac = (g - 1) / g
+                b = _line_bytes(line)
+                wire = {"all-gather": fac * b, "all-reduce": 2 * fac * b,
+                        "reduce-scatter": fac * b, "all-to-all": fac * b,
+                        "collective-permute": float(b)}[base]
+                dur = max(wire / hw["ici_bw"] * 1e9, 1.0)
+                name = _DEF.match(line)
+                nm = name.group(1) if name else base
+                if kind.endswith("-start"):
+                    pending_async[nm.replace("-start", "")] = t
+                    events.append((t, t + dur, base, 1, wire))
+                    continue
+                if kind.endswith("-done"):
+                    # wait until the async transfer (started earlier) is done
+                    ops = re.findall(r"%([\w\.\-]+)", line)
+                    st = pending_async.pop(ops[1].replace("-start", ""), t) \
+                        if len(ops) > 1 else t
+                    t = max(t, st + dur)
+                    continue
+                events.append((t, t + dur, base, 0, wire))
+                t += dur
+                continue
+            # compute-ish op
+            fl = _dot_flops(line, shapes) if kind == "dot" else 0.0
+            by = _line_bytes(line)
+            dur = max(fl / hw["peak_flops"] * 1e9, by / hw["hbm_bw"] * 1e9)
+            if dur < 50.0 and kind not in ("dot", "fusion", "custom-call",
+                                           "convolution"):
+                continue   # drop sub-50ns bookkeeping ops
+            if kind == "fusion" or kind == "call":
+                c = _CALLS.search(line)
+                if c and any(" dot(" in l for l in comp_lines.get(c.group(1), [])):
+                    for l2 in comp_lines.get(c.group(1), []):
+                        if " dot(" in l2:
+                            fl += _dot_flops(l2, shapes)
+                    dur = max(dur, fl / hw["peak_flops"] * 1e9)
+            events.append((t, t + max(dur, 1.0), kind, 0, None))
+            t += max(dur, 1.0)
+        return t
+
+    assert entry is not None, "no ENTRY computation in HLO"
+    emit(entry, 0.0)
+
+    # -- replicate across modeled devices + ring messages --------------------
+    ts, et, name, proc, thread, partner, size = [], [], [], [], [], [], []
+    for p in range(n_procs):
+        for (t0, t1, nm, th, wire) in events:
+            ts += [t0, t1]
+            et += [ENTER, LEAVE]
+            name += [nm, nm]
+            proc += [p, p]
+            thread += [th, th]
+            partner += [-1, -1]
+            size += [np.nan, np.nan]
+            if wire is not None:
+                mid = 0.5 * (t0 + t1)
+                ts += [mid, mid + 1]
+                et += ["MpiSend", "MpiRecv"]
+                name += [MPI_SEND, MPI_RECV]
+                proc += [p, p]
+                thread += [th, th]
+                partner += [(p + 1) % n_procs, (p - 1) % n_procs]
+                size += [wire, wire]
+    ev = EventFrame({
+        TS: np.asarray(ts, np.float64), ET: np.asarray(et),
+        NAME: np.asarray(name), PROC: np.asarray(proc, np.int64),
+        THREAD: np.asarray(thread, np.int64),
+        PARTNER: np.asarray(partner, np.int64),
+        MSG_SIZE: np.asarray(size, np.float64),
+        TAG: np.zeros(len(ts), np.int64),
+    })
+    tr = Trace(ev.sort_by([PROC, TS]), label=label or "hlo")
+    tr.definitions["modeled"] = {"n_procs": n_procs, "group_size": group_size,
+                                 "hw": dict(hw)}
+    return tr

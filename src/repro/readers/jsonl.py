@@ -1,0 +1,94 @@
+"""Pipit-native JSON-lines format: one event object per line.
+
+Keys (short forms keep files small): ``ts`` (ns), ``et`` (Enter/Leave/Instant),
+``name``, ``proc``, ``thread``, and for messages ``size``/``partner``/``tag``.
+This is the format our own framework's tracer emits.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Iterable, Optional
+
+import numpy as np
+
+from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MSG_SIZE, NAME,
+                              PARTNER, PROC, TAG, THREAD, TS)
+from ..core.frame import Categorical, EventFrame
+from ..core.trace import Trace
+
+_ET_CODE = {ENTER: 0, LEAVE: 1, INSTANT: 2}
+_ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
+
+
+def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
+    if isinstance(path_or_buf, str):
+        f = open(path_or_buf)
+        label = label or path_or_buf
+        close = True
+    else:
+        f, close = path_or_buf, False
+    ts, et, names, procs, threads = [], [], [], [], []
+    sizes, partners, tags = [], [], []
+    has_msg = False
+    try:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            ts.append(int(d["ts"]))
+            et.append(_ET_CODE.get(d.get("et", ENTER), 2))
+            names.append(d.get("name", ""))
+            procs.append(int(d.get("proc", 0)))
+            threads.append(int(d.get("thread", 0)))
+            s = d.get("size")
+            p = d.get("partner")
+            g = d.get("tag")
+            if s is not None or p is not None:
+                has_msg = True
+            sizes.append(float(s) if s is not None else np.nan)
+            partners.append(int(p) if p is not None else -1)
+            tags.append(int(g) if g is not None else 0)
+    finally:
+        if close:
+            f.close()
+    ev = EventFrame({
+        TS: np.asarray(ts, np.int64),
+        ET: Categorical.from_codes(np.asarray(et, np.int32), _ET_CATS),
+        NAME: np.asarray(names, dtype=object),
+        PROC: np.asarray(procs, np.int64),
+    })
+    if any(t != 0 for t in threads):
+        ev[THREAD] = np.asarray(threads, np.int64)
+    if has_msg:
+        ev[MSG_SIZE] = np.asarray(sizes)
+        ev[PARTNER] = np.asarray(partners, np.int64)
+        ev[TAG] = np.asarray(tags, np.int64)
+    return Trace(ev, label=label)
+
+
+def write_jsonl(trace_or_events, path: str) -> None:
+    ev = getattr(trace_or_events, "events", trace_or_events)
+    cols = ev.columns
+    ts = np.asarray(ev[TS], np.int64)
+    et = ev[ET]
+    names = ev[NAME]
+    procs = np.asarray(ev[PROC], np.int64)
+    threads = np.asarray(ev[THREAD], np.int64) if THREAD in cols else None
+    sizes = np.asarray(ev[MSG_SIZE], np.float64) if MSG_SIZE in cols else None
+    partners = np.asarray(ev[PARTNER], np.int64) if PARTNER in cols else None
+    tags = np.asarray(ev[TAG], np.int64) if TAG in cols else None
+    with open(path, "w") as f:
+        for i in range(len(ev)):
+            d = {"ts": int(ts[i]), "et": str(et[i]), "name": str(names[i]),
+                 "proc": int(procs[i])}
+            if threads is not None and threads[i]:
+                d["thread"] = int(threads[i])
+            if sizes is not None and not np.isnan(sizes[i]):
+                d["size"] = sizes[i]
+            if partners is not None and partners[i] >= 0:
+                d["partner"] = int(partners[i])
+            if tags is not None and tags[i]:
+                d["tag"] = int(tags[i])
+            f.write(json.dumps(d) + "\n")

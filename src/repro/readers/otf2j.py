@@ -1,0 +1,198 @@
+"""OTF2-structured reader (schema-faithful JSON rendering).
+
+The binary OTF2 C library cannot be installed offline, so archives are stored
+as JSON **with OTF2's exact logical structure** (see Eschweiler et al. [10]):
+
+* ``definitions``: string table, region table (name refs into strings),
+  location groups (= MPI ranks) and locations (= threads),
+* per-location **event streams**, each a list of
+  ``[timestamp, kind, ...]`` records with kinds ``E`` (Enter, region ref),
+  ``L`` (Leave, region ref), ``S`` (MpiSend: receiver, length, tag),
+  ``R`` (MpiRecv: sender, length, tag).
+
+Two on-disk layouts are accepted, mirroring OTF2's anchor-plus-streams:
+
+* single file: one JSON object with ``definitions`` and ``events`` keyed by
+  location id;
+* directory: ``definitions.json`` + ``locations/<id>.json`` one stream per
+  file — this is the layout the parallel reader (paper §VI) fans out over.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
+                              MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
+from ..core.frame import Categorical, EventFrame
+from ..core.trace import Trace
+
+_ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
+
+
+def _stream_to_columns(loc: dict, events: List[list], strings: List[str],
+                       regions: List[dict]):
+    """Decode one location's event stream into column lists."""
+    n = len(events)
+    ts = np.empty(n, np.int64)
+    et = np.empty(n, np.int32)
+    name_code = np.empty(n, np.int64)  # index into regions, or -1 for msgs
+    sizes = np.full(n, np.nan)
+    partners = np.full(n, -1, np.int64)
+    tags = np.zeros(n, np.int64)
+    is_send = np.zeros(n, bool)
+    is_recv = np.zeros(n, bool)
+    for i, rec in enumerate(events):
+        ts[i] = rec[0]
+        kind = rec[1]
+        if kind == "E":
+            et[i] = 0
+            name_code[i] = rec[2]
+        elif kind == "L":
+            et[i] = 1
+            name_code[i] = rec[2]
+        elif kind == "S":
+            et[i] = 2
+            name_code[i] = -1
+            is_send[i] = True
+            partners[i] = rec[2]
+            sizes[i] = rec[3]
+            tags[i] = rec[4] if len(rec) > 4 else 0
+        elif kind == "R":
+            et[i] = 2
+            name_code[i] = -1
+            is_recv[i] = True
+            partners[i] = rec[2]
+            sizes[i] = rec[3]
+            tags[i] = rec[4] if len(rec) > 4 else 0
+        else:  # metric/other -> instant named by string ref
+            et[i] = 2
+            name_code[i] = rec[2] if len(rec) > 2 else -1
+    region_names = np.asarray(
+        [strings[r["name"]] if isinstance(r, dict) else strings[r] for r in regions]
+        + [MPI_SEND, MPI_RECV], dtype=object)
+    code = np.where(is_send, len(regions), np.where(is_recv, len(regions) + 1,
+                                                    np.maximum(name_code, 0)))
+    names = region_names[code]
+    return ts, et, names, sizes, partners, tags
+
+
+def _decode_archive(doc: dict, label: Optional[str], locations_subset=None) -> Trace:
+    defs = doc["definitions"]
+    strings = defs["strings"]
+    regions = defs["regions"]
+    locs = defs["locations"]  # [{"id": i, "group": rank, "thread": t}]
+    frames = []
+    all_cols: Dict[str, list] = {k: [] for k in
+                                 (TS, ET, NAME, PROC, THREAD, MSG_SIZE, PARTNER, TAG)}
+    for loc in locs:
+        lid = str(loc["id"])
+        if locations_subset is not None and lid not in locations_subset:
+            continue
+        stream = doc["events"].get(lid, [])
+        ts, et, names, sizes, partners, tags = _stream_to_columns(
+            loc, stream, strings, regions)
+        n = len(ts)
+        all_cols[TS].append(ts)
+        all_cols[ET].append(et)
+        all_cols[NAME].append(names)
+        all_cols[PROC].append(np.full(n, loc["group"], np.int64))
+        all_cols[THREAD].append(np.full(n, loc.get("thread", 0), np.int64))
+        all_cols[MSG_SIZE].append(sizes)
+        all_cols[PARTNER].append(partners)
+        all_cols[TAG].append(tags)
+    if not all_cols[TS]:
+        return Trace(EventFrame(), label=label)
+    ev = EventFrame({
+        TS: np.concatenate(all_cols[TS]),
+        ET: Categorical.from_codes(np.concatenate(all_cols[ET]).astype(np.int32),
+                                   _ET_CATS),
+        NAME: np.concatenate(all_cols[NAME]),
+        PROC: np.concatenate(all_cols[PROC]),
+        THREAD: np.concatenate(all_cols[THREAD]),
+        MSG_SIZE: np.concatenate(all_cols[MSG_SIZE]),
+        PARTNER: np.concatenate(all_cols[PARTNER]),
+        TAG: np.concatenate(all_cols[TAG]),
+    })
+    # canonical order: (process, thread, time) — stable for matching
+    ev = ev.sort_by([PROC, THREAD, TS])
+    return Trace(ev, definitions=defs, label=label)
+
+
+def read_otf2_json(path: str, label: Optional[str] = None,
+                   locations_subset=None) -> Trace:
+    label = label or path
+    if os.path.isdir(path):
+        with open(os.path.join(path, "definitions.json")) as f:
+            defs = json.load(f)
+        events = {}
+        locdir = os.path.join(path, "locations")
+        for fn in sorted(os.listdir(locdir)):
+            lid = os.path.splitext(fn)[0]
+            if locations_subset is not None and lid not in locations_subset:
+                continue
+            with open(os.path.join(locdir, fn)) as f:
+                events[lid] = json.load(f)
+        doc = {"definitions": defs, "events": events}
+    else:
+        with open(path) as f:
+            doc = json.load(f)
+    return _decode_archive(doc, label, locations_subset)
+
+
+def write_otf2_json(trace_or_events, path: str, split_locations: bool = False) -> None:
+    """Serialize a trace into the OTF2-structured archive (inverse reader)."""
+    ev = getattr(trace_or_events, "events", trace_or_events)
+    procs = np.asarray(ev[PROC], np.int64)
+    threads = np.asarray(ev[THREAD], np.int64) if THREAD in ev else np.zeros_like(procs)
+    ts = np.asarray(ev[TS], np.int64)
+    names = ev[NAME]
+    et = ev[ET]
+    sizes = np.asarray(ev[MSG_SIZE], np.float64) if MSG_SIZE in ev else np.full(len(ev), np.nan)
+    partners = np.asarray(ev[PARTNER], np.int64) if PARTNER in ev else np.full(len(ev), -1)
+    tags = np.asarray(ev[TAG], np.int64) if TAG in ev else np.zeros(len(ev), np.int64)
+
+    uniq_names = sorted({str(n) for n, e in zip(names, et) if e in (ENTER, LEAVE)})
+    string_of = {n: i for i, n in enumerate(uniq_names)}
+    strings = uniq_names
+    regions = [{"name": i} for i in range(len(uniq_names))]
+
+    loc_key = procs * (threads.max() + 1 if len(threads) else 1) + threads
+    uniq_locs = np.unique(loc_key)
+    locations = []
+    events: Dict[str, list] = {}
+    for li, lk in enumerate(uniq_locs):
+        rows = np.nonzero(loc_key == lk)[0]
+        rows = rows[np.argsort(ts[rows], kind="stable")]
+        locations.append({"id": li, "group": int(procs[rows[0]]),
+                          "thread": int(threads[rows[0]])})
+        stream = []
+        for r in rows:
+            e = et[r]
+            nm = str(names[r])
+            if e == ENTER:
+                stream.append([int(ts[r]), "E", string_of[nm]])
+            elif e == LEAVE:
+                stream.append([int(ts[r]), "L", string_of[nm]])
+            elif nm == MPI_SEND:
+                stream.append([int(ts[r]), "S", int(partners[r]),
+                               float(np.nan_to_num(sizes[r])), int(tags[r])])
+            elif nm == MPI_RECV:
+                stream.append([int(ts[r]), "R", int(partners[r]),
+                               float(np.nan_to_num(sizes[r])), int(tags[r])])
+        events[str(li)] = stream
+    defs = {"strings": strings, "regions": regions, "locations": locations}
+    if split_locations:
+        os.makedirs(os.path.join(path, "locations"), exist_ok=True)
+        with open(os.path.join(path, "definitions.json"), "w") as f:
+            json.dump(defs, f)
+        for lid, stream in events.items():
+            with open(os.path.join(path, "locations", f"{lid}.json"), "w") as f:
+                json.dump(stream, f)
+    else:
+        with open(path, "w") as f:
+            json.dump({"definitions": defs, "events": events}, f)

@@ -1,0 +1,74 @@
+"""Parallel reading driver (paper §VI, Fig. 5 center).
+
+Trace archives are naturally sharded per location (OTF2 keeps one event
+stream per rank; our JSONL traces can be split the same way).  This driver
+fans a reader over shards with ``multiprocessing`` and concatenates the
+resulting frames — the paper's strategy for scaling trace ingest with cores.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+from typing import Callable, List, Optional, Sequence
+
+from ..core.frame import concat
+from ..core.trace import Trace
+
+__all__ = ["read_parallel", "split_jsonl_by_process"]
+
+_READERS = {}
+
+
+def _read_one(args):
+    kind, path = args
+    if kind == "jsonl":
+        from .jsonl import read_jsonl
+        return read_jsonl(path).events
+    if kind == "csv":
+        from .csvreader import read_csv
+        return read_csv(path).events
+    if kind == "otf2j":
+        from .otf2j import read_otf2_json
+        return read_otf2_json(path).events
+    if kind == "chrome":
+        from .chrome import read_chrome
+        return read_chrome(path).events
+    raise ValueError(kind)
+
+
+def read_parallel(paths: Sequence[str], kind: str = "jsonl",
+                  processes: Optional[int] = None,
+                  label: Optional[str] = None) -> Trace:
+    """Read per-location shards in parallel and merge into one Trace."""
+    processes = processes or min(len(paths), os.cpu_count() or 1)
+    if processes <= 1 or len(paths) == 1:
+        frames = [_read_one((kind, p)) for p in paths]
+    else:
+        with mp.get_context("spawn").Pool(processes) as pool:
+            frames = pool.map(_read_one, [(kind, p) for p in paths])
+    from ..core.constants import PROC, TS
+    ev = concat(frames).sort_by([PROC, TS])
+    return Trace(ev, label=label or f"parallel[{len(paths)}]")
+
+
+def split_jsonl_by_process(path: str, out_dir: str) -> List[str]:
+    """Shard a JSONL trace by process id (one file per rank)."""
+    import json
+    os.makedirs(out_dir, exist_ok=True)
+    handles = {}
+    try:
+        with open(path) as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                p = json.loads(line).get("proc", 0)
+                if p not in handles:
+                    handles[p] = open(os.path.join(out_dir, f"rank_{p}.jsonl"),
+                                      "w")
+                handles[p].write(line)
+    finally:
+        for h in handles.values():
+            h.close()
+    return [os.path.join(out_dir, f"rank_{p}.jsonl")
+            for p in sorted(handles)]

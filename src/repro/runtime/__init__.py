@@ -1,0 +1,4 @@
+from .tracer import Tracer
+from .trainer import Trainer, TrainLoopConfig, FaultInjector
+
+__all__ = ["Tracer", "Trainer", "TrainLoopConfig", "FaultInjector"]

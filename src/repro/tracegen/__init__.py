@@ -1,0 +1,30 @@
+"""Synthetic-but-structured parallel application trace generators.
+
+The paper's case studies (§VII) analyze traces of real MPI/Charm++/PyTorch
+applications (AMG, Laghos, Kripke, Tortuga, Loimos, AxoNN).  Those apps cannot
+run in this container, so we generate traces that preserve the *communication
+and call structure* each case study analyzes:
+
+* :func:`gol`            — near-neighbor 1-D halo exchange (Game of Life §VII-C)
+* :func:`stencil3d`      — 3-D nearest-neighbor exchange (Laghos-like comm matrix)
+* :func:`amg_vcycle`     — V-cycle with shrinking messages + coarse all-reduce (AMG)
+* :func:`kripke_sweep`   — wavefront dependency chain (Kripke)
+* :func:`tortuga`        — CFD iteration (computeRhs/gradC2C/ghost exchange) with
+                           configurable scaling degradation (Tortuga §VII-B/D)
+* :func:`loimos`         — imbalanced actor-style message processing (Loimos §VII-A)
+* :func:`axonn_training` — bulk-synchronous training loop at three optimization
+                           levels (AxoNN §VII-D: v0 no overlap, v1 less comm,
+                           v2 comm/comp overlap on a second "stream" thread)
+
+All generators are deterministic given ``seed`` and return
+:class:`repro.core.Trace` objects.
+"""
+
+from .builder import TraceBuilder
+from .apps import (amg_vcycle, axonn_training, gol, kripke_sweep, loimos,
+                   stencil3d, tortuga)
+
+__all__ = [
+    "TraceBuilder", "gol", "stencil3d", "amg_vcycle", "kripke_sweep",
+    "tortuga", "loimos", "axonn_training",
+]

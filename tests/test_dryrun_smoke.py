@@ -1,0 +1,34 @@
+"""Dry-run smoke: one full production-mesh lower+compile in a subprocess
+(the 512-device XLA flag must not leak into this pytest process)."""
+
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = str(pathlib.Path(__file__).parent.parent)
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import sys; sys.path.insert(0, "src")
+    import json
+    from repro.launch.dryrun import run_cell
+    r = run_cell("qwen1.5-0.5b", "decode_32k", {multi}, out_dir=None)
+    rl = r["roofline"]
+    assert r["chips"] == {chips}
+    assert rl["compute_s"] > 0 and rl["memory_s"] > 0
+    assert r["collectives_schedule"]["total"]["count"] > 0
+    print("DRYRUN_OK", r["mesh"], rl["bottleneck"])
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("multi,chips", [(False, 256), (True, 512)])
+def test_dryrun_cell_compiles(multi, chips):
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT.format(multi=multi, chips=chips)],
+        capture_output=True, text=True, cwd=ROOT, timeout=900)
+    assert "DRYRUN_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]

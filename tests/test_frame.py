@@ -1,0 +1,80 @@
+"""EventFrame unit + hypothesis property tests (the pandas-analogue core)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.frame import Categorical, EventFrame, concat
+
+
+def test_basic_columns():
+    f = EventFrame({"a": np.arange(5), "s": np.array(list("xyxzy"))})
+    assert len(f) == 5
+    assert isinstance(f.column("s"), Categorical)
+    assert list(f["s"]) == list("xyxzy")
+    assert f.column("s").lookup("z") >= 0
+    assert f.column("s").lookup("nope") == -1
+
+
+def test_mask_take_sort():
+    f = EventFrame({"a": np.array([3, 1, 2]), "s": np.array(list("cab"))})
+    srt = f.sort_by("a")
+    assert list(srt["a"]) == [1, 2, 3]
+    assert list(srt["s"]) == ["a", "b", "c"]
+    m = f.mask(np.array([True, False, True]))
+    assert list(m["a"]) == [3, 2]
+
+
+def test_concat_categorical_merge():
+    f1 = EventFrame({"s": np.array(["a", "b"])})
+    f2 = EventFrame({"s": np.array(["c", "a"])})
+    c = concat([f1, f2])
+    assert list(c["s"]) == ["a", "b", "c", "a"]
+
+
+@st.composite
+def frame_and_keys(draw):
+    n = draw(st.integers(1, 200))
+    keys = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    vals = draw(st.lists(st.floats(-1e6, 1e6, allow_nan=False),
+                         min_size=n, max_size=n))
+    return np.asarray(keys), np.asarray(vals)
+
+
+@given(frame_and_keys())
+@settings(max_examples=50, deadline=None)
+def test_groupby_agg_matches_numpy(data):
+    keys, vals = data
+    f = EventFrame({"k": keys, "v": vals})
+    out = f.groupby_agg("k", {"v": "sum"}, count_name="n")
+    got = dict(zip(out["k"].tolist(), out["v"]))
+    cnt = dict(zip(out["k"].tolist(), out["n"]))
+    for k in np.unique(keys):
+        sel = vals[keys == k]
+        assert got[k] == pytest.approx(sel.sum(), rel=1e-9, abs=1e-9)
+        assert cnt[k] == len(sel)
+
+
+@given(frame_and_keys())
+@settings(max_examples=30, deadline=None)
+def test_groupby_minmax_mean(data):
+    keys, vals = data
+    f = EventFrame({"k": keys, "v": vals})
+    out = f.groupby_agg("k", {"v": "max"})
+    got = dict(zip(out["k"].tolist(), out["v"]))
+    for k in np.unique(keys):
+        assert got[k] == vals[keys == k].max()
+
+
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=300))
+@settings(max_examples=30, deadline=None)
+def test_sort_is_stable_permutation(xs):
+    arr = np.asarray(xs)
+    f = EventFrame({"a": arr, "i": np.arange(len(arr))})
+    srt = f.sort_by("a")
+    assert sorted(xs) == list(srt["a"])
+    # stability: equal keys keep original order
+    a, i = np.asarray(srt["a"]), np.asarray(srt["i"])
+    for v in np.unique(a):
+        idx = i[a == v]
+        assert (np.diff(idx) > 0).all()

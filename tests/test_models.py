@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests (reduced same-family configs) + serve-path
+consistency: prefill+decode must reproduce full-forward logits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.models import SHAPES, build_model, input_specs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S):
+    kw = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab),
+          "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        kw["frames"] = jax.random.normal(KEY, (B, cfg.enc_frames, cfg.d_model),
+                                         jnp.float32)
+    if cfg.family == "vlm":
+        kw["img_embeds"] = jax.random.normal(KEY, (B, cfg.img_tokens,
+                                                   cfg.d_model), jnp.float32)
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY, jnp.float32)
+    batch = _batch(cfg, 2, 32)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) < np.log(cfg.vocab) * 1.5
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+    logits, prefix = model.forward(params, batch["tokens"],
+                                   **{k: v for k, v in batch.items()
+                                      if k in ("img_embeds", "frames")})
+    V = cfg.padded_vocab
+    assert logits.shape == (2, 32 + prefix, V)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_consistency(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY, jnp.float32)
+    B, S, P, CACHE = 2, 24, 20, 48
+    batch = _batch(cfg, B, S)
+    kw = {k: v for k, v in batch.items() if k in ("img_embeds", "frames")}
+    full, prefix = model.forward(params, batch["tokens"], **kw)
+    cache, lg, pos = model.prefill(params, batch["tokens"][:, :P], CACHE, **kw)
+    errs = [float(np.abs(lg - full[:, prefix + P - 1]).max())]
+    for j in range(S - P):
+        lg, cache = model.decode_step(params, cache,
+                                      batch["tokens"][:, P + j:P + j + 1],
+                                      pos, CACHE)
+        pos = pos + 1
+        errs.append(float(np.abs(lg - full[:, prefix + P + j]).max()))
+    assert max(errs) < 5e-4, f"{arch}: {errs}"
+
+
+def test_exact_configs_match_assignment():
+    """The full configs carry the exact published dimensions."""
+    c = get_config("qwen3-moe-235b-a22b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (94, 4096, 64, 4)
+    assert (c.n_experts, c.topk, c.moe_d_ff, c.vocab) == (128, 8, 1536, 151936)
+    c = get_config("gemma3-27b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (62, 5376, 21504, 262144)
+    assert c.window == 1024 and c.global_every == 6
+    c = get_config("qwen1.5-110b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == \
+        (80, 8192, 64, 8, 49152)
+    c = get_config("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (32, 1600, 25, 5)
+    assert c.ssm_state == 16 and c.meta_tokens == 128
+    c = get_config("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab) == (24, 768, 128, 50280)
+    c = get_config("whisper-medium")
+    assert (c.n_layers, c.enc_layers, c.d_model, c.d_ff, c.vocab) == \
+        (24, 24, 1024, 4096, 51865)
+
+
+def test_param_counts_plausible():
+    """param_count() should land near the published sizes (±25%)."""
+    expect = {"qwen1.5-110b": 111e9, "gemma3-27b": 27e9,
+              "codeqwen1.5-7b": 7.25e9, "qwen1.5-0.5b": 0.62e9,
+              "qwen2-moe-a2.7b": 14.3e9, "qwen3-moe-235b-a22b": 235e9,
+              "mamba2-130m": 0.13e9, "hymba-1.5b": 1.5e9,
+              "phi-3-vision-4.2b": 3.8e9, "whisper-medium": 0.76e9}
+    for name, want in expect.items():
+        got = get_config(name).param_count()
+        assert 0.7 * want < got < 1.35 * want, (name, got, want)
+
+
+def test_input_specs_cover_all_cells():
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(s, "shape") for s in specs.values())
+            if shape.kind == "train":
+                assert specs["tokens"].shape == (shape.global_batch,
+                                                 shape.seq_len)

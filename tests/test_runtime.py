@@ -1,0 +1,149 @@
+"""Runtime tests: checkpoint/restart, fault tolerance, stragglers, data
+determinism, serving consistency, gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMStream
+from repro.distributed.compression import (ErrorFeedbackState, compress_int8,
+                                           decompress_int8)
+from repro.runtime import FaultInjector, Trainer, TrainLoopConfig
+from repro.serving import Request, ServeEngine
+
+CFG = get_smoke_config("pipit-lm-100m")
+
+
+def test_checkpoint_roundtrip_and_integrity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    mgr.save(5, tree)
+    mgr.save(9, tree)
+    assert mgr.all_steps() == [5, 9]
+    out = mgr.restore(9, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(10))
+    # corruption detection
+    import numpy as np_
+    path = os.path.join(str(tmp_path), "step_00000009", "arrays.npz")
+    data = dict(np_.load(path))
+    data["a"] = data["a"] + 1
+    np_.savez(path, **data)
+    with pytest.raises(IOError):
+        mgr.restore(9, tree)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.zeros(2)})
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    mgr.save(1, {"x": jnp.zeros(2)})
+    # fake a crashed write: directory without COMMITTED
+    os.makedirs(os.path.join(str(tmp_path), "step_00000007"))
+    assert mgr.latest_step() == 1
+
+
+def test_fault_restart_resumes_from_checkpoint(tmp_path):
+    loop = TrainLoopConfig(steps=10, ckpt_every=3, ckpt_dir=str(tmp_path),
+                           peak_lr=1e-3, warmup_steps=2)
+    tr = Trainer(CFG, loop)
+    stream = SyntheticLMStream(CFG.vocab, batch=4, seq_len=16)
+    fault = FaultInjector(fail_at_steps=[5])
+    out = tr.run(stream, fault=fault)
+    stream.close()
+    assert out["restarts"] == 1
+    assert out["steps"] == 10
+    assert all(np.isfinite(out["losses"]))
+    # trace recorded the fault + restore
+    names = set(tr.tracer.name)
+    assert "fault" in names and "restore" in names
+
+
+def test_straggler_detection():
+    loop = TrainLoopConfig(steps=1, straggler_factor=2.0)
+    tr = Trainer(CFG, loop)
+    flagged = []
+    tr.straggler_callback = lambda s, ratio: flagged.append((s, ratio))
+    for step, dt in enumerate([1.0, 1.0, 1.0, 1.0, 5.0, 1.0]):
+        tr._observe_step_time(step, dt)
+    assert tr.straggler_events == 1 and flagged[0][0] == 4
+
+
+def test_data_determinism_and_seek():
+    s1 = SyntheticLMStream(512, batch=4, seq_len=16, seed=7)
+    s2 = SyntheticLMStream(512, batch=4, seq_len=16, seed=7)
+    b1 = s1.batch_at(12)
+    b2 = s2.batch_at(12)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    s1.close()
+    s2.close()
+
+
+def test_loss_decreases_on_structured_stream():
+    loop = TrainLoopConfig(steps=50, peak_lr=5e-3, warmup_steps=5)
+    tr = Trainer(CFG, loop)
+    stream = SyntheticLMStream(CFG.vocab, batch=8, seq_len=32, seed=1)
+    out = tr.run(stream)
+    stream.close()
+    first = np.mean(out["losses"][:5])
+    last = np.mean(out["losses"][-5:])
+    assert last < first - 0.15, (first, last)
+
+
+def test_microbatching_equivalence():
+    """M=2 gradient accumulation ≈ M=1 on the same global batch."""
+    l1 = TrainLoopConfig(steps=1, microbatches=1, peak_lr=1e-3, clip_norm=None)
+    l2 = TrainLoopConfig(steps=1, microbatches=2, peak_lr=1e-3, clip_norm=None)
+    t1 = Trainer(CFG, l1)
+    t2 = Trainer(CFG, l2)
+    stream = SyntheticLMStream(CFG.vocab, batch=8, seq_len=16)
+    batch = stream.batch_at(0)
+    stream.close()
+    t1.train_one(batch, 0)
+    t2.train_one(batch, 0)
+    a = jax.tree_util.tree_leaves(t1.params)
+    b = jax.tree_util.tree_leaves(t2.params)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=5e-3)
+
+
+def test_serving_greedy_matches_forward():
+    eng = ServeEngine(CFG, batch=2, cache_len=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, CFG.vocab, 12).astype(np.int32)
+               for _ in range(2)]
+    reqs = [Request(i, p, max_new_tokens=4) for i, p in enumerate(prompts)]
+    done = eng.generate(reqs)
+    # oracle: greedy continuation via repeated full forward
+    model, params = eng.model, eng.params
+    for r, prompt in zip(done, prompts):
+        toks = list(prompt)
+        for j in range(4):
+            logits, _ = model.forward(params, jnp.asarray([toks], jnp.int32))
+            nxt = int(jnp.argmax(logits[0, -1, :CFG.vocab]))
+            assert nxt == r.out_tokens[j], (r.rid, j)
+            toks.append(nxt)
+
+
+def test_int8_compression_error_feedback():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 0.01
+    q, scale, ef = compress_int8(g)
+    deq = decompress_int8(q, scale, g.shape, jnp.float32)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.02                      # int8 block quant ≈ 0.4% typical
+    # error feedback: residual + dequantized == original (exactly)
+    np.testing.assert_allclose(np.asarray(deq + ef.residual),
+                               np.asarray(g), atol=1e-6)

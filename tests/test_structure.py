@@ -1,0 +1,102 @@
+"""Enter/leave matching + structure derivation: unit + property tests.
+
+Property: for any randomly generated *balanced* call forest per process, the
+vectorized matcher recovers exactly the generator's nesting.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constants import ET, NAME, PROC, TS
+from repro.core.frame import EventFrame
+from repro.core.structure import compute_inc_exc, compute_parents, match_events
+
+
+@st.composite
+def call_forest(draw):
+    """Generate a random call forest; returns events + true matching."""
+    nprocs = draw(st.integers(1, 3))
+    ts_list, et_list, name_list, proc_list = [], [], [], []
+    true_pairs = []
+
+    def gen(proc, t, depth, budget):
+        while budget[0] > 0 and draw(st.booleans()):
+            budget[0] -= 1
+            name = draw(st.sampled_from(["f", "g", "h"]))
+            enter_idx = len(ts_list)
+            ts_list.append(t)
+            et_list.append("Enter")
+            name_list.append(name)
+            proc_list.append(proc)
+            t += 1
+            if depth < 4:
+                t = gen(proc, t, depth + 1, budget)
+            leave_idx = len(ts_list)
+            ts_list.append(t)
+            et_list.append("Leave")
+            name_list.append(name)
+            proc_list.append(proc)
+            true_pairs.append((enter_idx, leave_idx))
+            t += 1
+        return t
+
+    for p in range(nprocs):
+        gen(p, 0, 0, [draw(st.integers(0, 12))])
+    ev = EventFrame({
+        TS: np.asarray(ts_list, np.float64),
+        ET: np.asarray(et_list if et_list else ["Enter"])[: len(ts_list)],
+        NAME: np.asarray(name_list if name_list else ["f"])[: len(ts_list)],
+        PROC: np.asarray(proc_list, np.int64),
+    }) if ts_list else None
+    return ev, true_pairs
+
+
+@given(call_forest())
+@settings(max_examples=60, deadline=None)
+def test_matching_recovers_generated_forest(data):
+    ev, true_pairs = data
+    if ev is None:
+        return
+    matching, depth, _ = match_events(ev)
+    for e, l in true_pairs:
+        assert matching[e] == l and matching[l] == e
+    # involution + enter-before-leave
+    ts = np.asarray(ev[TS])
+    for i, m in enumerate(matching):
+        if m >= 0:
+            assert matching[m] == i
+            lo, hi = min(i, m), max(i, m)
+            assert ts[lo] <= ts[hi]
+
+
+@given(call_forest())
+@settings(max_examples=40, deadline=None)
+def test_inc_exc_invariants(data):
+    ev, _ = data
+    if ev is None:
+        return
+    matching, depth, order = match_events(ev)
+    parent = compute_parents(ev, matching, depth, order)
+    inc, exc = compute_inc_exc(ev, matching, parent)
+    ok = ~np.isnan(inc)
+    # exclusive ≤ inclusive; both non-negative
+    assert (inc[ok] >= -1e-9).all()
+    assert (exc[ok] <= inc[ok] + 1e-9).all()
+    # parent of any matched enter is an enter on the same process
+    procs = np.asarray(ev[PROC])
+    for i in np.nonzero(ok)[0]:
+        if parent[i] >= 0:
+            assert procs[parent[i]] == procs[i]
+
+
+def test_unbalanced_trace_repair():
+    """A truncated trace (missing leaves) must not crash or mis-match."""
+    ev = EventFrame({
+        TS: np.asarray([0, 1, 2, 3], np.float64),
+        ET: np.asarray(["Enter", "Enter", "Leave", "Enter"]),
+        NAME: np.asarray(["a", "b", "b", "c"]),
+        PROC: np.zeros(4, np.int64),
+    })
+    matching, depth, _ = match_events(ev)
+    assert matching[1] == 2 and matching[2] == 1
+    assert matching[0] == -1 and matching[3] == -1

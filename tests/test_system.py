@@ -1,0 +1,110 @@
+"""End-to-end system test: the paper's Fig. 1 trace through every §IV op."""
+
+import numpy as np
+import pytest
+
+from repro.core import EventFrame, Filter, Trace
+from repro.core.constants import (ET, EXC, INC, MSG_SIZE, NAME, PARTNER, PROC,
+                                  TAG, TS)
+
+
+def fig1_trace(nprocs=2):
+    rows = []
+
+    def add(ts, et, name, proc, **kw):
+        rows.append(dict(ts=ts, et=et, name=name, proc=proc, **kw))
+
+    for p in range(nprocs):
+        add(0, "Enter", "main()", p)
+        add(1, "Enter", "foo()", p)
+        if p == 0:
+            add(3, "Enter", "MPI_Send", p)
+            add(4, "MpiSend", "MpiSend", p, partner=1, size=1000, tag=0)
+            add(5, "Leave", "MPI_Send", p)
+        else:
+            add(3, "Enter", "MPI_Recv", p)
+            add(5.8, "MpiRecv", "MpiRecv", p, partner=0, size=1000, tag=0)
+            add(6, "Leave", "MPI_Recv", p)
+        add(8, "Enter", "baz()", p)
+        add(18, "Leave", "baz()", p)
+        add(25, "Leave", "foo()", p)
+        add(100, "Leave", "main()", p)
+    ev = EventFrame({
+        TS: np.array([r["ts"] for r in rows], np.float64),
+        ET: np.array([r["et"] for r in rows]),
+        NAME: np.array([r["name"] for r in rows]),
+        PROC: np.array([r["proc"] for r in rows], np.int64),
+        PARTNER: np.array([r.get("partner", -1) for r in rows], np.int64),
+        MSG_SIZE: np.array([r.get("size", np.nan) for r in rows], np.float64),
+        TAG: np.array([r.get("tag", 0) for r in rows], np.int64),
+    })
+    return Trace.from_events(ev, label="fig1")
+
+
+def test_inc_exc_metrics():
+    t = fig1_trace()
+    t.calc_exc_metrics()
+    ev = t.events
+    inc = np.asarray(ev.column(INC))
+    exc = np.asarray(ev.column(EXC))
+    enters = ev.cat(ET).mask_eq("Enter")
+    main_rows = np.nonzero(enters & ev.cat(NAME).mask_eq("main()"))[0]
+    assert np.allclose(inc[main_rows], 100)
+    assert np.allclose(exc[main_rows], 76)    # 100 − foo()'s [1, 25]
+    foo_rows = np.nonzero(enters & ev.cat(NAME).mask_eq("foo()"))[0]
+    assert np.allclose(inc[foo_rows], 24)
+
+
+def test_flat_profile_totals():
+    t = fig1_trace()
+    fp = t.flat_profile()
+    d = dict(zip(fp[NAME], fp["time.exc"]))
+    assert d["main()"] == pytest.approx(152)   # 2 procs × 76
+    assert d["baz()"] == pytest.approx(20)
+
+
+def test_time_profile_conserves_time():
+    t = fig1_trace()
+    tp = t.time_profile(num_bins=8)
+    func_cols = [c for c in tp.columns if c not in ("bin_start", "bin_end")]
+    total = sum(np.asarray(tp[c]).sum() for c in func_cols)
+    assert total == pytest.approx(200)         # 2 procs × 100 ns span
+
+
+def test_comm_ops():
+    t = fig1_trace()
+    cm = t.comm_matrix()
+    assert cm[0, 1] == 1000 and cm[1, 0] == 0
+    counts, _ = t.message_histogram(bins=4)
+    assert counts.sum() == 1
+    byp = t.comm_by_process()
+    assert byp["sent"][0] == 1000 and byp["received"][1] == 1000
+    cmn = t.comm_matrix(output="count")
+    assert cmn[0, 1] == 1
+
+
+def test_filter_and_slice():
+    t = fig1_trace()
+    sub = t.filter(Filter(NAME, "==", "baz()"))
+    assert len(sub) == 4
+    assert len(t.slice_time(0, 6)) > 0
+    assert t.filter_processes([0]).num_processes == 1
+
+
+def test_cct_paths():
+    t = fig1_trace()
+    cct = t.cct
+    names = {n.name for n in cct.nodes}
+    assert {"main()", "foo()", "baz()"} <= names
+    baz = [n for n in cct.nodes if n.name == "baz()"]
+    assert len(baz) == 1                       # unified across processes
+    assert baz[0].path() == ["main()", "foo()", "baz()"]
+
+
+def test_idle_and_imbalance():
+    t = fig1_trace()
+    idle = t.idle_time()
+    d = dict(zip(idle[PROC].tolist(), idle["idle_time"]))
+    assert d[1] == pytest.approx(3)            # MPI_Recv span
+    li = t.load_imbalance(num_processes=1)
+    assert "time.exc.imbalance" in li.columns
