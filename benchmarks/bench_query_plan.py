@@ -1,0 +1,178 @@
+"""Fused lazy query plans vs the eager filter chain (ISSUE 1 acceptance).
+
+A 3-step data-reduction chain (call-interval window → trimmed time-window
+filter → process restriction) followed by ``flat_profile`` on a ~1M-event
+synthetic trace, timed three ways:
+
+* **seed eager path**: what the seed Trace methods did — every step
+  materializes a sub-frame and strips all derived columns, so enter/leave
+  matching re-runs at each structure-dependent step and once more for the
+  profile (3× total here);
+* **current eager methods**: the same chain through today's Trace methods,
+  which are one-step query plans (structure is remapped, not recomputed);
+* **lazy plan** (``trace.query()``): masks fuse into one application, the
+  plan materializes a single sub-frame, and structure is computed exactly
+  once.
+
+Acceptance: lazy ≥ 2× over the seed path with byte-identical profiles.
+Also reports a pure 3-filter fusion chain (no structure dependence).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Filter, Trace, time_window_filter
+from repro.core.constants import ET, NAME, PROC, TS
+from repro.core.frame import Categorical, EventFrame
+from repro.core.query import _overlap_mask
+
+_FUNCS = ("compute()", "exchange()", "reduce()", "io()", "solve()")
+
+
+def synth_trace(n_events: int = 1_000_000, nprocs: int = 32,
+                seed: int = 0) -> EventFrame:
+    """Vectorized balanced call forest: per process, repeated
+    outer(inner) call pairs over a handful of function names."""
+    rng = np.random.default_rng(seed)
+    per_proc = max(n_events // (4 * nprocs), 1)   # 4 events per iteration
+    n = per_proc * 4 * nprocs
+    # per-process pattern: Enter f / Enter g / Leave g / Leave f
+    et = np.tile(np.asarray([0, 0, 1, 1], np.int32), per_proc * nprocs)
+    outer = rng.integers(0, len(_FUNCS), size=per_proc * nprocs)
+    inner = rng.integers(0, len(_FUNCS), size=per_proc * nprocs)
+    name_codes = np.empty(n, np.int32)
+    name_codes[0::4] = outer
+    name_codes[1::4] = inner
+    name_codes[2::4] = inner
+    name_codes[3::4] = outer
+    proc = np.repeat(np.arange(nprocs, dtype=np.int64), per_proc * 4)
+    # strictly increasing per-process clocks with jittered durations
+    dur = rng.integers(1, 1000, size=per_proc * nprocs * 4).astype(np.int64)
+    ts = np.empty(n, np.int64)
+    for p in range(nprocs):
+        lo, hi = p * per_proc * 4, (p + 1) * per_proc * 4
+        ts[lo:hi] = np.cumsum(dur[lo:hi])
+    ev = EventFrame({
+        TS: ts,
+        ET: Categorical.from_codes(et, np.asarray(["Enter", "Leave"])),
+        NAME: Categorical.from_codes(name_codes, np.asarray(_FUNCS)),
+        PROC: proc,
+    })
+    return ev
+
+
+def _seed_select(trace, mask):
+    # the seed's data-reduction strategy: materialize + strip derived columns
+    return Trace(Trace._strip_structure(trace.events.mask(mask)),
+                 definitions=trace.definitions, label=trace.label)
+
+
+def _chain_seed(trace, w1, w2, procs):
+    """The seed eager path: strip-and-recompute at every step (with the
+    fixed call-interval trim semantics, for byte-identical outputs)."""
+    trace._ensure_structure()
+    t1 = _seed_select(trace, _overlap_mask(trace, *w1))
+    t1._ensure_structure()                      # recompute #2
+    t2 = _seed_select(t1, _overlap_mask(t1, *w2))
+    t3 = _seed_select(
+        t2, np.isin(np.asarray(t2.events[PROC], np.int64), procs))
+    return t3.flat_profile()                    # recompute #3
+
+
+def _chain_eager(trace, w1, w2, procs):
+    return (trace.slice_time(*w1)
+            .filter(time_window_filter(*w2, trim="overlap"))
+            .filter_processes(procs)
+            .flat_profile())
+
+
+def _chain_lazy(trace, w1, w2, procs):
+    return (trace.query()
+            .slice_time(*w1)
+            .filter(time_window_filter(*w2, trim="overlap"))
+            .restrict_processes(procs)
+            .flat_profile())
+
+
+def _filters_eager(trace, f1, f2, f3):
+    return trace.filter(f1).filter(f2).filter(f3).flat_profile()
+
+
+def _filters_lazy(trace, f1, f2, f3):
+    return trace.query().filter(f1).filter(f2).filter(f3).flat_profile()
+
+
+def _time(fn, ev_master, reps=3):
+    best, out = np.inf, None
+    for _ in range(reps):
+        trace = Trace(ev_master.copy())     # fresh: no cached structure
+        t0 = time.perf_counter()
+        out = fn(trace)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _identical(fa, fb) -> bool:
+    if list(fa.columns) != list(fb.columns):
+        return False
+    for c in fa.columns:
+        a, b = np.asarray(fa[c]), np.asarray(fb[c])
+        same = (np.array_equal(a, b, equal_nan=True)
+                if a.dtype.kind == "f" else np.array_equal(a, b))
+        if not same:
+            return False
+    return True
+
+
+def bench(n_events: int = 1_000_000, reps: int = 5) -> dict:
+    ev = synth_trace(n_events)
+    ts = np.asarray(ev[TS], np.float64)
+    lo, hi = float(ts.min()), float(ts.max())
+    w1 = (lo + 0.05 * (hi - lo), lo + 0.95 * (hi - lo))
+    w2 = (lo + 0.10 * (hi - lo), lo + 0.90 * (hi - lo))
+    procs = list(range(24))
+
+    t_seed, fp_seed = _time(
+        lambda t: _chain_seed(t, w1, w2, procs), ev, reps)
+    t_eager, fp_eager = _time(
+        lambda t: _chain_eager(t, w1, w2, procs), ev, reps)
+    t_lazy, fp_lazy = _time(
+        lambda t: _chain_lazy(t, w1, w2, procs), ev, reps)
+    identical = _identical(fp_seed, fp_lazy) and _identical(fp_eager, fp_lazy)
+
+    f1 = Filter(NAME, "not-in", ["io()"])
+    f2 = Filter(TS, "between", w1)
+    f3 = Filter(PROC, "<", 24)
+    tf_eager, ff_eager = _time(
+        lambda t: _filters_eager(t, f1, f2, f3), ev, reps)
+    tf_lazy, ff_lazy = _time(
+        lambda t: _filters_lazy(t, f1, f2, f3), ev, reps)
+
+    out = {
+        "events": len(ev),
+        "window_chain": {
+            "seed_eager_s": round(t_seed, 4),
+            "eager_methods_s": round(t_eager, 4),
+            "lazy_s": round(t_lazy, 4),
+            "speedup_vs_seed": round(t_seed / t_lazy, 2),
+            "speedup_vs_eager_methods": round(t_eager / t_lazy, 2),
+            "identical_results": bool(identical),
+        },
+        "pure_filter_chain": {
+            "eager_s": round(tf_eager, 4),
+            "lazy_s": round(tf_lazy, 4),
+            "speedup": round(tf_eager / tf_lazy, 2),
+            "identical_results": bool(_identical(ff_eager, ff_lazy)),
+        },
+    }
+    out["acceptance_2x"] = bool(
+        out["window_chain"]["speedup_vs_seed"] >= 2.0 and identical)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench(), indent=1))

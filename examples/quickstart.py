@@ -1,15 +1,19 @@
-"""Quickstart (paper Fig. 1): read a CSV trace, inspect the events frame,
-and run the first analysis ops.
+"""Quickstart (paper Fig. 1 + §IV-E): open a trace, chain a lazy query,
+and extend the analysis API through the op registry.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import io
+import os
 import sys
+import tempfile
+
+import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core.trace import Trace  # noqa: E402
+from repro.core import Filter, Trace, register_op, list_ops  # noqa: E402
+from repro.core.constants import ENTER, ET, EXC, NAME  # noqa: E402
 
 FIG1 = """Timestamp (s), Event Type, Name, Process
 0, Enter, main(), 0
@@ -30,15 +34,70 @@ FIG1 = """Timestamp (s), Event Type, Name, Process
 95, Leave, main(), 1
 """
 
-foo_bar = Trace.from_csv(io.StringIO(FIG1))
+# ---------------------------------------------------------------------------
+# 1. Open a trace.  Trace.open sniffs the format (CSV / JSONL / Chrome /
+#    OTF2-structured JSON / HLO text) via the reader registry — no need to
+#    know which from_* constructor matches the file.
+# ---------------------------------------------------------------------------
+with tempfile.NamedTemporaryFile("w", suffix=".data", delete=False) as f:
+    f.write(FIG1)
+    path = f.name
+
+foo_bar = Trace.open(path)          # format="auto" sniffs the CSV header
+os.unlink(path)
+
 print("events frame (paper Fig. 1):")
 print(foo_bar.events[["Timestamp (ns)", "Event Type", "Name", "Process"]])
 
+# ---------------------------------------------------------------------------
+# 2. Eager one-liners still work — every Trace method is a one-step plan.
+# ---------------------------------------------------------------------------
 print("\nflat profile (paper §IV-B):")
 print(foo_bar.flat_profile())
 
 print("\ntime profile, 4 bins:")
 print(foo_bar.time_profile(num_bins=4))
+
+# ---------------------------------------------------------------------------
+# 3. Chained lazy queries (paper §IV-E).  Nothing executes until a terminal
+#    op: the three selections below fuse into ONE mask application, derived
+#    structure is computed once and remapped through the selection, and
+#    flat_profile's prerequisites are materialized exactly once.
+# ---------------------------------------------------------------------------
+query = (foo_bar.query()
+         .slice_time(0, 30e9)                       # call-interval window
+         .filter(Filter(NAME, "not-in", ["MPI_Send", "MPI_Recv"]))
+         .restrict_processes([0, 1]))
+print("\nquery plan (nothing has run yet):")
+print(query.explain())
+
+print("\nfused-plan flat profile:")
+print(query.flat_profile())
+
+# ---------------------------------------------------------------------------
+# 4. Extending the API (the paper's §VII extensibility claim): register a
+#    custom analysis with its prerequisites; it becomes a terminal op on
+#    every query — and the engine materializes the prerequisites for you.
+# ---------------------------------------------------------------------------
+
+
+@register_op("busiest_function", needs_structure=True)
+def busiest_function(trace, metric=EXC):
+    """Name of the function with the largest total exclusive time."""
+    ev = trace.events
+    ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
+    prof = ent.groupby_agg(NAME, {metric: "sum"})
+    vals = np.nan_to_num(np.asarray(prof[metric], np.float64))
+    return str(prof[NAME][int(np.argmax(vals))])
+
+
+print("\ncustom registered op, chained like a built-in:")
+print("  busiest overall:", foo_bar.query().busiest_function())
+print("  busiest under 30s, no MPI:",
+      query.busiest_function())
+
+print("\nregistered analysis ops:")
+print(" ", ", ".join(list_ops()))
 
 print("\ncalling context tree:")
 for node in foo_bar.cct.nodes[1:]:

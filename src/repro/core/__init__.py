@@ -13,11 +13,15 @@ from .constants import (ENTER, ET, EXC, INC, INSTANT, LEAVE, MPI_RECV,
 from .filters import Filter, time_window_filter
 from .frame import Categorical, EventFrame, concat
 from .ops_patterns import mass, matrix_profile
+from .query import TraceQuery, scan
+from .registry import (list_ops, list_readers, register_op, register_reader)
 from .trace import Trace
 
 __all__ = [
-    "Trace", "EventFrame", "Categorical", "concat", "Filter",
-    "time_window_filter", "CCT", "CCTNode", "mass", "matrix_profile",
+    "Trace", "TraceQuery", "scan", "EventFrame", "Categorical", "concat",
+    "Filter", "time_window_filter", "CCT", "CCTNode", "mass",
+    "matrix_profile", "register_op", "register_reader", "list_ops",
+    "list_readers",
     "TS", "ET", "NAME", "PROC", "THREAD", "ENTER", "LEAVE", "INSTANT",
     "INC", "EXC", "MSG_SIZE", "PARTNER", "TAG", "MPI_SEND", "MPI_RECV",
 ]

@@ -29,6 +29,10 @@ INC = "time.inc"
 EXC = "time.exc"
 CCT_NODE = "_cct_node"
 
+# every column invalidated by row selection (single source of truth for the
+# strip/remap paths in trace.py and query.py)
+DERIVED_COLUMNS = (MATCH, MATCH_TS, DEPTH, PARENT, INC, EXC, CCT_NODE)
+
 # default predicates
 DEFAULT_COMM_PREFIXES = (
     "MPI_", "mpi_", "nccl", "Nccl", "all-gather", "all-reduce", "reduce-scatter",

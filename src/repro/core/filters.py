@@ -11,14 +11,17 @@ timestamp column), or strictly inside with ``trim="within"``.
 
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .constants import TS
+from .constants import PROC, TS
 from .frame import Categorical, EventFrame
 
 _OPS = ("==", "!=", "<", "<=", ">", ">=", "in", "not-in", "between")
+
+# inclusive [lo, hi] bound on an integer column; None = unconstrained
+Bounds = Optional[Tuple[float, float]]
 
 
 class Filter:
@@ -36,6 +39,63 @@ class Filter:
 
     def __invert__(self) -> "Filter":
         return _Not(self)
+
+    # -- introspection (used by the query planner) -------------------------
+    def columns(self) -> Set[str]:
+        """Column names this filter reads — lets the planner decide whether a
+        selection can touch derived structure columns."""
+        return {self.field} if self.field is not None else set()
+
+    def process_bounds(self) -> Bounds:
+        """Inclusive [lo, hi] bound on the Process values that can pass, or
+        None when unconstrained.  Conservative: anything this filter cannot
+        prove stays None.  The parallel reader uses it to skip whole shards
+        before parsing (predicate pushdown, paper §VI)."""
+        if self.field != PROC:
+            return None
+        op, val = self.operator, self.value
+        try:
+            if op == "==":
+                v = float(val)
+                return (v, v)
+            if op == "in":
+                vs = [float(v) for v in val]
+                return (min(vs), max(vs)) if vs else (1.0, 0.0)
+            if op == "between":
+                lo, hi = val
+                return (float(lo), float(hi))
+            if op == "<":
+                v = float(val)
+                # process ids are integers: the largest passing id
+                return (-np.inf, v - 1 if v.is_integer() else np.floor(v))
+            if op == "<=":
+                return (-np.inf, float(val))
+            if op == ">":
+                v = float(val)
+                return (v + 1 if v.is_integer() else np.ceil(v), np.inf)
+            if op == ">=":
+                return (float(val), np.inf)
+        except (TypeError, ValueError):
+            return None
+        return None  # !=, not-in: exclusions don't bound the domain
+
+    @property
+    def trim(self) -> Optional[str]:
+        """Trim semantics for time-window filters (see time_window_filter):
+        "overlap" keeps events whose whole call interval overlaps the window
+        (needs matching columns), "within" keeps events whose own timestamp
+        falls inside.  None for non-window filters."""
+        t = getattr(self, "_trim", None)
+        if t is not None and self.operator == "between" and self.field == TS:
+            return t
+        return None
+
+    def window(self) -> Optional[Tuple[float, float]]:
+        """(start, end) when this is a time-window filter, else None."""
+        if self.operator == "between" and self.field == TS:
+            lo, hi = self.value
+            return float(lo), float(hi)
+        return None
 
     # -- evaluation --------------------------------------------------------
     def mask(self, events: EventFrame) -> np.ndarray:
@@ -85,6 +145,17 @@ class _And(Filter):
     def mask(self, events):
         return self.a.mask(events) & self.b.mask(events)
 
+    def columns(self):
+        return self.a.columns() | self.b.columns()
+
+    def process_bounds(self):
+        ba, bb = self.a.process_bounds(), self.b.process_bounds()
+        if ba is None:
+            return bb
+        if bb is None:
+            return ba
+        return (max(ba[0], bb[0]), min(ba[1], bb[1]))
+
     def __repr__(self):
         return f"({self.a!r} & {self.b!r})"
 
@@ -96,6 +167,15 @@ class _Or(Filter):
 
     def mask(self, events):
         return self.a.mask(events) | self.b.mask(events)
+
+    def columns(self):
+        return self.a.columns() | self.b.columns()
+
+    def process_bounds(self):
+        ba, bb = self.a.process_bounds(), self.b.process_bounds()
+        if ba is None or bb is None:
+            return None
+        return (min(ba[0], bb[0]), max(ba[1], bb[1]))
 
     def __repr__(self):
         return f"({self.a!r} | {self.b!r})"
@@ -109,6 +189,12 @@ class _Not(Filter):
     def mask(self, events):
         return ~self.a.mask(events)
 
+    def columns(self):
+        return self.a.columns()
+
+    def process_bounds(self):
+        return None  # complement of a bound is unbounded
+
     def __repr__(self):
         return f"~{self.a!r}"
 
@@ -116,10 +202,14 @@ class _Not(Filter):
 def time_window_filter(start: float, end: float, trim: str = "overlap") -> Filter:
     """Convenience: filter to a time window.
 
-    ``overlap`` keeps every event with timestamp in [start, end]; callers who
-    need call-interval overlap semantics should first ensure matching columns
-    and use Trace.slice_time which extends the window per matched pair.
+    ``trim="overlap"`` (default) keeps every event whose *call interval*
+    overlaps [start, end] — Trace.filter and the query planner materialize
+    enter/leave matching to extend the window per matched pair, exactly like
+    ``Trace.slice_time``.  ``trim="within"`` keeps only events whose own
+    timestamp falls inside the window.
     """
+    if trim not in ("overlap", "within"):
+        raise ValueError(f'trim must be "overlap" or "within", got {trim!r}')
     f = Filter(TS, "between", (start, end))
     f._trim = trim
     return f

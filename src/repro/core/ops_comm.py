@@ -10,6 +10,7 @@ from .constants import (DEFAULT_COMM_PREFIXES, ENTER, ET, INC, LEAVE, MPI_RECV,
                         MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, THREAD, TS)
 from .frame import EventFrame
 from .intervals import merge_intervals
+from .registry import register_op
 
 __all__ = [
     "comm_matrix", "message_histogram", "comm_by_process", "comm_over_time",
@@ -24,6 +25,7 @@ def _sends(trace) -> EventFrame:
     return ev.mask(ev.cat(NAME).mask_eq(MPI_SEND))
 
 
+@register_op("comm_matrix", needs_messages=True)
 def comm_matrix(trace, output: str = "size") -> np.ndarray:
     """nprocs × nprocs matrix of bytes (or message counts) sent i→j (§IV-C)."""
     s = _sends(trace)
@@ -38,6 +40,7 @@ def comm_matrix(trace, output: str = "size") -> np.ndarray:
     return mat
 
 
+@register_op("message_histogram")
 def message_histogram(trace, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
     """Distribution of message sizes (§IV-C, Fig. 4). Returns (counts, edges)."""
     s = _sends(trace)
@@ -47,6 +50,7 @@ def message_histogram(trace, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
     return np.histogram(sizes, bins=bins)
 
 
+@register_op("comm_by_process")
 def comm_by_process(trace, output: str = "size") -> EventFrame:
     """Total volume (or count) sent and received per process (§IV-C)."""
     s = _sends(trace)
@@ -64,6 +68,7 @@ def comm_by_process(trace, output: str = "size") -> EventFrame:
                        "received": recv, "total": sent + recv})
 
 
+@register_op("comm_over_time")
 def comm_over_time(trace, num_bins: int = 32, output: str = "size"
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Message volume/count per time bin (§IV-C). Returns (values, edges)."""
@@ -96,6 +101,7 @@ def comm_name_mask(events: EventFrame,
     return is_comm_cat[cat.codes]
 
 
+@register_op("comm_comp_breakdown", needs_structure=True)
 def comm_comp_breakdown(trace, comm_matcher: Optional[Callable[[str], bool]] = None
                         ) -> EventFrame:
     """Per-process split of wall time into non-overlapped computation,

@@ -26,6 +26,7 @@ import numpy as np
 from .constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND, NAME,
                         PROC, TS)
 from .frame import EventFrame
+from .registry import register_op
 
 __all__ = ["logical_steps", "calculate_lateness", "critical_path_analysis"]
 
@@ -47,6 +48,7 @@ def _op_rows(trace) -> np.ndarray:
     return np.nonzero(sel)[0]
 
 
+@register_op("logical_steps", needs_structure=True, needs_messages=True)
 def logical_steps(trace) -> EventFrame:
     """Logical step per communication operation.
 
@@ -117,6 +119,7 @@ def logical_steps(trace) -> EventFrame:
     })
 
 
+@register_op("calculate_lateness", needs_structure=True, needs_messages=True)
 def calculate_lateness(trace) -> EventFrame:
     """Lateness per communication operation (Isaacs et al. [27])."""
     ops = logical_steps(trace)
@@ -132,6 +135,7 @@ def calculate_lateness(trace) -> EventFrame:
     return out
 
 
+@register_op("lateness_by_process", needs_structure=True, needs_messages=True)
 def lateness_by_process(trace) -> EventFrame:
     """Max lateness per process (paper Fig. 11, right)."""
     ops = calculate_lateness(trace)
@@ -146,6 +150,7 @@ def lateness_by_process(trace) -> EventFrame:
     return EventFrame({PROC: order.astype(np.int32), "max_lateness": mx[order]})
 
 
+@register_op("critical_path_analysis", needs_structure=True, needs_messages=True)
 def critical_path_analysis(trace, max_hops: int = 1_000_000) -> List[EventFrame]:
     """Backward-trace the critical path; returns [path] as an EventFrame of
     events ordered along the path (earliest first)."""

@@ -18,6 +18,7 @@ import numpy as np
 
 from .constants import ENTER, ET, EXC, NAME, PROC, TS
 from .frame import EventFrame
+from .registry import register_op
 
 __all__ = ["mass", "matrix_profile", "activity_series", "detect_pattern"]
 
@@ -78,6 +79,7 @@ def matrix_profile(series: np.ndarray, m: int, exclusion: Optional[int] = None
     return prof, pidx
 
 
+@register_op("activity_series", needs_structure=True)
 def activity_series(trace, num_bins: int = 512, process: Optional[int] = None
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Binned total exclusive time (all functions) — the time-series signal
@@ -96,6 +98,7 @@ def activity_series(trace, num_bins: int = 512, process: Optional[int] = None
     return series, edges
 
 
+@register_op("detect_pattern", needs_structure=True)
 def detect_pattern(trace, start_event: Optional[str] = None, num_bins: int = 512,
                    process: int = 0, max_patterns: int = 64,
                    min_similarity: float = 0.8) -> List[EventFrame]:

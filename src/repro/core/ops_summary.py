@@ -12,8 +12,10 @@ import numpy as np
 
 from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, NAME, PROC, TS)
 from .frame import Categorical, EventFrame
+from .registry import register_op
 
 
+@register_op("flat_profile", needs_structure=True)
 def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = NAME,
                  per_process: bool = False) -> EventFrame:
     """Total metric per function, aggregated over the whole trace (§IV-B)."""
@@ -29,6 +31,7 @@ def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = N
     return prof.take(order)
 
 
+@register_op("time_profile", needs_structure=True)
 def time_profile(trace, num_bins: int = 32, metric: str = EXC,
                  normalized: bool = False, backend: str = "numpy") -> EventFrame:
     """Flat profile over time (§IV-B): bins × functions matrix.
@@ -111,6 +114,7 @@ def _exact_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
     return np.maximum(np.diff(C, axis=0), 0.0)
 
 
+@register_op("load_imbalance", needs_structure=True)
 def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
                    top_functions: Optional[int] = None) -> EventFrame:
     """Per-function imbalance = max over processes / mean over processes (§IV-D)."""
@@ -142,6 +146,7 @@ def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
     })
 
 
+@register_op("idle_time", needs_structure=True)
 def idle_time(trace, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
               k: Optional[int] = None) -> EventFrame:
     """Total idle (wait/recv) time per process (§IV-D), sorted descending."""

@@ -1,0 +1,198 @@
+"""Pluggable op / reader registries — the extensibility backbone of the lazy
+query layer (paper §IV-E, §VII: Pipit's claim is a *programmatic, extensible*
+analysis API).
+
+Two registries live here:
+
+* **Op registry** — every §IV analysis operation registers itself with its
+  declared prerequisites (``needs_structure``: enter/leave matching, parents,
+  inc/exc; ``needs_messages``: send/recv matching).  The query engine
+  (:mod:`repro.core.query`) reads these declarations to materialize each
+  prerequisite *exactly once per plan* and users register custom analyses the
+  same way the built-ins do::
+
+      from repro.core.registry import register_op
+
+      @register_op("send_count", needs_messages=True)
+      def send_count(trace):
+          ...
+
+      trace.query().filter(f).send_count()   # chains like any built-in
+
+* **Reader registry** — every trace format registers a reader plus an
+  optional content sniffer and an optional per-shard process hint.
+  ``Trace.open(path, format="auto")`` resolves the format here, and the
+  parallel driver uses the shard hints to *skip shards before parsing* when
+  the query plan restricts processes (predicate pushdown into readers).
+
+This module is intentionally dependency-free (no imports from trace/query)
+so both layers and all readers can import it without cycles.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "OpSpec", "register_op", "get_op", "list_ops",
+    "ReaderSpec", "register_reader", "get_reader", "list_readers",
+    "resolve_reader", "sniff_format", "rank_shard_procs",
+]
+
+
+# ---------------------------------------------------------------------------
+# op registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OpSpec:
+    """A registered analysis operation.
+
+    ``fn(trace, *args, **kwargs)`` runs with the declared prerequisites
+    already materialized on ``trace``.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    needs_structure: bool = False
+    needs_messages: bool = False
+
+
+_OP_REGISTRY: Dict[str, OpSpec] = {}
+
+
+def register_op(name: Optional[str] = None, *, needs_structure: bool = False,
+                needs_messages: bool = False) -> Callable:
+    """Decorator registering an analysis op usable from ``TraceQuery``.
+
+    Re-registering a name overwrites the previous spec (last one wins), so
+    user code can shadow a built-in analysis.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        op_name = name or fn.__name__
+        _OP_REGISTRY[op_name] = OpSpec(op_name, fn, needs_structure,
+                                       needs_messages)
+        return fn
+
+    return deco
+
+
+def get_op(name: str) -> Optional[OpSpec]:
+    return _OP_REGISTRY.get(name)
+
+
+def list_ops() -> List[str]:
+    return sorted(_OP_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# reader registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ReaderSpec:
+    """A registered trace-format reader.
+
+    ``read(path, **kw)`` must return a Trace.  ``sniff(path, head)`` gets the
+    path and the first few KB of file text and returns True when the content
+    is this format.  ``shard_procs(path)`` optionally returns the set of
+    process ids a shard file contains (or None when unknown) — the parallel
+    driver uses it to skip shards a process-restricted plan cannot need.
+    """
+
+    name: str
+    read: Callable[..., Any]
+    extensions: Tuple[str, ...] = ()
+    sniff: Optional[Callable[[str, str], bool]] = None
+    shard_procs: Optional[Callable[[str], Optional[Set[int]]]] = None
+    priority: int = 0  # higher sniffs first
+
+
+_READER_REGISTRY: Dict[str, ReaderSpec] = {}
+
+
+def register_reader(name: str, *, extensions: Sequence[str] = (),
+                    sniff: Optional[Callable[[str, str], bool]] = None,
+                    shard_procs: Optional[Callable[[str], Optional[Set[int]]]] = None,
+                    priority: int = 0) -> Callable:
+    """Decorator registering a reader callable under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        _READER_REGISTRY[name] = ReaderSpec(
+            name, fn, tuple(e.lower() for e in extensions), sniff,
+            shard_procs, priority)
+        return fn
+
+    return deco
+
+
+def get_reader(name: str) -> ReaderSpec:
+    try:
+        return _READER_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown trace format {name!r}; registered: {list_readers()}"
+        ) from None
+
+
+def list_readers() -> List[str]:
+    return sorted(_READER_REGISTRY)
+
+
+def _read_head(path: str, nbytes: int = 8192) -> str:
+    try:
+        with open(path, "r", errors="replace") as f:
+            return f.read(nbytes)
+    except (OSError, IsADirectoryError):
+        return ""
+
+
+def sniff_format(path) -> Optional[str]:
+    """Guess the registered format of ``path`` from its name and content."""
+    path = os.fspath(path)
+    specs = sorted(_READER_REGISTRY.values(), key=lambda s: -s.priority)
+    if os.path.isdir(path):
+        for spec in specs:
+            if spec.sniff and spec.sniff(path, ""):
+                return spec.name
+        return None
+    low = path.lower()
+    ext_hit = [s for s in specs if any(low.endswith(e) for e in s.extensions)]
+    head = _read_head(path)
+    # content sniff wins over extension: ".json" is shared by three formats
+    for spec in specs:
+        if spec.sniff and spec.sniff(path, head):
+            return spec.name
+    if ext_hit:
+        return ext_hit[0].name
+    return None
+
+
+_RANK_RE = re.compile(r"^rank[_\-.](\d+)\.")
+
+
+def rank_shard_procs(path: str) -> Optional[Set[int]]:
+    """Default shard hint: per-location shard files named ``rank_<p>.*``
+    (the layout split_jsonl_by_process writes) contain exactly one process.
+    Anchored to the whole stem — a file merely *containing* "rank" (e.g.
+    ``lowrank_2.csv``) gets no hint and is never skipped."""
+    m = _RANK_RE.match(os.path.basename(path))
+    return {int(m.group(1))} if m else None
+
+
+def resolve_reader(path, format: str = "auto") -> ReaderSpec:
+    """Resolve ``format`` (or sniff when "auto") to a ReaderSpec.
+
+    ``path`` may be anything os.fspath accepts (str, pathlib.Path, ...).
+    """
+    if format and format != "auto":
+        return get_reader(format)
+    name = sniff_format(path)
+    if name is None:
+        raise ValueError(f"cannot determine trace format of {path!r}; "
+                         f"pass format= one of {list_readers()}")
+    return get_reader(name)

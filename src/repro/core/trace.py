@@ -4,7 +4,13 @@ A Trace wraps the columnar events EventFrame plus lazily-derived structure
 (enter/leave matching, call depth, caller/callee links, inclusive/exclusive
 metrics, message matching, the unified CCT) and exposes every §IV analysis
 operation as a method.  Readers live in :mod:`repro.readers` and are
-re-exported here as ``Trace.from_*`` constructors.
+re-exported here as ``Trace.from_*`` constructors; ``Trace.open`` resolves
+any registered format by sniffing (see :mod:`repro.core.registry`).
+
+Analysis methods and the data-reduction methods (``filter``, ``slice_time``,
+``filter_processes``) are thin wrappers over one-step lazy query plans
+(:mod:`repro.core.query`); chain them explicitly via :meth:`Trace.query` to
+fuse selections and reuse derived structure across the chain.
 """
 
 from __future__ import annotations
@@ -13,12 +19,16 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import ops_comm, ops_logical, ops_patterns, ops_summary, structure
+# ops_comm/ops_logical/ops_patterns are load-bearing imports even where
+# unreferenced below: importing them runs their @register_op decorators,
+# which populate the registry every TraceQuery terminal op resolves through
+from . import ops_comm, ops_logical, ops_patterns, ops_summary, structure  # noqa: F401
 from .cct import CCT
 from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, LEAVE, MATCH,
                         MATCH_TS, NAME, PARENT, PROC, TS)
 from .filters import Filter
 from .frame import EventFrame
+from .query import TraceQuery, _strip as _strip_derived
 
 __all__ = ["Trace"]
 
@@ -67,6 +77,25 @@ class Trace:
     @classmethod
     def from_events(cls, events: EventFrame, label: Optional[str] = None) -> "Trace":
         return cls(events, label=label)
+
+    @classmethod
+    def open(cls, path, format: str = "auto", **kw) -> "Trace":
+        """Open a trace of any registered format.
+
+        ``format="auto"`` sniffs the on-disk content (CSV header, JSONL event
+        keys, Chrome ``traceEvents`` envelope, OTF2-structured archives —
+        file or directory — and HLO text).  A list of paths is read as
+        per-location shards through the parallel driver.
+        """
+        import os
+        from .. import readers  # noqa: F401 — populates the reader registry
+        from .registry import resolve_reader
+        if isinstance(path, (list, tuple)):
+            from ..readers.parallel import read_parallel
+            return read_parallel([os.fspath(p) for p in path], kind=format,
+                                 **kw)
+        path = os.fspath(path)
+        return resolve_reader(path, format).read(path, **kw)
 
     # ------------------------------------------------------------------
     # basics
@@ -131,67 +160,75 @@ class Trace:
         return self._cct
 
     # ------------------------------------------------------------------
-    # §IV-B summary ops
+    # lazy query plans (§IV-E redesign)
+    # ------------------------------------------------------------------
+    def query(self) -> TraceQuery:
+        """Start a lazy, composable query plan over this trace.
+
+        Chained selections fuse into one mask; derived structure is remapped
+        instead of recomputed when the selection keeps call pairs intact;
+        analysis ops registered in :mod:`repro.core.registry` are terminal
+        methods on the returned query.
+        """
+        return TraceQuery.from_trace(self)
+
+    # ------------------------------------------------------------------
+    # §IV-B summary ops — thin wrappers over one-step query plans
     # ------------------------------------------------------------------
     def flat_profile(self, metrics: Sequence[str] = (EXC,), per_process: bool = False,
                      groupby_column: str = NAME) -> EventFrame:
-        self._ensure_structure()
-        return ops_summary.flat_profile(self, metrics=metrics, per_process=per_process,
-                                        groupby_column=groupby_column)
+        return self.query().run("flat_profile", metrics=metrics,
+                                per_process=per_process,
+                                groupby_column=groupby_column)
 
     def time_profile(self, num_bins: int = 32, metric: str = EXC,
                      normalized: bool = False, backend: str = "numpy") -> EventFrame:
-        self._ensure_structure()
-        return ops_summary.time_profile(self, num_bins=num_bins, metric=metric,
-                                        normalized=normalized, backend=backend)
+        return self.query().run("time_profile", num_bins=num_bins, metric=metric,
+                                normalized=normalized, backend=backend)
 
     # ------------------------------------------------------------------
     # §IV-C communication ops
     # ------------------------------------------------------------------
     def comm_matrix(self, output: str = "size") -> np.ndarray:
-        self._ensure_messages()
-        return ops_comm.comm_matrix(self, output=output)
+        return self.query().run("comm_matrix", output=output)
 
     def message_histogram(self, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
-        return ops_comm.message_histogram(self, bins=bins)
+        return self.query().run("message_histogram", bins=bins)
 
     def comm_by_process(self, output: str = "size") -> EventFrame:
-        return ops_comm.comm_by_process(self, output=output)
+        return self.query().run("comm_by_process", output=output)
 
     def comm_over_time(self, num_bins: int = 32, output: str = "size"):
-        return ops_comm.comm_over_time(self, num_bins=num_bins, output=output)
+        return self.query().run("comm_over_time", num_bins=num_bins, output=output)
 
     def comm_comp_breakdown(self, comm_matcher: Optional[Callable[[str], bool]] = None
                             ) -> EventFrame:
-        self._ensure_structure()
-        return ops_comm.comm_comp_breakdown(self, comm_matcher=comm_matcher)
+        return self.query().run("comm_comp_breakdown", comm_matcher=comm_matcher)
 
     # ------------------------------------------------------------------
     # §IV-D performance-issue ops
     # ------------------------------------------------------------------
     def load_imbalance(self, metric: str = EXC, num_processes: int = 5,
                        top_functions: Optional[int] = None) -> EventFrame:
-        self._ensure_structure()
-        return ops_summary.load_imbalance(self, metric=metric,
-                                          num_processes=num_processes,
-                                          top_functions=top_functions)
+        return self.query().run("load_imbalance", metric=metric,
+                                num_processes=num_processes,
+                                top_functions=top_functions)
 
     def idle_time(self, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
                   k: Optional[int] = None) -> EventFrame:
-        self._ensure_structure()
-        return ops_summary.idle_time(self, idle_functions=idle_functions, k=k)
+        return self.query().run("idle_time", idle_functions=idle_functions, k=k)
 
     def detect_pattern(self, start_event: Optional[str] = None, **kw) -> List[EventFrame]:
-        return ops_patterns.detect_pattern(self, start_event=start_event, **kw)
+        return self.query().run("detect_pattern", start_event=start_event, **kw)
 
     def calculate_lateness(self) -> EventFrame:
-        return ops_logical.calculate_lateness(self)
+        return self.query().run("calculate_lateness")
 
     def lateness_by_process(self) -> EventFrame:
-        return ops_logical.lateness_by_process(self)
+        return self.query().run("lateness_by_process")
 
     def critical_path_analysis(self) -> List[EventFrame]:
-        return ops_logical.critical_path_analysis(self)
+        return self.query().run("critical_path_analysis")
 
     @staticmethod
     def multirun_analysis(traces: Sequence["Trace"], metric: str = EXC,
@@ -201,41 +238,27 @@ class Trace:
         return ops_summary.multi_run_analysis(traces, metric=metric, top_n=top_n)
 
     # ------------------------------------------------------------------
-    # §IV-E data reduction
+    # §IV-E data reduction — one-step query plans (structure is remapped
+    # through the selection when call pairs stay intact)
     # ------------------------------------------------------------------
     def filter(self, f: Filter) -> "Trace":
-        sub = self.events.mask(f.mask(self.events))
-        out = Trace(self._strip_structure(sub), definitions=self.definitions,
-                    label=self.label)
-        return out
+        """Subset trace by a Filter.  Time-window filters built with
+        ``time_window_filter(..., trim="overlap")`` honor call-interval
+        overlap semantics (the whole call is kept when any part of it
+        overlaps the window)."""
+        return self.query().filter(f).collect()
 
     def slice_time(self, start: float, end: float, trim: str = "overlap") -> "Trace":
         """Events whose call interval overlaps [start, end] (default), or whose
         own timestamp falls inside with trim="within"."""
-        self._ensure_structure()
-        ev = self.events
-        ts = np.asarray(ev[TS], np.float64)
-        if trim == "within":
-            m = (ts >= start) & (ts <= end)
-        else:
-            mts = np.asarray(ev.column(MATCH_TS), np.float64)
-            lo = np.fmin(ts, mts)
-            hi = np.fmax(ts, mts)
-            lo = np.where(np.isnan(lo), ts, lo)
-            hi = np.where(np.isnan(hi), ts, hi)
-            m = (hi >= start) & (lo <= end)
-        return Trace(self._strip_structure(ev.mask(m)),
-                     definitions=self.definitions, label=self.label)
+        return self.query().slice_time(start, end, trim=trim).collect()
 
     def filter_processes(self, procs: Sequence[int]) -> "Trace":
-        m = np.isin(np.asarray(self.events[PROC], np.int64), np.asarray(list(procs)))
-        return Trace(self._strip_structure(self.events.mask(m)),
-                     definitions=self.definitions, label=self.label)
+        return self.query().restrict_processes(procs).collect()
 
-    @staticmethod
-    def _strip_structure(ev: EventFrame) -> EventFrame:
-        # row indices in derived columns are invalidated by row selection
-        return ev.drop(MATCH, MATCH_TS, "_depth", PARENT, INC, EXC, "_cct_node")
+    # row indices in derived columns are invalidated by row selection;
+    # single implementation shared with the query engine
+    _strip_structure = staticmethod(_strip_derived)
 
     # ------------------------------------------------------------------
     # visualization (delegates; matplotlib optional)

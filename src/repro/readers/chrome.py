@@ -18,11 +18,23 @@ import numpy as np
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
                               MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import Categorical, EventFrame
+from ..core.registry import register_reader
 from ..core.trace import Trace
 
 _ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
 
 
+def _sniff_chrome(path: str, head: str) -> bool:
+    h = head.lstrip()
+    if not h.startswith(("{", "[")):
+        return False
+    if '"traceEvents"' in head:
+        return True
+    return h.startswith("[") and '"ph"' in head
+
+
+@register_reader("chrome", extensions=(".json",), sniff=_sniff_chrome,
+                 priority=20)
 def read_chrome(path_or_buf, label: Optional[str] = None) -> Trace:
     if isinstance(path_or_buf, str):
         with open(path_or_buf) as f:

@@ -14,6 +14,7 @@ import numpy as np
 
 from ..core.constants import ET, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS
 from ..core.frame import Categorical, EventFrame
+from ..core.registry import rank_shard_procs, register_reader
 from ..core.trace import Trace
 
 _UNIT = {"(s)": 1e9, "(ms)": 1e6, "(us)": 1e3, "(ns)": 1.0}
@@ -36,6 +37,16 @@ def _canon_header(h: str):
     return _CANON.get(low, h), scale
 
 
+def _sniff_csv(path: str, head: str) -> bool:
+    line = head.splitlines()[0] if head else ""
+    if line.count(",") < 2:
+        return False
+    toks = [_canon_header(t)[0] for t in line.split(",")]
+    return TS in toks and (ET in toks or NAME in toks)
+
+
+@register_reader("csv", extensions=(".csv",), sniff=_sniff_csv,
+                 shard_procs=rank_shard_procs)
 def read_csv(path_or_buf, label: Optional[str] = None) -> Trace:
     if isinstance(path_or_buf, str):
         with open(path_or_buf) as f:

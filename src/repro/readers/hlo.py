@@ -35,9 +35,10 @@ from ..analysis.roofline import HW
 from ..core.constants import (ENTER, ET, LEAVE, MPI_RECV, MPI_SEND, MSG_SIZE,
                               NAME, PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import EventFrame
+from ..core.registry import register_reader
 from ..core.trace import Trace
 
-__all__ = ["read_hlo"]
+__all__ = ["read_hlo", "read_hlo_file"]
 
 _DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
 _OPKIND = re.compile(r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)?\s*([a-z][\w\-]*)\(")
@@ -76,6 +77,18 @@ def _dot_flops(line: str, shapes: Dict[str, tuple]) -> float:
             if ci < len(lhs):
                 k *= lhs[ci]
     return 2.0 * res * k
+
+
+def _sniff_hlo(path: str, head: str) -> bool:
+    return head.lstrip().startswith("HloModule")
+
+
+@register_reader("hlo", extensions=(".hlo", ".hlo.txt"), sniff=_sniff_hlo,
+                 priority=30)
+def read_hlo_file(path: str, **kw) -> Trace:
+    """Registry entry point: read an HLO text dump from a file path."""
+    with open(path) as f:
+        return read_hlo(f.read(), **kw)
 
 
 def read_hlo(hlo_text: str, *, n_procs: int = 8, label: Optional[str] = None,

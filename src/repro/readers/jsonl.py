@@ -15,12 +15,30 @@ import numpy as np
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MSG_SIZE, NAME,
                               PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import Categorical, EventFrame
+from ..core.registry import rank_shard_procs, register_reader
 from ..core.trace import Trace
 
 _ET_CODE = {ENTER: 0, LEAVE: 1, INSTANT: 2}
 _ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
 
 
+def _sniff_jsonl(path: str, head: str) -> bool:
+    for line in head.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if not line.startswith("{"):
+            return False
+        try:
+            d = json.loads(line)
+        except ValueError:
+            return False
+        return isinstance(d, dict) and "ts" in d
+    return False
+
+
+@register_reader("jsonl", extensions=(".jsonl",), sniff=_sniff_jsonl,
+                 shard_procs=rank_shard_procs, priority=10)
 def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
     if isinstance(path_or_buf, str):
         f = open(path_or_buf)

@@ -29,9 +29,16 @@ import numpy as np
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
                               MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import Categorical, EventFrame
+from ..core.registry import register_reader
 from ..core.trace import Trace
 
 _ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
+
+
+def _sniff_otf2j(path: str, head: str) -> bool:
+    if os.path.isdir(path):
+        return os.path.exists(os.path.join(path, "definitions.json"))
+    return '"definitions"' in head and '"strings"' in head
 
 
 def _stream_to_columns(loc: dict, events: List[list], strings: List[str],
@@ -123,6 +130,8 @@ def _decode_archive(doc: dict, label: Optional[str], locations_subset=None) -> T
     return Trace(ev, definitions=defs, label=label)
 
 
+@register_reader("otf2j", extensions=(".otf2.json",), sniff=_sniff_otf2j,
+                 priority=20)
 def read_otf2_json(path: str, label: Optional[str] = None,
                    locations_subset=None) -> Trace:
     label = label or path

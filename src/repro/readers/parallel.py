@@ -4,52 +4,107 @@ Trace archives are naturally sharded per location (OTF2 keeps one event
 stream per rank; our JSONL traces can be split the same way).  This driver
 fans a reader over shards with ``multiprocessing`` and concatenates the
 resulting frames — the paper's strategy for scaling trace ingest with cores.
+
+Format dispatch goes through the unified reader registry
+(:mod:`repro.core.registry`), so ``kind="auto"`` sniffs each shard and any
+user-registered format works here too.  When the caller (typically a lazy
+query plan, see :mod:`repro.core.query`) restricts processes, shards whose
+registered ``shard_procs`` hint proves they cannot contribute are *skipped
+before parsing* — predicate pushdown into the reader.
 """
 
 from __future__ import annotations
 
 import multiprocessing as mp
 import os
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional, Sequence, Set, Tuple
 
-from ..core.frame import concat
+import numpy as np
+
+from ..core.constants import ENTER, ET, INSTANT, LEAVE, NAME, PROC, TS
+from ..core.frame import Categorical, EventFrame, concat
+from ..core.registry import resolve_reader
 from ..core.trace import Trace
 
-__all__ = ["read_parallel", "split_jsonl_by_process"]
-
-_READERS = {}
+__all__ = ["read_parallel", "select_shards", "split_jsonl_by_process"]
 
 
-def _read_one(args):
-    kind, path = args
-    if kind == "jsonl":
-        from .jsonl import read_jsonl
-        return read_jsonl(path).events
-    if kind == "csv":
-        from .csvreader import read_csv
-        return read_csv(path).events
-    if kind == "otf2j":
-        from .otf2j import read_otf2_json
-        return read_otf2_json(path).events
-    if kind == "chrome":
-        from .chrome import read_chrome
-        return read_chrome(path).events
-    raise ValueError(kind)
+def _ensure_registered() -> None:
+    # Importing the reader modules populates the registry.  Needed both in
+    # the parent (when only this module was imported) and in spawned pool
+    # workers, which start from a fresh interpreter.
+    from . import chrome, csvreader, hlo, jsonl, otf2j  # noqa: F401
 
 
-def read_parallel(paths: Sequence[str], kind: str = "jsonl",
+def _read_one(args) -> EventFrame:
+    kind, path, reader_kwargs = args
+    _ensure_registered()
+    return resolve_reader(path, kind).read(path, **(reader_kwargs or {})).events
+
+
+def select_shards(paths: Sequence[str], kind: str = "auto",
+                  procs: Optional[Set[int]] = None,
+                  proc_bounds: Optional[Tuple[float, float]] = None
+                  ) -> List[str]:
+    """Shards that can contribute events under the given process restriction.
+
+    A shard is kept when its reader provides no ``shard_procs`` hint (unknown
+    contents are never skipped) or when any hinted process id satisfies both
+    the explicit set and the [lo, hi] bounds.
+    """
+    paths = list(paths)
+    if procs is None and proc_bounds is None:
+        return paths
+    _ensure_registered()
+    keep: List[str] = []
+    for p in paths:
+        spec = resolve_reader(p, kind)
+        hint = spec.shard_procs(p) if spec.shard_procs else None
+        if hint is None:
+            keep.append(p)
+            continue
+        if any((procs is None or q in procs)
+               and (proc_bounds is None
+                    or proc_bounds[0] <= q <= proc_bounds[1])
+               for q in hint):
+            keep.append(p)
+    return keep
+
+
+def read_parallel(paths: Sequence[str], kind: str = "auto",
                   processes: Optional[int] = None,
-                  label: Optional[str] = None) -> Trace:
-    """Read per-location shards in parallel and merge into one Trace."""
-    processes = processes or min(len(paths), os.cpu_count() or 1)
-    if processes <= 1 or len(paths) == 1:
-        frames = [_read_one((kind, p)) for p in paths]
+                  label: Optional[str] = None,
+                  procs: Optional[Set[int]] = None,
+                  proc_bounds: Optional[Tuple[float, float]] = None,
+                  **reader_kwargs) -> Trace:
+    """Read per-location shards in parallel and merge into one Trace.
+
+    Extra keyword arguments are forwarded to every per-shard reader (e.g.
+    ``n_procs=...`` for HLO shards).
+    """
+    _ensure_registered()
+    sel = select_shards(paths, kind, procs=procs, proc_bounds=proc_bounds)
+    if not sel:
+        # canonical empty frame: analysis ops on a fully-pruned read must
+        # see the uniform columns, not a column-less frame
+        empty = EventFrame({
+            TS: np.asarray([], np.int64),
+            ET: Categorical.from_codes(np.asarray([], np.int32),
+                                       np.asarray([ENTER, LEAVE, INSTANT])),
+            NAME: Categorical.from_codes(np.asarray([], np.int32),
+                                         np.asarray([], dtype=object)),
+            PROC: np.asarray([], np.int64),
+        })
+        return Trace(empty, label=label or "parallel[0]")
+    processes = processes or min(len(sel), os.cpu_count() or 1)
+    args = [(kind, p, reader_kwargs) for p in sel]
+    if processes <= 1 or len(sel) == 1:
+        frames = [_read_one(a) for a in args]
     else:
         with mp.get_context("spawn").Pool(processes) as pool:
-            frames = pool.map(_read_one, [(kind, p) for p in paths])
-    from ..core.constants import PROC, TS
+            frames = pool.map(_read_one, args)
     ev = concat(frames).sort_by([PROC, TS])
-    return Trace(ev, label=label or f"parallel[{len(paths)}]")
+    return Trace(ev, label=label or f"parallel[{len(sel)}]")
 
 
 def split_jsonl_by_process(path: str, out_dir: str) -> List[str]:

@@ -1,0 +1,437 @@
+"""Lazy TraceQuery layer: plan fusion, structure remap, registry, sniffing.
+
+Property tests use numpy RNG sweeps (hypothesis is optional in this
+environment) over synthetic traces from repro.tracegen.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import tracegen as tg
+from repro.core import (Filter, Trace, TraceQuery, list_ops, register_op,
+                        scan, time_window_filter)
+from repro.core.constants import (EXC, INC, MATCH, MATCH_TS, NAME, PARENT,
+                                  PROC, TS)
+from repro.core import structure
+from repro.readers import write_jsonl, write_otf2_json
+from repro.readers.parallel import select_shards, split_jsonl_by_process
+
+
+def _col_eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f" or b.dtype.kind == "f":
+        return np.array_equal(a, b, equal_nan=True)
+    return np.array_equal(a, b)
+
+
+def assert_frames_equal(fa, fb):
+    assert list(fa.columns) == list(fb.columns)
+    for c in fa.columns:
+        assert _col_eq(fa[c], fb[c]), c
+
+
+# ---------------------------------------------------------------------------
+# plan fusion
+# ---------------------------------------------------------------------------
+
+def test_fused_filters_equal_combined_filter():
+    t = tg.tortuga(nprocs=8, iters=3)
+    a = Filter(NAME, "!=", "computeRhs")
+    b = Filter(PROC, "<", 5)
+    lazy = t.query().filter(a).filter(b).collect()
+    eager = t.filter(a & b)
+    assert_frames_equal(lazy.events[[TS, NAME, PROC]],
+                        eager.events[[TS, NAME, PROC]])
+
+
+def test_fusion_property_random_filters():
+    """trace.query().filter(a).filter(b).collect() == trace.filter(a & b)
+    over a sweep of random predicate pairs."""
+    t = tg.gol(nprocs=4, iters=4)
+    names = list(dict.fromkeys(t.events[NAME]))
+    rng = np.random.default_rng(0)
+    ts = np.asarray(t.events[TS], np.float64)
+    for _ in range(20):
+        fa = Filter(NAME, "in", list(rng.choice(names, size=2)))
+        lo, hi = np.sort(rng.uniform(ts.min(), ts.max(), 2))
+        fb = Filter(TS, "between", (lo, hi))
+        lazy = t.query().filter(fa).filter(fb).collect()
+        eager = t.filter(fa & fb)
+        assert len(lazy) == len(eager)
+        assert_frames_equal(lazy.events[[TS, NAME, PROC]],
+                            eager.events[[TS, NAME, PROC]])
+
+
+def test_chain_profile_identical_to_eager():
+    t_lazy = tg.tortuga(nprocs=8, iters=4)
+    t_eager = tg.tortuga(nprocs=8, iters=4)
+    ts = np.asarray(t_lazy.events[TS], np.float64)
+    lo, hi = np.percentile(ts, 15), np.percentile(ts, 85)
+    fp_lazy = (t_lazy.query().slice_time(lo, hi)
+               .filter(Filter(NAME, "not-in", ["MPI_Send"]))
+               .restrict_processes(range(6)).flat_profile())
+    fp_eager = (t_eager.slice_time(lo, hi)
+                .filter(Filter(NAME, "not-in", ["MPI_Send"]))
+                .filter_processes(range(6)).flat_profile())
+    assert_frames_equal(fp_lazy, fp_eager)
+
+
+# ---------------------------------------------------------------------------
+# structure reuse: remap vs recompute
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("select", ["procs", "window"])
+def test_structure_remap_equals_recompute(select):
+    t = tg.tortuga(nprocs=8, iters=4)
+    ts = np.asarray(t.events[TS], np.float64)
+    if select == "procs":
+        t._ensure_structure()  # structured parent → remap path
+        sub = t.query().restrict_processes(range(4)).collect()
+    else:
+        lo, hi = np.percentile(ts, 20), np.percentile(ts, 80)
+        sub = t.query().slice_time(lo, hi).collect()
+    assert sub._structured, "selection should have remapped structure"
+    # recompute from scratch on a stripped copy and compare byte-for-byte
+    fresh = Trace(Trace._strip_structure(sub.events).copy())
+    fresh._ensure_structure()
+    for c in (MATCH, PARENT, "_depth", INC, EXC, MATCH_TS):
+        assert _col_eq(sub.events.column(c), fresh.events.column(c)), c
+
+
+def test_remap_falls_back_when_pairs_break():
+    t = tg.gol(nprocs=4, iters=3)
+    t._ensure_structure()
+    # dropping only Leave events breaks every enter/leave pair
+    sub = t.query().filter(Filter("Event Type", "!=", "Leave")).collect()
+    assert not sub._structured
+    assert MATCH not in sub.events
+
+
+def test_remapped_messages_match_recompute():
+    t = tg.gol(nprocs=4, iters=3)
+    t._ensure_structure()
+    t._ensure_messages()
+    sub = t.query().slice_time(0, np.inf).collect()  # keeps everything
+    assert sub._msg_match is not None
+    assert np.array_equal(sub._msg_match, structure.match_messages(sub.events))
+
+
+def test_structure_computed_once_per_plan(monkeypatch):
+    t = tg.tortuga(nprocs=8, iters=3)
+    ts = np.asarray(t.events[TS], np.float64)
+    calls = {"n": 0}
+    orig = structure.match_events
+
+    def counting(ev):
+        calls["n"] += 1
+        return orig(ev)
+
+    monkeypatch.setattr(structure, "match_events", counting)
+    (t.query().slice_time(np.percentile(ts, 10), np.percentile(ts, 90))
+     .filter(Filter(NAME, "!=", "MPI_Send"))
+     .restrict_processes(range(6)).flat_profile())
+    assert calls["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# trim semantics (time_window_filter wired through planner + legacy path)
+# ---------------------------------------------------------------------------
+
+def test_time_window_trim_overlap_vs_within():
+    t = tg.tortuga(nprocs=4, iters=3)
+    ts = np.asarray(t.events[TS], np.float64)
+    lo, hi = np.percentile(ts, 30), np.percentile(ts, 70)
+    n_overlap = len(t.filter(time_window_filter(lo, hi, trim="overlap")))
+    n_within = len(t.filter(time_window_filter(lo, hi, trim="within")))
+    assert n_overlap > n_within  # overlap keeps whole boundary calls
+    assert n_overlap == len(t.slice_time(lo, hi, trim="overlap"))
+    assert n_within == len(t.slice_time(lo, hi, trim="within"))
+
+
+def test_overlap_window_composes_with_and():
+    t = tg.gol(nprocs=4, iters=3)
+    ts = np.asarray(t.events[TS], np.float64)
+    lo, hi = np.percentile(ts, 30), np.percentile(ts, 70)
+    tw = time_window_filter(lo, hi, trim="overlap")
+    composed = t.filter(tw & Filter(PROC, "==", 0))
+    chained = t.query().slice_time(lo, hi).restrict_processes([0]).collect()
+    assert len(composed) == len(chained)
+    assert_frames_equal(composed.events[[TS, NAME, PROC]],
+                        chained.events[[TS, NAME, PROC]])
+    # overlap under | or ~ is ambiguous: loud error, not silent within-trim
+    with pytest.raises(ValueError):
+        t.filter(tw | Filter(PROC, "==", 0))
+    with pytest.raises(ValueError):
+        t.filter(~tw)
+
+
+def test_process_bounds_float_thresholds():
+    # integer process ids: fractional thresholds must round conservatively
+    assert Filter(PROC, ">", 0.5).process_bounds() == (1, np.inf)
+    assert Filter(PROC, "<", 0.5).process_bounds() == (-np.inf, 0)
+    assert Filter(PROC, ">", 2).process_bounds() == (3, np.inf)
+    assert Filter(PROC, "<", 2).process_bounds() == (-np.inf, 1)
+
+
+def test_scan_float_threshold_pushdown_matches_eager(tmp_path):
+    t = tg.gol(nprocs=4, iters=2)
+    full = str(tmp_path / "full.jsonl")
+    write_jsonl(t, full)
+    shards = split_jsonl_by_process(full, str(tmp_path / "sh"))
+    lazy = scan(shards, processes=1).filter(Filter(PROC, ">", 0.5)).collect()
+    eager = Trace.open(shards, processes=1).filter(Filter(PROC, ">", 0.5))
+    assert sorted(set(np.asarray(lazy.events[PROC]).tolist())) == [1, 2, 3]
+    assert len(lazy) == len(eager)
+
+
+def test_terminal_op_on_fully_pruned_scan(tmp_path):
+    t = tg.gol(nprocs=4, iters=2)
+    full = str(tmp_path / "full.jsonl")
+    write_jsonl(t, full)
+    shards = split_jsonl_by_process(full, str(tmp_path / "sh"))
+    fp = scan(shards, processes=1).restrict_processes([99]).flat_profile()
+    assert len(fp) == 0  # empty profile, not a crash
+
+
+def test_derived_column_filter_sees_post_selection_values():
+    """A predicate over time.exc after a window must see the *recomputed*
+    exclusive times (boundary parents absorb dropped children), exactly as
+    the eager chain does."""
+    t_lazy = tg.tortuga(nprocs=8, iters=4)
+    t_eager = tg.tortuga(nprocs=8, iters=4)
+    ts = np.asarray(t_lazy.events[TS], np.float64)
+    lo, hi = np.percentile(ts, 20), np.percentile(ts, 80)
+    t_eager._ensure_structure()
+    thr = float(np.nanmedian(np.asarray(t_eager.events.column(EXC))))
+    f = Filter(EXC, ">", thr)
+    lazy = t_lazy.query().slice_time(lo, hi).filter(f).collect()
+    eager = t_eager.slice_time(lo, hi).filter(f)
+    assert len(lazy) == len(eager)
+    assert_frames_equal(lazy.events[[TS, NAME, PROC]],
+                        eager.events[[TS, NAME, PROC]])
+
+
+def test_zero_step_collect_is_identity():
+    t = tg.gol(nprocs=2, iters=1)
+    assert t.query().collect() is t  # documented: caches land on the source
+    assert t.query().restrict_processes([0]).collect() is not t
+
+
+def test_derived_conjunct_commutes_inside_one_filter():
+    """`a & b` must equal `b & a` even when one conjunct reads a derived
+    column — all conjuncts of one composite evaluate on the same frame."""
+    t = tg.tortuga(nprocs=8, iters=4)
+    t._ensure_structure()
+    thr = float(np.nanmedian(np.asarray(t.events.column(EXC))))
+    a = Filter(EXC, ">", thr)
+    b = Filter(NAME, "!=", "computeRhs")
+    x = t.filter(a & b)
+    y = t.filter(b & a)
+    assert len(x) == len(y)
+    assert_frames_equal(x.events[[TS, NAME, PROC]],
+                        y.events[[TS, NAME, PROC]])
+
+
+def test_procs_then_window_fuses_single_materialization(monkeypatch):
+    """explain() promises [restrict_processes, slice_time] fuses on a fully
+    matched trace; collect() must deliver one structure pass, one take."""
+    t = tg.tortuga(nprocs=8, iters=3)
+    ts = np.asarray(t.events[TS], np.float64)
+    calls = {"n": 0}
+    orig = structure.match_events
+
+    def counting(ev):
+        calls["n"] += 1
+        return orig(ev)
+
+    monkeypatch.setattr(structure, "match_events", counting)
+    sub = (t.query().restrict_processes(range(4))
+           .slice_time(np.percentile(ts, 10), np.percentile(ts, 90))
+           .collect())
+    assert calls["n"] == 1
+    assert sub._structured  # remapped, not stripped
+
+
+def test_overlap_window_conjunction_commutes():
+    t = tg.gol(nprocs=4, iters=3)
+    ts = np.asarray(t.events[TS], np.float64)
+    lo, hi = np.percentile(ts, 30), np.percentile(ts, 70)
+    tw = time_window_filter(lo, hi, trim="overlap")
+    pred = Filter("Event Type", "==", "Enter")
+    a = t.filter(tw & pred)
+    b = t.filter(pred & tw)  # window must see the same frame either way
+    assert len(a) == len(b)
+    assert_frames_equal(a.events[[TS, NAME, PROC]],
+                        b.events[[TS, NAME, PROC]])
+
+
+def test_rank_hint_anchored_to_stem(tmp_path):
+    from repro.core.registry import rank_shard_procs
+    assert rank_shard_procs("/x/rank_3.jsonl") == {3}
+    assert rank_shard_procs("/x/rank-12.csv") == {12}
+    # merely containing "rank" must NOT produce a hint (never skipped)
+    assert rank_shard_procs("/x/lowrank_2.csv") is None
+    assert rank_shard_procs("/x/prank_1.jsonl") is None
+    assert rank_shard_procs("/x/rank_7") is None  # no extension → no match
+
+
+def test_selection_never_aliases_source():
+    # empty trace with canonical columns
+    t = Trace.from_events(tg.gol(nprocs=2, iters=1).events.head(0))
+    sub = t.filter(Filter(PROC, "==", 0))
+    assert sub is not t
+    assert len(sub) == 0
+
+
+def test_time_window_filter_rejects_bad_trim():
+    with pytest.raises(ValueError):
+        time_window_filter(0, 1, trim="nope")
+    with pytest.raises(ValueError):
+        TraceQuery.from_trace(tg.gol(nprocs=2, iters=1)).slice_time(0, 1, "x")
+
+
+# ---------------------------------------------------------------------------
+# filter introspection + edge cases
+# ---------------------------------------------------------------------------
+
+def test_filter_columns_and_process_bounds():
+    f = (Filter(NAME, "in", ["a"]) & Filter(PROC, "between", (2, 6))) \
+        & Filter(PROC, "<", 5)
+    assert f.columns() == {NAME, PROC}
+    assert f.process_bounds() == (2, 4)
+    g = Filter(PROC, "==", 3) | Filter(PROC, "==", 7)
+    assert g.process_bounds() == (3, 7)
+    assert (~g).process_bounds() is None
+    assert Filter(NAME, "==", "x").process_bounds() is None
+
+
+def test_filter_between_edges_inclusive():
+    t = tg.gol(nprocs=2, iters=1)
+    ts = np.asarray(t.events[TS], np.float64)
+    lo, hi = float(ts.min()), float(ts.max())
+    m = Filter(TS, "between", (lo, hi)).mask(t.events)
+    assert m.all()
+    m2 = Filter(TS, "between", (lo, lo)).mask(t.events)
+    assert m2.sum() == (ts == lo).sum()
+
+
+def test_categorical_not_in_unknown_values():
+    t = tg.gol(nprocs=2, iters=1)
+    # "in" an unknown category selects nothing; "not-in" selects everything
+    assert len(t.filter(Filter(NAME, "in", ["no_such_fn"]))) == 0
+    assert len(t.filter(Filter(NAME, "not-in", ["no_such_fn"]))) == len(t)
+    known = t.events[NAME][0]
+    n_not = len(t.filter(Filter(NAME, "not-in", [known, "no_such_fn"])))
+    n_eq = len(t.filter(Filter(NAME, "==", known)))
+    assert n_not == len(t) - n_eq
+
+
+# ---------------------------------------------------------------------------
+# op registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_ops_registered():
+    have = set(list_ops())
+    assert {"flat_profile", "time_profile", "comm_matrix", "load_imbalance",
+            "idle_time", "detect_pattern", "calculate_lateness",
+            "critical_path_analysis", "comm_comp_breakdown"} <= have
+
+
+def test_register_custom_op_and_chain():
+    @register_op("enter_count_by_proc", needs_structure=True)
+    def enter_count_by_proc(trace, top=None):
+        ev = trace.events
+        ent = ev.cat("Event Type").mask_eq("Enter")
+        procs = np.asarray(ev[PROC], np.int64)[ent]
+        out = np.bincount(procs, minlength=trace.num_processes)
+        return out[:top] if top else out
+
+    t = tg.gol(nprocs=4, iters=2)
+    counts = t.query().restrict_processes([0, 1]).enter_count_by_proc()
+    assert counts.sum() > 0 and len(counts) == 2
+    with pytest.raises(AttributeError):
+        t.query().no_such_op()
+    with pytest.raises(ValueError):
+        t.query().run("also_no_such_op")
+
+
+# ---------------------------------------------------------------------------
+# Trace.open sniffing — all five formats
+# ---------------------------------------------------------------------------
+
+def test_open_sniffs_all_formats(tmp_path):
+    t = tg.gol(nprocs=4, iters=2)
+
+    p_csv = tmp_path / "fig1.trace"  # wrong extension on purpose
+    p_csv.write_text("Timestamp (s), Event Type, Name, Process\n"
+                     "0, Enter, main(), 0\n1, Leave, main(), 0\n")
+    assert len(Trace.open(str(p_csv))) == 2
+
+    p_jsonl = tmp_path / "t.jsonl"
+    write_jsonl(t, str(p_jsonl))
+    assert len(Trace.open(str(p_jsonl))) == len(t)
+
+    p_chrome = tmp_path / "chrome.json"
+    p_chrome.write_text(json.dumps({"traceEvents": [
+        {"name": "step", "ph": "X", "ts": 1, "dur": 5, "pid": 0}]}))
+    assert len(Trace.open(str(p_chrome))) == 2
+
+    p_otf2 = tmp_path / "trace.otf2.json"
+    write_otf2_json(t, str(p_otf2))
+    assert len(Trace.open(str(p_otf2))) == len(t)
+    d_otf2 = tmp_path / "otf2dir"
+    d_otf2.mkdir()
+    write_otf2_json(t, str(d_otf2), split_locations=True)
+    assert len(Trace.open(str(d_otf2))) == len(t)
+
+    p_hlo = tmp_path / "prog.hlo"
+    p_hlo.write_text(
+        "HloModule m\n\nENTRY %main (a: f32[8,8]) -> f32[8,8] {\n"
+        "  %a = f32[8,8] parameter(0)\n"
+        "  ROOT %d = f32[8,8] dot(%a, %a), lhs_contracting_dims={1}, "
+        "rhs_contracting_dims={0}\n}\n")
+    assert len(Trace.open(str(p_hlo), n_procs=2)) > 0
+
+    # pathlib.Path works everywhere a str path does
+    assert len(Trace.open(p_jsonl)) == len(t)
+    assert len(Trace.open(p_csv, format="csv")) == 2
+
+    with pytest.raises(ValueError):
+        bad = tmp_path / "mystery.bin"
+        bad.write_text("???")
+        Trace.open(str(bad))
+    with pytest.raises(ValueError):
+        Trace.open(str(p_jsonl), format="no_such_format")
+
+
+# ---------------------------------------------------------------------------
+# reader pushdown
+# ---------------------------------------------------------------------------
+
+def test_scan_pushes_process_restriction_into_shards(tmp_path):
+    t = tg.gol(nprocs=4, iters=3)
+    full = str(tmp_path / "full.jsonl")
+    write_jsonl(t, full)
+    shards = split_jsonl_by_process(full, str(tmp_path / "shards"))
+    assert len(shards) == 4
+
+    sel = select_shards(shards, "auto", procs={1, 2})
+    assert sorted(os.path.basename(s) for s in sel) == \
+        ["rank_1.jsonl", "rank_2.jsonl"]
+    sel = select_shards(shards, "jsonl", proc_bounds=(0, 1))
+    assert sorted(os.path.basename(s) for s in sel) == \
+        ["rank_0.jsonl", "rank_1.jsonl"]
+    # unknown shard names are never skipped
+    anon = str(tmp_path / "events.jsonl")
+    write_jsonl(t, anon)
+    assert select_shards([anon], "jsonl", procs={99}) == [anon]
+
+    sub = scan(shards, processes=1).filter(Filter(PROC, "in", [1])).collect()
+    assert sorted(set(np.asarray(sub.events[PROC]).tolist())) == [1]
+    # restriction contradiction → empty trace, no crash
+    empty = (scan(shards, processes=1).restrict_processes([1])
+             .filter(Filter(PROC, "==", 3)).collect())
+    assert len(empty) == 0

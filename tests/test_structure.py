@@ -5,7 +5,11 @@ vectorized matcher recovers exactly the generator's nesting.
 """
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.constants import ET, NAME, PROC, TS
 from repro.core.frame import EventFrame
