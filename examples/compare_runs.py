@@ -1,0 +1,60 @@
+"""Comparing runs with TraceDiff (paper §IV-D: the analyses GUI tools
+can't automate — cross-run diffs, regression hunting, scaling studies).
+
+    PYTHONPATH=src python examples/compare_runs.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro import tracegen as tg  # noqa: E402
+from repro.core import Filter, TraceSet  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# 1. A before/after pair with a *known* injected regression: the tracegen
+#    perturbation knob slows every computeRhs call by 40% in the "after"
+#    run and leaves everything else bit-identical.
+# ---------------------------------------------------------------------------
+before, after = tg.regression_pair("tortuga", func="computeRhs",
+                                   factor=1.4, nprocs=8, iters=4)
+ts = TraceSet([before, after])
+
+print("regression report (ranked by delta, worst first):")
+print(ts.regression_report(top_n=6))
+
+# ---------------------------------------------------------------------------
+# 2. One lazy plan across both traces: the selection below is fused and
+#    materialized once per member, then *cached* — both comparison ops
+#    reuse the same prepared members.
+# ---------------------------------------------------------------------------
+q = ts.query().filter(Filter("Name", "not-in", ["MPI_Isend", "main()"]))
+print("\nshared plan:")
+print(q.explain())
+
+print("\nname-aligned per-function deltas (absolute ns):")
+print(q.diff_flat_profile().head(6))
+
+print("\nwhere in the run the time went (per-bin delta, top column first):")
+print(q.diff_time_profile(num_bins=8).head(8))
+
+# ---------------------------------------------------------------------------
+# 3. A scaling study is just a TraceSet of runs at different nprocs.
+#    tortuga stops scaling past its knee — exactly the paper's Fig. 12
+#    finding, recovered programmatically.
+# ---------------------------------------------------------------------------
+runs = [tg.tortuga(nprocs=n, iters=3) for n in (8, 16, 32, 64)]
+print("\nstrong-scaling series (efficiency collapses past the knee):")
+scal = TraceSet(runs).scaling_analysis(mode="strong")
+print(scal[["Run", "num_processes", "duration", "speedup", "efficiency"]])
+
+# ---------------------------------------------------------------------------
+# 4. Which functions got *more imbalanced* between two runs.  (A uniform
+#    slowdown keeps max/mean constant — skew needs per-process asymmetry,
+#    here gol's extra work on process 0.)
+# ---------------------------------------------------------------------------
+balanced = tg.gol(nprocs=8, iters=4, imbalance=0.05)
+skewed = tg.gol(nprocs=8, iters=4, imbalance=0.8)
+balanced.label, skewed.label = "gol-balanced", "gol-skewed"
+print("\nload-imbalance delta (skew got worse at the top):")
+print(TraceSet([balanced, skewed]).diff_load_imbalance().head(4))

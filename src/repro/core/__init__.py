@@ -10,6 +10,7 @@ from .cct import CCT, CCTNode
 from .constants import (ENTER, ET, EXC, INC, INSTANT, LEAVE, MPI_RECV,
                         MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD,
                         TS)
+from .diff import SetQuery, TraceSet
 from .filters import Filter, time_window_filter
 from .frame import Categorical, EventFrame, concat
 from .ops_patterns import mass, matrix_profile
@@ -18,10 +19,10 @@ from .registry import (list_ops, list_readers, register_op, register_reader)
 from .trace import Trace
 
 __all__ = [
-    "Trace", "TraceQuery", "scan", "EventFrame", "Categorical", "concat",
-    "Filter", "time_window_filter", "CCT", "CCTNode", "mass",
-    "matrix_profile", "register_op", "register_reader", "list_ops",
-    "list_readers",
+    "Trace", "TraceQuery", "scan", "TraceSet", "SetQuery", "EventFrame",
+    "Categorical", "concat", "Filter", "time_window_filter", "CCT",
+    "CCTNode", "mass", "matrix_profile", "register_op", "register_reader",
+    "list_ops", "list_readers",
     "TS", "ET", "NAME", "PROC", "THREAD", "ENTER", "LEAVE", "INSTANT",
     "INC", "EXC", "MSG_SIZE", "PARTNER", "TAG", "MPI_SEND", "MPI_RECV",
 ]

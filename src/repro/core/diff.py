@@ -1,0 +1,695 @@
+"""TraceDiff: multi-trace comparison on the lazy query plan (paper §IV-D).
+
+The paper's core critique of GUI trace tools is that they "do not support
+automated comparisons of two or more datasets".  This module is that
+comparison engine:
+
+* :class:`TraceSet` — N traces opened through the same reader registry
+  ``Trace.open`` uses (any registered format, optionally in parallel), held
+  as one analyzable unit;
+* :class:`SetQuery` — **one** lazy :class:`~repro.core.query.TraceQuery`
+  plan executed across every member.  The plan's steps (mask fusion,
+  structure remap, predicate pushdown) are shared; each member trace's
+  derived structure is materialized at most once per set, then reused by
+  every terminal op.  ``processes=N`` fans the per-member work (collect +
+  matching) over a process pool;
+* **set-scoped registry ops** — comparison analyses registered with
+  ``scope="set"`` in :mod:`repro.core.registry`
+  (``diff_flat_profile``, ``diff_time_profile``, ``scaling_analysis``,
+  ``diff_load_imbalance``, ``regression_report``) terminate a set query the
+  same way §IV ops terminate a single-trace query, and users can register
+  their own.
+
+Example::
+
+    before, after = tracegen.regression_pair("tortuga", func="computeRhs")
+    ts = TraceSet([before, after])
+    report = (ts.query()
+                .filter(Filter("Name", "not-in", ["MPI_Wait"]))
+                .regression_report())          # one plan, both traces
+"""
+
+from __future__ import annotations
+
+import weakref
+
+import numpy as np
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from . import ops_summary, registry
+from .constants import ENTER, ET, EXC, NAME, TS
+from .filters import Filter
+from .frame import EventFrame
+from .query import (ProcessStep, SliceTimeStep, TraceQuery, _decompose_filter,
+                    _TraceSource)
+
+__all__ = ["TraceSet", "SetQuery", "align_flat_profiles", "diff_flat_profile",
+           "diff_time_profile", "scaling_analysis", "diff_load_imbalance",
+           "regression_report"]
+
+
+# ---------------------------------------------------------------------------
+# labels and name alignment
+# ---------------------------------------------------------------------------
+
+def run_labels(traces: Sequence) -> List[str]:
+    """Display label per run: ``trace.label`` or ``run<i>``, deduplicated
+    (a repeated label gets ``#<i>`` appended so derived column names stay
+    unique)."""
+    labels: List[str] = []
+    seen: Dict[str, int] = {}
+    for i, t in enumerate(traces):
+        lbl = getattr(t, "label", None) or f"run{i}"
+        if lbl in seen:
+            lbl = f"{lbl}#{i}"
+        seen[lbl] = i
+        labels.append(lbl)
+    return labels
+
+
+def align_flat_profiles(traces: Sequence, metric: str = EXC,
+                        top_n: Optional[int] = None
+                        ) -> Tuple[List[str], List[str], np.ndarray, np.ndarray]:
+    """Name-aligned flat profiles across runs.
+
+    Computes each run's :func:`~repro.core.ops_summary.flat_profile` and
+    joins them on function name — the alignment every comparison op builds
+    on.  Functions present in only some runs get 0.0 in the others; the
+    ``present`` matrix records true membership so callers can distinguish
+    "zero time" from "does not appear".
+
+    Args:
+        traces: sequence of Traces with structure materialized (callers
+            going through ``TraceSet`` get this automatically).
+        metric: metric column to aggregate — ``time.exc`` (default; time
+            spent in the function itself, excluding callees) or ``time.inc``
+            (including callees).  Values are ns, summed over all calls and
+            processes of a run.
+        top_n: keep each run's top-N functions by the metric before taking
+            the union (None = all functions).
+
+    Returns:
+        ``(labels, names, matrix, present)``: per-run labels, the union of
+        function names ordered by total metric across runs (descending),
+        a ``(n_runs, n_names)`` float matrix of per-run totals, and a same-
+        shape bool matrix marking real membership.
+    """
+    _ensure_structured(traces)
+    profs = [_flat_profile_cached(t, metric) for t in traces]
+    labels = run_labels(traces)
+    weights: Dict[str, float] = {}
+    for p in profs:
+        names = p[NAME]
+        vals = np.asarray(p[metric], np.float64)
+        stop = top_n if top_n is not None else len(names)
+        for nm, v in zip(names[:stop], vals[:stop]):
+            weights[str(nm)] = weights.get(str(nm), 0.0) + float(v)
+    cols = [nm for nm, _ in sorted(weights.items(), key=lambda kv: -kv[1])]
+    idx = {nm: j for j, nm in enumerate(cols)}
+    mat = np.zeros((len(traces), len(cols)))
+    present = np.zeros((len(traces), len(cols)), dtype=bool)
+    for i, p in enumerate(profs):
+        for nm, v in zip(p[NAME], np.asarray(p[metric], np.float64)):
+            j = idx.get(str(nm))
+            if j is not None:
+                mat[i, j] = float(v)
+                present[i, j] = True
+    return labels, cols, mat, present
+
+
+def _ensure_structured(traces: Sequence) -> None:
+    """Defensive prerequisite materialization for direct (non-query) calls;
+    no-op per member when the SetQuery engine already ensured it."""
+    for t in traces:
+        t._ensure_structure()
+
+
+# flat profiles keyed per trace object — the shared-plan workflow chains
+# several comparison ops over the same prepared members, and each aligns
+# profiles; without this every op would redo a full aggregation pass per
+# member.  Weak keys: entries die with their traces.  The event count guards
+# against in-place frame mutation between ops.
+_PROFILE_CACHE = weakref.WeakKeyDictionary()
+
+
+def _flat_profile_cached(t, metric: str):
+    try:
+        entry = _PROFILE_CACHE.get(t)
+    except TypeError:       # non-weakrefable trace subclass: just compute
+        return ops_summary.flat_profile(t, metrics=[metric])
+    n = len(t.events)
+    if entry is not None and entry.get("_n") == n and metric in entry:
+        return entry[metric]
+    prof = ops_summary.flat_profile(t, metrics=[metric])
+    if entry is None or entry.get("_n") != n:
+        entry = {"_n": n}
+        _PROFILE_CACHE[t] = entry
+    entry[metric] = prof
+    return prof
+
+
+def _name_order_key(cols: Sequence[str]) -> np.ndarray:
+    """Deterministic integer tie-break key for a list of unique names."""
+    _, codes = np.unique(np.asarray(cols, dtype=object).astype(str),
+                         return_inverse=True)
+    return codes
+
+
+def _require_runs(traces: Sequence, n: int, op: str) -> None:
+    if len(traces) < n:
+        raise ValueError(f"{op} needs at least {n} traces, got {len(traces)}")
+
+
+def _resolve_run(i: int, n: int) -> int:
+    """Normalize a (possibly negative) run index; loud on out-of-range —
+    silent wrapping would quietly compare a run against itself."""
+    j = n + i if i < 0 else i
+    if not 0 <= j < n:
+        raise IndexError(f"run index {i} out of range for {n} traces")
+    return j
+
+
+# ---------------------------------------------------------------------------
+# set-scoped comparison ops (registered like every §IV single-trace op)
+# ---------------------------------------------------------------------------
+
+@registry.register_op("diff_flat_profile", needs_structure=True, scope="set")
+def diff_flat_profile(traces: Sequence, metric: str = EXC,
+                      mode: str = "absolute", baseline: int = 0,
+                      top_n: Optional[int] = None) -> EventFrame:
+    """Per-function deltas between runs' flat profiles (§IV-D).
+
+    Profiles are name-aligned across all runs (functions missing from a run
+    count as 0), then every non-baseline run is compared against the
+    baseline run.  ``diff_flat_profile([a, b])`` is antisymmetric in
+    absolute/normalized mode: swapping the runs negates every delta.
+
+    Args:
+        traces: 2+ traces; ``baseline`` is an index into this sequence
+            (negative indices allowed).
+        metric: ``time.exc`` (default, ns of self time) or ``time.inc``
+            (ns including callees).
+        mode: ``"absolute"`` — delta in metric units (ns);
+            ``"relative"`` — delta / baseline value (+inf where a function
+            is new in a run, 0 where absent from both);
+            ``"normalized"`` — each run's profile is first scaled to
+            fractions of its own total, so runs of different overall length
+            compare shape-to-shape (delta is a fraction).
+        top_n: restrict alignment to each run's top-N functions.
+
+    Returns:
+        EventFrame with ``Name``, one ``<metric>|<label>`` column per run
+        (post-normalization values for ``mode="normalized"``), and one
+        ``delta|<label>`` column per non-baseline run, sorted by the largest
+        absolute delta (ties broken by name, so orderings are reproducible).
+    """
+    _require_runs(traces, 2, "diff_flat_profile")
+    if mode not in ("absolute", "relative", "normalized"):
+        raise ValueError(f'mode must be "absolute", "relative" or '
+                         f'"normalized", got {mode!r}')
+    labels, cols, mat, present = align_flat_profiles(traces, metric=metric,
+                                                     top_n=top_n)
+    base_i = _resolve_run(baseline, len(traces))
+    vals = mat
+    if mode == "normalized":
+        totals = mat.sum(axis=1, keepdims=True)
+        vals = mat / np.maximum(totals, 1e-30)
+    base = vals[base_i]
+    deltas = []
+    for i in range(len(traces)):
+        if i == base_i:
+            continue
+        d = vals[i] - base
+        if mode == "relative":
+            with np.errstate(divide="ignore", invalid="ignore"):
+                d = np.where(base > 0, d / np.maximum(base, 1e-30),
+                             np.where(vals[i] > 0, np.inf, 0.0))
+        deltas.append((labels[i], d))
+    key = np.max(np.abs(np.asarray([d for _, d in deltas])), axis=0)
+    finite = np.where(np.isfinite(key), key, np.nanmax(key[np.isfinite(key)],
+                                                       initial=0.0) + 1.0)
+    order = np.lexsort((_name_order_key(cols), -finite))
+    out = EventFrame({NAME: np.asarray(cols, dtype=object)[order]})
+    for i, lbl in enumerate(labels):
+        out[f"{metric}|{lbl}"] = vals[i][order]
+    for lbl, d in deltas:
+        out[f"delta|{lbl}"] = d[order]
+    return out
+
+
+@registry.register_op("diff_time_profile", needs_structure=True, scope="set")
+def diff_time_profile(traces: Sequence, num_bins: int = 32, metric: str = EXC,
+                      baseline: int = 0, target: int = -1,
+                      normalized: bool = False) -> EventFrame:
+    """Binned time-profile delta between two runs (§IV-B applied to §IV-D).
+
+    Each run's :func:`~repro.core.ops_summary.time_profile` spreads every
+    call's metric over its [enter, leave) span and bins it.  Runs of
+    different duration are *resampled* onto a common axis: each run's own
+    [t_min, t_max] is divided into the same ``num_bins`` bins, so bin *i*
+    means "the i-th fraction of that run" and the delta compares matching
+    program phases, not absolute wall-clock instants.
+
+    Args:
+        traces: 2+ traces; ``baseline``/``target`` index into the sequence
+            (defaults: first vs last).
+        num_bins: bins per run.
+        metric: ``time.exc`` (ns, default) or ``time.inc``.
+        normalized: normalize each bin to fractions of that bin's total
+            before differencing (compares shape, not magnitude).
+
+    Returns:
+        EventFrame with ``bin`` (index) and ``bin_frac`` (bin center as a
+        fraction of run duration), plus one column per function present in
+        either run holding ``target − baseline`` per bin, columns ordered
+        by total absolute delta (descending).
+    """
+    _require_runs(traces, 2, "diff_time_profile")
+    _ensure_structured(traces)
+    n = len(traces)
+    base_i, tgt_i = _resolve_run(baseline, n), _resolve_run(target, n)
+    profs = {}
+    for i in (base_i, tgt_i):
+        p = ops_summary.time_profile(traces[i], num_bins=num_bins,
+                                     metric=metric, normalized=normalized)
+        funcs = [c for c in p.columns if c not in ("bin_start", "bin_end")]
+        profs[i] = {f: np.asarray(p[f], np.float64) for f in funcs}
+    union = sorted(set(profs[base_i]) | set(profs[tgt_i]))
+    zeros = np.zeros(num_bins)
+    deltas = {f: profs[tgt_i].get(f, zeros) - profs[base_i].get(f, zeros)
+              for f in union}
+    order = sorted(union, key=lambda f: (-float(np.abs(deltas[f]).sum()), f))
+    out = EventFrame({
+        "bin": np.arange(num_bins, dtype=np.int64),
+        "bin_frac": (np.arange(num_bins) + 0.5) / num_bins,
+    })
+    for f in order:
+        out[f] = deltas[f]
+    return out
+
+
+@registry.register_op("scaling_analysis", needs_structure=True, scope="set")
+def scaling_analysis(traces: Sequence, metric: str = EXC,
+                     mode: str = "strong", top_n: Optional[int] = 8
+                     ) -> EventFrame:
+    """Scaling series over a set of runs at different process counts (§IV-D,
+    Fig. 12 — the paper's Tortuga scaling study).
+
+    Runs are ordered by process count.  Wall-clock time (last − first event
+    timestamp, ns) gives speedup/efficiency; the aligned per-function totals
+    show *which* functions stop scaling.
+
+    Args:
+        traces: 2+ runs of the same application at different ``nprocs``.
+        metric: per-function aggregate — ``time.exc`` (ns, default) or
+            ``time.inc``.
+        mode: ``"strong"`` — fixed total problem: efficiency =
+            (T_base / T_p) / (p / p_base); ``"weak"`` — problem grows with
+            p: efficiency = T_base / T_p.
+        top_n: per-function columns for the top-N functions by total metric
+            across runs (None = all).
+
+    Returns:
+        EventFrame sorted by process count with ``Run``, ``num_processes``,
+        ``duration`` (wall ns), ``speedup``, ``efficiency``,
+        ``<metric>.total`` (sum over all functions and processes, ns), and
+        one ``<metric>`` column per top function.
+    """
+    _require_runs(traces, 2, "scaling_analysis")
+    if mode not in ("strong", "weak"):
+        raise ValueError(f'mode must be "strong" or "weak", got {mode!r}')
+    order = sorted(range(len(traces)), key=lambda i: traces[i].num_processes)
+    runs = [traces[i] for i in order]
+    labels, cols, mat, _ = align_flat_profiles(runs, metric=metric,
+                                               top_n=top_n)
+    nprocs = np.asarray([t.num_processes for t in runs], np.float64)
+    dur = np.empty(len(runs))
+    tot = np.empty(len(runs))
+    for i, t in enumerate(runs):
+        ev = t.events
+        ts = np.asarray(ev[TS], np.float64)
+        dur[i] = float(ts.max() - ts.min()) if len(ts) else 0.0
+        # total over ALL functions (the aligned matrix is top_n-truncated)
+        ent = ev.cat(ET).mask_eq(ENTER)
+        tot[i] = float(np.nan_to_num(
+            np.asarray(ev.column(metric), np.float64)[ent]).sum())
+    speedup = np.where(dur > 0, dur[0] / np.maximum(dur, 1e-30), 0.0)
+    ideal = nprocs / max(nprocs[0], 1.0)
+    eff = speedup / ideal if mode == "strong" else speedup
+    out = EventFrame({
+        "Run": np.asarray(labels, dtype=object),
+        "num_processes": nprocs.astype(np.int64),
+        "duration": dur,
+        "speedup": speedup,
+        "efficiency": eff,
+        f"{metric}.total": tot,
+    })
+    for j, c in enumerate(cols):
+        out[c] = mat[:, j]
+    return out
+
+
+@registry.register_op("diff_load_imbalance", needs_structure=True, scope="set")
+def diff_load_imbalance(traces: Sequence, metric: str = EXC, baseline: int = 0,
+                        target: int = -1, num_processes: int = 5) -> EventFrame:
+    """Per-function load-imbalance delta between two runs (§IV-D).
+
+    Imbalance per function is max-over-processes / mean-over-processes of
+    the metric (1.0 = perfectly balanced), from
+    :func:`~repro.core.ops_summary.load_imbalance`; the delta shows which
+    functions got *more* skewed between the runs.
+
+    Args:
+        traces: 2+ traces; ``baseline``/``target`` index into the sequence
+            (defaults: first vs last).
+        metric: ``time.exc`` (default) or ``time.inc``.
+        num_processes: forwarded to the per-run op (size of its top-process
+            list; does not affect the ratio).
+
+    Returns:
+        EventFrame with ``Name``, ``imbalance|<label>`` for both runs (0
+        where the function is absent), and ``delta`` (target − baseline),
+        sorted by delta descending (functions that got worse first, ties
+        broken by name).
+    """
+    _require_runs(traces, 2, "diff_load_imbalance")
+    _ensure_structured(traces)
+    n = len(traces)
+    base_i, tgt_i = _resolve_run(baseline, n), _resolve_run(target, n)
+    labels = run_labels(traces)
+    col = f"{metric}.imbalance"
+    imb: Dict[int, Dict[str, float]] = {}
+    for i in (base_i, tgt_i):
+        li = ops_summary.load_imbalance(traces[i], metric=metric,
+                                        num_processes=num_processes)
+        imb[i] = {str(nm): float(v)
+                  for nm, v in zip(li[NAME], np.asarray(li[col], np.float64))}
+    union = sorted(set(imb[base_i]) | set(imb[tgt_i]))
+    b = np.asarray([imb[base_i].get(f, 0.0) for f in union])
+    t = np.asarray([imb[tgt_i].get(f, 0.0) for f in union])
+    d = t - b
+    order = np.lexsort((_name_order_key(union), -d))
+    return EventFrame({
+        NAME: np.asarray(union, dtype=object)[order],
+        f"imbalance|{labels[base_i]}": b[order],
+        f"imbalance|{labels[tgt_i]}": t[order],
+        "delta": d[order],
+    })
+
+
+@registry.register_op("regression_report", needs_structure=True, scope="set")
+def regression_report(traces: Sequence, metric: str = EXC, baseline: int = 0,
+                      target: int = -1, threshold: float = 0.05,
+                      top_n: Optional[int] = None) -> EventFrame:
+    """Ranked per-function regression report between two runs (§IV-D) — the
+    automated "what got slower?" pass GUI tools cannot script.
+
+    Functions are aligned by name across the baseline and target runs and
+    ranked by absolute delta of the metric, regressions first.  Functions
+    appearing in only one run are flagged rather than silently zero-filled.
+
+    Args:
+        traces: 2+ traces; ``baseline``/``target`` index into the sequence
+            (defaults: first vs last, i.e. before vs after).
+        metric: ``time.exc`` (ns of self time, default) or ``time.inc``.
+        threshold: relative-change cutoff separating ``regressed`` /
+            ``improved`` from ``stable`` (0.05 = 5%).
+        top_n: truncate the report to the N largest deltas (None = all).
+
+    Returns:
+        EventFrame sorted by delta descending (worst regression first, ties
+        broken by name) with ``Name``, ``<metric>|<label>`` for both runs,
+        ``delta`` (target − baseline, ns), ``delta_rel`` (delta / baseline;
+        +inf for new functions), and ``status`` ∈ {``regressed``,
+        ``improved``, ``stable``, ``new``, ``vanished``}.
+    """
+    _require_runs(traces, 2, "regression_report")
+    n = len(traces)
+    base_i, tgt_i = _resolve_run(baseline, n), _resolve_run(target, n)
+    labels, cols, mat, present = align_flat_profiles(traces, metric=metric)
+    base, tgt = mat[base_i], mat[tgt_i]
+    in_base, in_tgt = present[base_i], present[tgt_i]
+    delta = tgt - base
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(base > 0, delta / np.maximum(base, 1e-30),
+                       np.where(tgt > 0, np.inf, 0.0))
+    status = np.where(~in_base & in_tgt, "new",
+                      np.where(in_base & ~in_tgt, "vanished",
+                               np.where(rel > threshold, "regressed",
+                                        np.where(rel < -threshold, "improved",
+                                                 "stable")))).astype(object)
+    keep = in_base | in_tgt  # drop rows contributed only by other runs
+    sel = np.nonzero(keep)[0]
+    order = sel[np.lexsort((_name_order_key(cols)[sel], -delta[sel]))]
+    if top_n is not None:
+        by_mag = np.argsort(-np.abs(delta[order]), kind="stable")[:top_n]
+        order = order[np.sort(by_mag)]
+    return EventFrame({
+        NAME: np.asarray(cols, dtype=object)[order],
+        f"{metric}|{labels[base_i]}": base[order],
+        f"{metric}|{labels[tgt_i]}": tgt[order],
+        "delta": delta[order],
+        "delta_rel": rel[order],
+        "status": status[order],
+    })
+
+
+# ---------------------------------------------------------------------------
+# process-parallel member preparation
+# ---------------------------------------------------------------------------
+
+def _prepare_member(args) -> tuple:
+    """Pool worker: execute one member's plan and materialize prerequisites.
+
+    Runs in a spawned interpreter — receives the member's events plus its
+    cached derivation state, rebuilds the Trace, collects the shared plan,
+    and returns the materialized pieces for the parent to reassemble
+    without recomputing anything.
+    """
+    (events, structured, msg_match, definitions, label, steps,
+     needs_structure, needs_messages) = args
+    from .trace import Trace
+    t = Trace(events, definitions=definitions, label=label)
+    t._structured = structured
+    t._msg_match = msg_match
+    q = TraceQuery(_TraceSource(t), steps)
+    out = q.collect()
+    if needs_structure:
+        out._ensure_structure()
+    if needs_messages:
+        out._ensure_messages()
+    return (out.events, out._structured, out._msg_match, out.label,
+            out.definitions)
+
+
+class SetQuery:
+    """One immutable lazy plan over every member of a :class:`TraceSet`.
+
+    Builder methods mirror :class:`~repro.core.query.TraceQuery` and return
+    a new query sharing the step tuple; nothing executes until a terminal
+    op.  The first terminal op materializes each member once (selection
+    applied, prerequisites ensured) and caches the result on this query, so
+    chaining several comparison ops over the same plan — the common diff
+    workflow — pays ingest, mask application, and event matching exactly
+    once per member.
+    """
+
+    def __init__(self, traces: Sequence, steps: Sequence = ()):
+        self._traces = list(traces)
+        self._steps = tuple(steps)
+        self._collected: Optional[List] = None
+
+    # -- construction ------------------------------------------------------
+    def _with(self, step) -> "SetQuery":
+        return SetQuery(self._traces, self._steps + (step,))
+
+    def filter(self, f: Filter) -> "SetQuery":
+        q = self
+        for step in _decompose_filter(f):
+            q = q._with(step)
+        return q
+
+    def slice_time(self, start: float, end: float,
+                   trim: str = "overlap") -> "SetQuery":
+        return self._with(SliceTimeStep(start, end, trim))
+
+    def restrict_processes(self, procs: Sequence[int]) -> "SetQuery":
+        return self._with(ProcessStep(procs))
+
+    filter_processes = restrict_processes
+
+    def explain(self) -> str:
+        """The shared plan, as TraceQuery.explain, once per member source."""
+        lines = [f"set of {len(self._traces)} trace(s); shared plan:"]
+        proto = TraceQuery(_TraceSource(self._traces[0]), self._steps)
+        lines.extend("  " + ln for ln in proto.explain().splitlines())
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"SetQuery({len(self._traces)} trace(s), "
+                f"{len(self._steps)} step(s))")
+
+    # -- execution ---------------------------------------------------------
+    @staticmethod
+    def _pool_prepare(traces: Sequence, steps, needs_structure: bool,
+                      needs_messages: bool, processes: int) -> List:
+        """Run collect + prerequisite materialization in a spawn pool and
+        reassemble the prepared Traces in the parent."""
+        from .trace import Trace
+        import multiprocessing as mp
+        args = [(t.events, t._structured, t._msg_match, t.definitions,
+                 t.label, tuple(steps), needs_structure, needs_messages)
+                for t in traces]
+        with mp.get_context("spawn").Pool(min(processes, len(args))) as pool:
+            parts = pool.map(_prepare_member, args)
+        out = []
+        for ev, structured, mm, label, defs in parts:
+            t = Trace(ev, definitions=defs, label=label)
+            t._structured = structured
+            t._msg_match = mm
+            out.append(t)
+        return out
+
+    def _prepare(self, needs_structure: bool, needs_messages: bool,
+                 processes: Optional[int] = None) -> List:
+        """Collect every member's plan and ensure prerequisites, caching the
+        materialized traces on this query (shared-plan execution)."""
+        use_pool = bool(processes and processes > 1)
+        if self._collected is None:
+            if use_pool and len(self._traces) > 1:
+                self._collected = self._pool_prepare(
+                    self._traces, self._steps, needs_structure,
+                    needs_messages, processes)
+            else:
+                self._collected = [
+                    TraceQuery(_TraceSource(t), self._steps).collect()
+                    for t in self._traces]
+        elif use_pool:
+            # members were cached by an earlier terminal, but this op's
+            # prerequisites may still be unmaterialized — honor the pool
+            # request for that (possibly heavy) work too
+            idx = [i for i, t in enumerate(self._collected)
+                   if (needs_structure and not t._structured)
+                   or (needs_messages and t._msg_match is None)]
+            if len(idx) > 1:
+                prepared = self._pool_prepare(
+                    [self._collected[i] for i in idx], (), needs_structure,
+                    needs_messages, processes)
+                for i, t in zip(idx, prepared):
+                    self._collected[i] = t
+        for t in self._collected:
+            if needs_structure:
+                t._ensure_structure()
+            if needs_messages:
+                t._ensure_messages()
+        return self._collected
+
+    def collect(self, processes: Optional[int] = None) -> List:
+        """Execute the shared plan; returns the list of selected Traces."""
+        return list(self._prepare(False, False, processes))
+
+    def run(self, op_name: str, *args: Any, processes: Optional[int] = None,
+            **kwargs: Any) -> Any:
+        """Run a registered op across the set.
+
+        A ``scope="set"`` op receives the whole list of prepared traces and
+        returns its comparison result; a ``scope="trace"`` op is mapped over
+        the members and returns a list of per-trace results (in set order).
+        ``processes`` > 1 prepares members in a process pool.
+        """
+        spec = registry.get_op(op_name)
+        if spec is None:
+            raise ValueError(f"unknown analysis op {op_name!r}; "
+                             f"registered: {registry.list_ops()}")
+        traces = self._prepare(spec.needs_structure, spec.needs_messages,
+                               processes)
+        if spec.scope == "set":
+            return spec.fn(traces, *args, **kwargs)
+        return [spec.fn(t, *args, **kwargs) for t in traces]
+
+    def __getattr__(self, name: str):
+        return registry.terminal_op(name, self.run, "SetQuery")
+
+
+def _relabel(t, label: str):
+    """Shallow clone of a Trace under a new label, sharing the events frame
+    and every derivation cache with the original."""
+    clone = type(t)(t.events, definitions=t.definitions, label=label)
+    clone._structured = t._structured
+    clone._msg_match = t._msg_match
+    clone._cct = t._cct
+    return clone
+
+
+class TraceSet:
+    """N traces analyzed as one unit — the entry point for cross-run diffs.
+
+    Construct from in-memory traces (``TraceSet([a, b, c])``) or straight
+    from disk with :meth:`open`, which resolves each path through the same
+    reader registry ``Trace.open`` uses (format sniffing included) and can
+    ingest members in parallel.  Every registered analysis op is a method:
+    set-scoped comparison ops (``diff_flat_profile``, ``regression_report``,
+    ...) compare the members; single-trace ops map over them.  Start a
+    shared lazy plan with :meth:`query` to select data once for several
+    comparison ops.
+    """
+
+    def __init__(self, traces: Sequence, labels: Optional[Sequence[str]] = None):
+        self._traces = list(traces)
+        if not self._traces:
+            raise ValueError("TraceSet needs at least one trace")
+        if labels is not None:
+            if len(labels) != len(self._traces):
+                raise ValueError(f"{len(labels)} labels for "
+                                 f"{len(self._traces)} traces")
+            # relabel via shallow clones — never mutate the caller's traces
+            # (two sets over the same trace must not clobber each other's
+            # labels).  Clones share the events frame and derivation caches,
+            # so nothing is recomputed.
+            self._traces = [_relabel(t, lbl)
+                            for t, lbl in zip(self._traces, labels)]
+
+    @classmethod
+    def open(cls, paths: Sequence, format: str = "auto",
+             processes: Optional[int] = None,
+             labels: Optional[Sequence[str]] = None, **kw) -> "TraceSet":
+        """Open N traces (any registered format; content is sniffed per
+        member exactly like ``Trace.open``).  Each item may itself be a list
+        of per-rank shard paths — those go through the parallel shard
+        driver.  ``processes`` > 1 opens members concurrently."""
+        from ..readers.parallel import open_many
+        return cls(open_many(paths, kind=format, processes=processes, **kw),
+                   labels=labels)
+
+    # -- container protocol ------------------------------------------------
+    @property
+    def traces(self) -> List:
+        return list(self._traces)
+
+    @property
+    def labels(self) -> List[str]:
+        return run_labels(self._traces)
+
+    def __len__(self) -> int:
+        return len(self._traces)
+
+    def __iter__(self):
+        return iter(self._traces)
+
+    def __getitem__(self, i):
+        return self._traces[i]
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"TraceSet({self.labels})"
+
+    # -- analysis ----------------------------------------------------------
+    def query(self) -> SetQuery:
+        """Start one lazy plan executed across every member (see SetQuery)."""
+        return SetQuery(self._traces)
+
+    def run(self, op_name: str, *args: Any, **kwargs: Any) -> Any:
+        return self.query().run(op_name, *args, **kwargs)
+
+    def __getattr__(self, name: str):
+        return registry.terminal_op(name, self.run, "TraceSet")

@@ -27,7 +27,19 @@ def _sends(trace) -> EventFrame:
 
 @register_op("comm_matrix", needs_messages=True)
 def comm_matrix(trace, output: str = "size") -> np.ndarray:
-    """nprocs × nprocs matrix of bytes (or message counts) sent i→j (§IV-C)."""
+    """Process-to-process communication matrix (§IV-C, Fig. 3).
+
+    Aggregates every send instant by (sender, receiver).
+
+    Args:
+        output: ``"size"`` (default) sums message bytes; ``"count"`` (any
+            other value) counts messages.
+
+    Returns:
+        ``(nprocs, nprocs)`` float array; ``M[i, j]`` is the bytes (or
+        number of messages) process i sent to process j.  All zeros when
+        the trace records no messages.
+    """
     s = _sends(trace)
     n = trace.num_processes
     mat = np.zeros((n, n))
@@ -42,7 +54,15 @@ def comm_matrix(trace, output: str = "size") -> np.ndarray:
 
 @register_op("message_histogram")
 def message_histogram(trace, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
-    """Distribution of message sizes (§IV-C, Fig. 4). Returns (counts, edges)."""
+    """Distribution of message sizes (§IV-C, Fig. 4).
+
+    Args:
+        bins: number of equal-width size bins over [min, max] bytes.
+
+    Returns:
+        ``(counts, edges)`` à la ``np.histogram``: ``counts`` has ``bins``
+        message counts, ``edges`` has ``bins + 1`` byte boundaries.
+    """
     s = _sends(trace)
     if len(s) == 0:
         return np.zeros(bins, np.int64), np.linspace(0, 1, bins + 1)
@@ -52,7 +72,17 @@ def message_histogram(trace, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
 
 @register_op("comm_by_process")
 def comm_by_process(trace, output: str = "size") -> EventFrame:
-    """Total volume (or count) sent and received per process (§IV-C)."""
+    """Total communication volume per process (§IV-C).
+
+    Args:
+        output: ``"size"`` (default) sums bytes; anything else counts
+            messages.
+
+    Returns:
+        EventFrame with one row per process: ``Process``, ``sent``,
+        ``received``, and ``total`` (sent + received), in bytes or message
+        counts.
+    """
     s = _sends(trace)
     n = trace.num_processes
     sent = np.zeros(n)
@@ -71,7 +101,17 @@ def comm_by_process(trace, output: str = "size") -> EventFrame:
 @register_op("comm_over_time")
 def comm_over_time(trace, num_bins: int = 32, output: str = "size"
                    ) -> Tuple[np.ndarray, np.ndarray]:
-    """Message volume/count per time bin (§IV-C). Returns (values, edges)."""
+    """Message traffic over time (§IV-C): sends binned by timestamp.
+
+    Args:
+        num_bins: equal-width time bins over the whole trace span.
+        output: ``"size"`` (default) sums bytes per bin; anything else
+            counts messages per bin.
+
+    Returns:
+        ``(values, edges)``: ``values`` has ``num_bins`` totals, ``edges``
+        has ``num_bins + 1`` bin boundaries in ns.
+    """
     s = _sends(trace)
     ev = trace.events
     ts_all = np.asarray(ev[TS], np.float64)
@@ -111,6 +151,17 @@ def comm_comp_breakdown(trace, comm_matcher: Optional[Callable[[str], bool]] = N
     Communication and computation can only overlap across threads/streams of
     the same process (e.g. a compute stream and a NCCL stream); interval
     algebra over the merged per-class interval sets yields the split.
+
+    Args:
+        comm_matcher: ``fn(name) -> bool`` deciding which functions count
+            as communication; default matches MPI/NCCL/collective name
+            patterns (see :func:`comm_name_mask`).
+
+    Returns:
+        EventFrame with one row per process: ``Process``, ``comp_only``,
+        ``overlap``, ``comm_only``, ``other`` (unaccounted/idle), and
+        ``span`` (the process's wall-clock extent) — all in ns, with
+        ``comp_only + overlap + comm_only + other == span``.
     """
     ev = trace.events
     n = len(ev)

@@ -50,10 +50,18 @@ def _op_rows(trace) -> np.ndarray:
 
 @register_op("logical_steps", needs_structure=True, needs_messages=True)
 def logical_steps(trace) -> EventFrame:
-    """Logical step per communication operation.
+    """Logical (happens-before) step per communication operation.
 
-    Returns an EventFrame with columns: row (index into trace.events), Process,
-    Name, Timestamp, complete (ns), step.
+    Assigns every send/recv/wait operation a global step index: within a
+    process operations are sequential, and a receive's step exceeds its
+    matching send's — the logical timeline of Isaacs et al. that lateness
+    and critical-path analysis build on.
+
+    Returns:
+        EventFrame with one row per operation: ``row`` (index into
+        ``trace.events``), ``Process``, ``Name``, ``Timestamp (ns)``,
+        ``complete`` (ns when the operation finished — its Leave, or its
+        own timestamp for instants), and ``step`` (logical step index).
     """
     trace._ensure_structure()
     trace._ensure_messages()
@@ -121,7 +129,15 @@ def logical_steps(trace) -> EventFrame:
 
 @register_op("calculate_lateness", needs_structure=True, needs_messages=True)
 def calculate_lateness(trace) -> EventFrame:
-    """Lateness per communication operation (Isaacs et al. [27])."""
+    """Lateness per communication operation (§IV-D, Isaacs et al. [27]).
+
+    ``lateness(op) = complete(op) − min over processes of complete at the
+    same logical step`` — how far (ns) an operation lags the fastest peer
+    at the same point of the logical program.  0 marks the front-runner.
+
+    Returns:
+        The :func:`logical_steps` frame plus a ``lateness`` column (ns).
+    """
     ops = logical_steps(trace)
     if len(ops) == 0:
         return ops
@@ -137,7 +153,15 @@ def calculate_lateness(trace) -> EventFrame:
 
 @register_op("lateness_by_process", needs_structure=True, needs_messages=True)
 def lateness_by_process(trace) -> EventFrame:
-    """Max lateness per process (paper Fig. 11, right)."""
+    """Maximum lateness per process (paper Fig. 11, right).
+
+    Identifies the processes that fall furthest behind the logical front —
+    the usual suspects for a load-imbalance or slow-link root cause.
+
+    Returns:
+        EventFrame with ``Process`` and ``max_lateness`` (ns, the worst
+        lateness of any of the process's operations), sorted descending.
+    """
     ops = calculate_lateness(trace)
     if len(ops) == 0:
         return ops
@@ -152,8 +176,22 @@ def lateness_by_process(trace) -> EventFrame:
 
 @register_op("critical_path_analysis", needs_structure=True, needs_messages=True)
 def critical_path_analysis(trace, max_hops: int = 1_000_000) -> List[EventFrame]:
-    """Backward-trace the critical path; returns [path] as an EventFrame of
-    events ordered along the path (earliest first)."""
+    """Critical path of the execution (§IV-D, Fig. 10).
+
+    Walks backward from the last completion: within a process it hops to
+    the previous operation; at a receive that was genuinely waiting (its
+    matching send ends later than the previous local operation) it jumps to
+    the sender.  The result is the dependency chain that bounds the run's
+    wall-clock time — shorten something on it or the run doesn't speed up.
+
+    Args:
+        max_hops: safety bound on walk length for malformed traces.
+
+    Returns:
+        Single-element list (paper API shape) holding an EventFrame of the
+        path's events, earliest first, with ``_row`` giving each event's
+        row index in ``trace.events``.
+    """
     trace._ensure_structure()
     trace._ensure_messages()
     ev = trace.events

@@ -83,7 +83,17 @@ def matrix_profile(series: np.ndarray, m: int, exclusion: Optional[int] = None
 def activity_series(trace, num_bins: int = 512, process: Optional[int] = None
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Binned total exclusive time (all functions) — the time-series signal
-    pattern detection runs on.  Returns ``(series, bin_edges)``."""
+    pattern detection runs on.
+
+    Args:
+        num_bins: equal-width time bins over the trace span.
+        process: restrict to one process id (None = all processes).
+
+    Returns:
+        ``(series, bin_edges)``: ``series`` has ``num_bins`` summed
+        ``time.exc`` values (ns per bin, attributed to each call's Enter
+        timestamp), ``bin_edges`` has ``num_bins + 1`` ns boundaries.
+    """
     ev = trace.events
     trace._ensure_structure()
     ts = np.asarray(ev[TS], np.float64)
@@ -102,13 +112,28 @@ def activity_series(trace, num_bins: int = 512, process: Optional[int] = None
 def detect_pattern(trace, start_event: Optional[str] = None, num_bins: int = 512,
                    process: int = 0, max_patterns: int = 64,
                    min_similarity: float = 0.8) -> List[EventFrame]:
-    """Find repeating program phases; returns one EventFrame per occurrence.
+    """Find repeating program phases (§IV-D, Fig. 8 — iteration detection).
 
-    If ``start_event`` is given (paper Fig. 8), occurrences of that function
-    delimit candidate iterations; the matrix profile of the binned activity
-    series confirms which candidates are genuinely similar (z-normalized
-    similarity >= ``min_similarity`` to the motif).  Without a hint, the
+    If ``start_event`` is given, occurrences of that function delimit
+    candidate iterations; the matrix profile of the binned activity series
+    confirms which candidates are genuinely similar.  Without a hint, the
     motif period is inferred from the matrix profile's best motif pair.
+
+    Args:
+        start_event: function name whose Enter events delimit candidate
+            iterations (e.g. the paper's ``"time-loop"``); None infers the
+            period automatically.
+        num_bins: resolution of the activity series the similarity check
+            runs on.
+        process: process id whose timeline anchors the candidates.
+        max_patterns: stop after this many accepted occurrences.
+        min_similarity: z-normalized correlation (−1..1) a candidate must
+            reach against the first occurrence's signal to be kept.
+
+    Returns:
+        List of EventFrames, one per detected occurrence — each a
+        time-windowed slice of ``trace.events`` (all processes included).
+        Empty list when no repetition is found.
     """
     ev = trace.events
     trace._ensure_structure()

@@ -18,7 +18,26 @@ from .registry import register_op
 @register_op("flat_profile", needs_structure=True)
 def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = NAME,
                  per_process: bool = False) -> EventFrame:
-    """Total metric per function, aggregated over the whole trace (§IV-B)."""
+    """Total metric per function, aggregated over the whole trace (§IV-B).
+
+    Sums each metric over every *matched call* (Enter event) of a function,
+    across all processes unless ``per_process``.
+
+    Args:
+        metrics: metric columns to sum — ``time.exc`` (default; ns the
+            function spent in its own code, callees excluded) and/or
+            ``time.inc`` (ns including callees; inclusive sums over nested
+            calls of the same function double-count by design).
+        groupby_column: grouping key (default ``Name``; any categorical
+            column works, e.g. a custom phase column).
+        per_process: additionally group by ``Process`` (one row per
+            (function, process) pair).
+
+    Returns:
+        EventFrame with the group key column(s), one summed column per
+        metric (ns), and ``count`` (number of calls), sorted by the first
+        metric descending.
+    """
     ev = trace.events
     ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
     keys = [groupby_column, PROC] if per_process else [groupby_column]
@@ -36,10 +55,23 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
                  normalized: bool = False, backend: str = "numpy") -> EventFrame:
     """Flat profile over time (§IV-B): bins × functions matrix.
 
-    Each matched call contributes its exclusive time, modeled as uniformly
-    spread over its [enter, leave) span.  Exact O(N + bins·functions) NumPy
-    sweep (no N×bins matrix); ``backend="pallas"`` routes the dense tiled
-    kernel in repro.kernels.time_bin (TPU target; interpret-mode on CPU).
+    Each matched call contributes its metric, modeled as uniformly spread
+    over its [enter, leave) span; the trace's [t_min, t_max] is divided
+    into ``num_bins`` equal bins.  Exact O(N + bins·functions) NumPy sweep
+    (no N×bins matrix); ``backend="pallas"`` routes the dense tiled kernel
+    in repro.kernels.time_bin (TPU target; interpret-mode on CPU).
+
+    Args:
+        num_bins: number of equal-width time bins.
+        metric: ``time.exc`` (default) or ``time.inc``, in ns.
+        normalized: scale each bin's values to fractions of that bin's
+            total (rows sum to 1 where any time was recorded).
+        backend: ``"numpy"`` (exact sweep) or ``"pallas"`` (tiled kernel).
+
+    Returns:
+        EventFrame with ``bin_start``/``bin_end`` (ns) plus one column per
+        function holding its per-bin metric (ns, or fractions when
+        ``normalized``), columns ordered by total weight descending.
     """
     ev = trace.events
     ts = np.asarray(ev[TS], np.float64)
@@ -117,7 +149,25 @@ def _exact_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
 @register_op("load_imbalance", needs_structure=True)
 def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
                    top_functions: Optional[int] = None) -> EventFrame:
-    """Per-function imbalance = max over processes / mean over processes (§IV-D)."""
+    """Per-function load imbalance across processes (§IV-D, Fig. 7).
+
+    For each function, sums the metric per process and reports
+    max-over-processes / mean-over-processes — 1.0 is perfectly balanced,
+    2.0 means the busiest process carries twice the average.
+
+    Args:
+        metric: ``time.exc`` (default) or ``time.inc``, in ns.
+        num_processes: how many of the busiest process ids to list per
+            function (does not affect the ratio).
+        top_functions: truncate to the N functions with the largest mean
+            metric (None = all functions with any time).
+
+    Returns:
+        EventFrame sorted by mean metric descending with ``Name``,
+        ``<metric>.imbalance`` (the max/mean ratio), ``Top processes``
+        (list of the heaviest process ids), ``<metric>.mean`` and
+        ``<metric>.max`` (ns).
+    """
     ev = trace.events
     ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
     vals = np.nan_to_num(np.asarray(ent.column(metric), np.float64))
@@ -149,7 +199,20 @@ def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
 @register_op("idle_time", needs_structure=True)
 def idle_time(trace, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
               k: Optional[int] = None) -> EventFrame:
-    """Total idle (wait/recv) time per process (§IV-D), sorted descending."""
+    """Total idle (wait/recv) time per process (§IV-D), sorted descending.
+
+    Sums the *inclusive* time (ns) of every call whose name is in
+    ``idle_functions`` — inclusive, because the whole span of an MPI_Wait
+    counts as idle regardless of what bookkeeping runs inside it.
+
+    Args:
+        idle_functions: names treated as idleness (default: MPI_Wait,
+            MPI_Waitall, MPI_Recv, Idle, MPI_Barrier).
+        k: keep only the k most-idle processes (None = all).
+
+    Returns:
+        EventFrame with ``Process`` and ``idle_time`` (ns), most idle first.
+    """
     ev = trace.events
     ent_mask = ev.cat(ET).mask_eq(ENTER) & ev.cat(NAME).mask_isin(idle_functions)
     ent = ev.mask(ent_mask)
@@ -164,23 +227,18 @@ def idle_time(trace, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
 
 def multi_run_analysis(traces: Sequence, metric: str = EXC, top_n: int = 16,
                        label_column: str = "Run") -> EventFrame:
-    """Joined flat profiles across runs (§IV-D, Fig. 12)."""
-    profs = [flat_profile(t, metrics=[metric]) for t in traces]
-    # union of top-N function names across runs, ordered by total weight
-    weights = {}
-    for p in profs:
-        names = p[NAME]
-        vals = p[metric]
-        for nm, v in zip(names[:top_n], vals[:top_n]):
-            weights[nm] = weights.get(nm, 0.0) + float(v)
-    cols = [nm for nm, _ in sorted(weights.items(), key=lambda kv: -kv[1])]
-    labels = []
-    mat = np.zeros((len(traces), len(cols)))
-    for i, (t, p) in enumerate(zip(traces, profs)):
-        labels.append(getattr(t, "label", None) or f"run{i}")
-        lut = {nm: float(v) for nm, v in zip(p[NAME], p[metric])}
-        for j, c in enumerate(cols):
-            mat[i, j] = lut.get(c, 0.0)
+    """Joined flat profiles across runs (§IV-D, Fig. 12).
+
+    Thin wrapper over the TraceDiff alignment machinery
+    (:func:`repro.core.diff.align_flat_profiles`): one row per run, one
+    column per function in the union of each run's top-``top_n`` functions
+    by ``metric`` (columns ordered by total weight across runs).  For
+    deltas, scaling series, or regression flags use the set-scoped ops in
+    :mod:`repro.core.diff` directly.
+    """
+    from .diff import align_flat_profiles
+    labels, cols, mat, _present = align_flat_profiles(traces, metric=metric,
+                                                      top_n=top_n)
     out = EventFrame({label_column: np.asarray(labels, dtype=object)})
     for j, c in enumerate(cols):
         out[c] = mat[:, j]

@@ -516,6 +516,11 @@ class TraceQuery:
         if spec is None:
             raise ValueError(f"unknown analysis op {op_name!r}; "
                              f"registered: {registry.list_ops()}")
+        if spec.scope == "set":
+            raise ValueError(
+                f"{op_name!r} is a multi-trace comparison op; run it on a "
+                f"TraceSet (repro.core.diff.TraceSet) instead of a "
+                f"single-trace query")
         trace = self.collect()
         if spec.needs_structure:
             trace._ensure_structure()
@@ -524,21 +529,7 @@ class TraceQuery:
         return spec.fn(trace, *args, **kwargs)
 
     def __getattr__(self, name: str):
-        if name.startswith("_"):
-            raise AttributeError(name)
-        spec = registry.get_op(name)
-        if spec is None:
-            raise AttributeError(
-                f"{name!r} is neither a TraceQuery method nor a registered "
-                f"analysis op (see repro.core.registry.list_ops())")
-
-        def terminal(*args: Any, **kwargs: Any) -> Any:
-            return self.run(name, *args, **kwargs)
-
-        terminal.__name__ = name
-        terminal.__qualname__ = f"TraceQuery.{name}"
-        terminal.__doc__ = spec.fn.__doc__
-        return terminal
+        return registry.terminal_op(name, self.run, "TraceQuery")
 
 
 def scan(paths, format: str = "auto", processes: Optional[int] = None,

@@ -37,7 +37,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 __all__ = [
-    "OpSpec", "register_op", "get_op", "list_ops",
+    "OpSpec", "register_op", "get_op", "list_ops", "terminal_op",
     "ReaderSpec", "register_reader", "get_reader", "list_readers",
     "resolve_reader", "sniff_format", "rank_shard_procs",
 ]
@@ -51,31 +51,40 @@ __all__ = [
 class OpSpec:
     """A registered analysis operation.
 
-    ``fn(trace, *args, **kwargs)`` runs with the declared prerequisites
-    already materialized on ``trace``.
+    ``scope`` declares the op's input shape: a ``"trace"`` op is
+    ``fn(trace, *args, **kwargs)`` and terminates a single-trace
+    :class:`~repro.core.query.TraceQuery`; a ``"set"`` op is
+    ``fn(traces, *args, **kwargs)`` over a sequence of traces and terminates
+    a :class:`~repro.core.diff.TraceSet` query.  Either way ``fn`` runs with
+    the declared prerequisites already materialized (on every member trace
+    for set-scoped ops).
     """
 
     name: str
     fn: Callable[..., Any]
     needs_structure: bool = False
     needs_messages: bool = False
+    scope: str = "trace"
 
 
 _OP_REGISTRY: Dict[str, OpSpec] = {}
 
 
 def register_op(name: Optional[str] = None, *, needs_structure: bool = False,
-                needs_messages: bool = False) -> Callable:
-    """Decorator registering an analysis op usable from ``TraceQuery``.
+                needs_messages: bool = False, scope: str = "trace") -> Callable:
+    """Decorator registering an analysis op usable from ``TraceQuery``
+    (``scope="trace"``, the default) or ``TraceSet`` (``scope="set"``).
 
     Re-registering a name overwrites the previous spec (last one wins), so
     user code can shadow a built-in analysis.
     """
+    if scope not in ("trace", "set"):
+        raise ValueError(f'scope must be "trace" or "set", got {scope!r}')
 
     def deco(fn: Callable) -> Callable:
         op_name = name or fn.__name__
         _OP_REGISTRY[op_name] = OpSpec(op_name, fn, needs_structure,
-                                       needs_messages)
+                                       needs_messages, scope)
         return fn
 
     return deco
@@ -87,6 +96,30 @@ def get_op(name: str) -> Optional[OpSpec]:
 
 def list_ops() -> List[str]:
     return sorted(_OP_REGISTRY)
+
+
+def terminal_op(name: str, run: Callable[..., Any], owner: str) -> Callable:
+    """Resolve ``name`` as a registered-op terminal bound to ``run`` — the
+    shared ``__getattr__`` dispatch of TraceQuery, SetQuery and TraceSet.
+
+    Raises AttributeError for dunder/private names and unknown ops so
+    ``getattr``/``hasattr`` semantics stay intact on the owning object.
+    """
+    if name.startswith("_"):
+        raise AttributeError(name)
+    spec = get_op(name)
+    if spec is None:
+        raise AttributeError(
+            f"{name!r} is neither a {owner} method nor a registered "
+            f"analysis op (see repro.core.registry.list_ops())")
+
+    def terminal(*args: Any, **kwargs: Any) -> Any:
+        return run(name, *args, **kwargs)
+
+    terminal.__name__ = name
+    terminal.__qualname__ = f"{owner}.{name}"
+    terminal.__doc__ = spec.fn.__doc__
+    return terminal
 
 
 # ---------------------------------------------------------------------------
@@ -167,9 +200,25 @@ def sniff_format(path) -> Optional[str]:
     for spec in specs:
         if spec.sniff and spec.sniff(path, head):
             return spec.name
-    if ext_hit:
-        return ext_hit[0].name
+    # the extension is only trusted for formats without a content sniffer: a
+    # sniffer that just *rejected* this content knows better than the file
+    # name, and handing the path to its reader anyway ends in a bare KeyError
+    # deep inside the parse
+    for spec in ext_hit:
+        if spec.sniff is None:
+            return spec.name
     return None
+
+
+def _describe_readers() -> str:
+    """One line per registered format: extensions and content sniffer."""
+    parts = []
+    for name in list_readers():
+        spec = _READER_REGISTRY[name]
+        ext = "/".join(spec.extensions) if spec.extensions else "any"
+        sniffer = spec.sniff.__name__ if spec.sniff else "extension only"
+        parts.append(f"{name} (extensions: {ext}; sniffer: {sniffer})")
+    return ", ".join(parts)
 
 
 _RANK_RE = re.compile(r"^rank[_\-.](\d+)\.")
@@ -193,6 +242,8 @@ def resolve_reader(path, format: str = "auto") -> ReaderSpec:
         return get_reader(format)
     name = sniff_format(path)
     if name is None:
-        raise ValueError(f"cannot determine trace format of {path!r}; "
-                         f"pass format= one of {list_readers()}")
+        raise ValueError(
+            f"cannot determine trace format of {path!r}: no registered "
+            f"sniffer recognized the content.  Registered formats: "
+            f"{_describe_readers()}.  Pass format=<name> to force one.")
     return get_reader(name)

@@ -19,10 +19,10 @@ from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-# ops_comm/ops_logical/ops_patterns are load-bearing imports even where
+# ops_comm/ops_logical/ops_patterns/diff are load-bearing imports even where
 # unreferenced below: importing them runs their @register_op decorators,
 # which populate the registry every TraceQuery terminal op resolves through
-from . import ops_comm, ops_logical, ops_patterns, ops_summary, structure  # noqa: F401
+from . import diff, ops_comm, ops_logical, ops_patterns, ops_summary, structure  # noqa: F401
 from .cct import CCT
 from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, LEAVE, MATCH,
                         MATCH_TS, NAME, PARENT, PROC, TS)

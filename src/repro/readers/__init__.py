@@ -27,10 +27,10 @@ from .csvreader import read_csv
 from .hlo import read_hlo, read_hlo_file
 from .jsonl import read_jsonl, write_jsonl
 from .otf2j import read_otf2_json, write_otf2_json
-from .parallel import read_parallel, select_shards
+from .parallel import open_many, read_parallel, select_shards
 
 __all__ = [
     "read_csv", "read_jsonl", "write_jsonl", "read_chrome", "read_otf2_json",
     "write_otf2_json", "read_hlo", "read_hlo_file", "read_parallel",
-    "select_shards",
+    "open_many", "select_shards",
 ]

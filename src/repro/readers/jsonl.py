@@ -32,7 +32,13 @@ def _sniff_jsonl(path: str, head: str) -> bool:
         try:
             d = json.loads(line)
         except ValueError:
-            return False
+            # head is a fixed-size prefix: an event line longer than the
+            # sniff window arrives truncated mid-JSON.  Accept only when the
+            # extension *also* claims jsonl — content alone can't distinguish
+            # a truncated event from some unrelated big JSON with a "ts" key,
+            # and misrouting it would crash deep inside read_jsonl.
+            return (len(line) >= 4096 and path.lower().endswith(".jsonl")
+                    and '"ts"' in line[:256])
         return isinstance(d, dict) and "ts" in d
     return False
 

@@ -26,7 +26,8 @@ from ..core.frame import Categorical, EventFrame, concat
 from ..core.registry import resolve_reader
 from ..core.trace import Trace
 
-__all__ = ["read_parallel", "select_shards", "split_jsonl_by_process"]
+__all__ = ["read_parallel", "open_many", "select_shards",
+           "split_jsonl_by_process"]
 
 
 def _ensure_registered() -> None:
@@ -105,6 +106,40 @@ def read_parallel(paths: Sequence[str], kind: str = "auto",
             frames = pool.map(_read_one, args)
     ev = concat(frames).sort_by([PROC, TS])
     return Trace(ev, label=label or f"parallel[{len(sel)}]")
+
+
+def _open_one(args) -> Trace:
+    kind, item, reader_kwargs = args
+    _ensure_registered()
+    return Trace.open(item, format=kind, **(reader_kwargs or {}))
+
+
+def open_many(paths: Sequence, kind: str = "auto",
+              processes: Optional[int] = None,
+              **reader_kwargs) -> List[Trace]:
+    """Open N *whole traces* (batched ingest for TraceSet / cross-run diffs).
+
+    Unlike :func:`read_parallel`, which merges per-location shards of ONE
+    trace, this returns one Trace per item.  Each item goes through the
+    reader registry exactly like ``Trace.open`` (format sniffed per member
+    when ``kind="auto"``) and may itself be a list of shard paths, which is
+    read through the sharded driver.  ``processes`` > 1 opens members in a
+    ``multiprocessing`` pool (spawn: the calling script needs the standard
+    ``if __name__ == "__main__"`` guard); the default is serial, since
+    members opened for comparison are often already in memory or small.
+    """
+    _ensure_registered()
+    if isinstance(paths, (str, os.PathLike)):
+        paths = [paths]  # a bare path must not be iterated char-by-char
+    items = list(paths)
+    args = [(kind, os.fspath(p) if isinstance(p, (str, os.PathLike)) else
+             [os.fspath(q) for q in p], reader_kwargs) for p in items]
+    if not args:
+        return []
+    if processes is None or processes <= 1 or len(args) == 1:
+        return [_open_one(a) for a in args]
+    with mp.get_context("spawn").Pool(min(processes, len(args))) as pool:
+        return pool.map(_open_one, args)
 
 
 def split_jsonl_by_process(path: str, out_dir: str) -> List[str]:

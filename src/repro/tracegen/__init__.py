@@ -22,9 +22,9 @@ All generators are deterministic given ``seed`` and return
 
 from .builder import TraceBuilder
 from .apps import (amg_vcycle, axonn_training, gol, kripke_sweep, loimos,
-                   stencil3d, tortuga)
+                   regression_pair, stencil3d, tortuga)
 
 __all__ = [
     "TraceBuilder", "gol", "stencil3d", "amg_vcycle", "kripke_sweep",
-    "tortuga", "loimos", "axonn_training",
+    "tortuga", "loimos", "axonn_training", "regression_pair",
 ]

@@ -1,6 +1,18 @@
-"""Application-shaped trace generators (see package docstring)."""
+"""Application-shaped trace generators (see package docstring).
+
+Every generator takes a ``perturb`` knob: a mapping from function name to a
+duration multiplier applied at generation time (``{"computeRhs": 1.5}``
+makes every computeRhs call 50% slower, shifting downstream events on the
+same timeline consistently).  Generating the same app twice — once without
+and once with a perturbation — yields a "before/after" pair whose only
+injected difference is known, which is exactly what the TraceDiff subsystem
+(:mod:`repro.core.diff`) needs for regression-hunting tests and benchmarks;
+:func:`regression_pair` packages that recipe.
+"""
 
 from __future__ import annotations
+
+from typing import Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -8,14 +20,21 @@ from ..core.trace import Trace
 from .builder import TraceBuilder
 
 __all__ = ["gol", "stencil3d", "amg_vcycle", "kripke_sweep", "tortuga",
-           "loimos", "axonn_training"]
+           "loimos", "axonn_training", "regression_pair"]
 
 _US = 1_000.0          # 1 microsecond in ns
 _MS = 1_000_000.0      # 1 millisecond in ns
 
+Perturb = Optional[Mapping[str, float]]
+
+
+def _pfac(perturb: Perturb, name: str) -> float:
+    """Duration multiplier the perturbation knob assigns to ``name``."""
+    return float(perturb.get(name, 1.0)) if perturb else 1.0
+
 
 def gol(nprocs: int = 4, iters: int = 10, rows_per_proc: int = 512,
-        imbalance: float = 0.3, seed: int = 0) -> Trace:
+        imbalance: float = 0.3, seed: int = 0, perturb: Perturb = None) -> Trace:
     """1-D row-decomposed Game of Life: compute + halo exchange with ring
     neighbors. Process 0 gets `imbalance` extra work so it drags the critical
     path through its sends (paper Fig. 10/11 structure)."""
@@ -33,6 +52,7 @@ def gol(nprocs: int = 4, iters: int = 10, rows_per_proc: int = 512,
             t = clocks[p]
             work = 200 * _US * (1.0 + (imbalance if p == 0 else 0.0)
                                 + 0.05 * rng.standard_normal())
+            work *= _pfac(perturb, "compute_cells()")
             t = b.call(t, max(work, _US), "compute_cells()", p)
             nbr = (p + 1) % nprocs
             t = b.send(t, 5 * _US, p, nbr, halo_bytes, tag=b_tag)
@@ -52,7 +72,7 @@ def gol(nprocs: int = 4, iters: int = 10, rows_per_proc: int = 512,
 
 
 def stencil3d(nprocs: int = 32, iters: int = 5, side_bytes: float = 6750.0,
-              seed: int = 0) -> Trace:
+              seed: int = 0, perturb: Perturb = None) -> Trace:
     """3-D near-neighbor exchange on a virtual processor grid — produces the
     banded, symmetric comm matrix of Fig. 3 (Laghos) with three message-size
     clusters (corner/edge/face)."""
@@ -67,7 +87,8 @@ def stencil3d(nprocs: int = 32, iters: int = 5, side_bytes: float = 6750.0,
     for it in range(iters):
         for p in range(nprocs):
             t = clocks[p]
-            t = b.call(t, (300 + 30 * rng.standard_normal()) * _US,
+            t = b.call(t, (300 + 30 * rng.standard_normal()) * _US
+                       * _pfac(perturb, "kernel_update()"),
                        "kernel_update()", p)
             c = coords[p]
             for axis in range(3):
@@ -88,7 +109,8 @@ def stencil3d(nprocs: int = 32, iters: int = 5, side_bytes: float = 6750.0,
 
 
 def amg_vcycle(nprocs: int = 16, iters: int = 4, levels: int = 4,
-               fine_bytes: float = 13500.0, seed: int = 0) -> Trace:
+               fine_bytes: float = 13500.0, seed: int = 0,
+               perturb: Perturb = None) -> Trace:
     """Algebraic-multigrid V-cycle: per level, smooth + neighbor exchange with
     message sizes shrinking 4× per level, plus an all-reduce (norm check) at
     the coarsest level (AMG trace structure of Fig. 5)."""
@@ -105,7 +127,8 @@ def amg_vcycle(nprocs: int = 16, iters: int = 4, levels: int = 4,
                 for p in range(nprocs):
                     t = clocks[p]
                     t = b.call(t, (120 / (2.0 ** lev)
-                                   + 8 * rng.standard_normal()) * _US,
+                                   + 8 * rng.standard_normal()) * _US
+                               * _pfac(perturb, f"smooth_l{lev}()"),
                                f"smooth_l{lev}()", p)
                     for q in (p - 1, p + 1):
                         if 0 <= q < nprocs:
@@ -116,7 +139,8 @@ def amg_vcycle(nprocs: int = 16, iters: int = 4, levels: int = 4,
         tmax = clocks.max()
         for p in range(nprocs):
             t = max(clocks[p], tmax)
-            t = b.call(t, 15 * _US, "MPI_Allreduce", p)
+            t = b.call(t, 15 * _US * _pfac(perturb, "MPI_Allreduce"),
+                       "MPI_Allreduce", p)
             clocks[p] = t
     for p in range(nprocs):
         b.leave(clocks[p] + 5 * _US, "main()", p)
@@ -124,7 +148,7 @@ def amg_vcycle(nprocs: int = 16, iters: int = 4, levels: int = 4,
 
 
 def kripke_sweep(nprocs: int = 16, iters: int = 3, cell_bytes: float = 4096.0,
-                 seed: int = 0) -> Trace:
+                 seed: int = 0, perturb: Perturb = None) -> Trace:
     """Wavefront sweep: proc p's work in each sweep depends on p-1's send —
     a long dependency chain that dominates the critical path (Kripke)."""
     rng = np.random.default_rng(seed)
@@ -144,7 +168,8 @@ def kripke_sweep(nprocs: int = 16, iters: int = 3, cell_bytes: float = 4096.0,
                     t0 = t
                     t = max(t, upstream_done + 2 * _US) + 4 * _US
                     b.recv(t0, t - t0, p, src, cell_bytes, tag=it)
-                t = b.call(t, (150 + 10 * rng.standard_normal()) * _US,
+                t = b.call(t, (150 + 10 * rng.standard_normal()) * _US
+                           * _pfac(perturb, "sweep_cells()"),
                            "sweep_cells()", p)
                 if i < len(order) - 1:
                     t = b.send(t, 3 * _US, p, order[i + 1], cell_bytes, tag=it)
@@ -156,7 +181,7 @@ def kripke_sweep(nprocs: int = 16, iters: int = 3, cell_bytes: float = 4096.0,
 
 
 def tortuga(nprocs: int = 16, iters: int = 6, scaling_knee: int = 32,
-            seed: int = 0) -> Trace:
+            seed: int = 0, perturb: Perturb = None) -> Trace:
     """CFD iteration with the Fig. 12 function mix.  Past ``scaling_knee``
     processes, per-process work stops shrinking (surface-to-volume effect), so
     total time across the multirun study rises — reproducing the paper's
@@ -178,11 +203,13 @@ def tortuga(nprocs: int = 16, iters: int = 6, scaling_knee: int = 32,
         send_done = np.zeros(nprocs)
         for p in range(nprocs):
             t = clocks[p]
-            t = b.call(t, base * (1 + 0.04 * rng.standard_normal()),
-                       "computeRhs", p)
-            t = b.call(t, base * 0.22 * (1 + 0.05 * rng.standard_normal()),
-                       "gradC2C", p)
-            t = b.call(t, base * 0.06, "setGhostCvsInterfaces", p)
+            t = b.call(t, base * (1 + 0.04 * rng.standard_normal())
+                       * _pfac(perturb, "computeRhs"), "computeRhs", p)
+            t = b.call(t, base * 0.22 * (1 + 0.05 * rng.standard_normal())
+                       * _pfac(perturb, "gradC2C"), "gradC2C", p)
+            t = b.call(t, base * 0.06
+                       * _pfac(perturb, "setGhostCvsInterfaces"),
+                       "setGhostCvsInterfaces", p)
             for q in (p - 1, p + 1):
                 if 0 <= q < nprocs:
                     t = b.send(t, 3 * _US, p, q, ghost_bytes, tag=it,
@@ -199,7 +226,9 @@ def tortuga(nprocs: int = 16, iters: int = 6, scaling_knee: int = 32,
                 b.event(t + _US, "MpiRecv", "MpiRecv", p, partner=q,
                         size=ghost_bytes, tag=it)
             b.leave(t_wait_end, "MPI_Wait", p)
-            t = b.call(t_wait_end, base * 0.065, "endGhostCvsInterfaces", p)
+            t = b.call(t_wait_end, base * 0.065
+                       * _pfac(perturb, "endGhostCvsInterfaces"),
+                       "endGhostCvsInterfaces", p)
             b.leave(t, "time-loop", p)
             clocks[p] = t
     for p in range(nprocs):
@@ -208,7 +237,7 @@ def tortuga(nprocs: int = 16, iters: int = 6, scaling_knee: int = 32,
 
 
 def loimos(nprocs: int = 128, iters: int = 4, seed: int = 0,
-           hot_procs=(21, 22, 23, 24, 29)) -> Trace:
+           hot_procs=(21, 22, 23, 24, 29), perturb: Perturb = None) -> Trace:
     """Actor-style epidemic simulation: ComputeInteractions / SendVisitMessages
     / ReceiveVisitMessages with a hot subset of processes carrying 2-3× load
     (Fig. 7 structure), plus explicit Idle spans."""
@@ -222,19 +251,21 @@ def loimos(nprocs: int = 128, iters: int = 4, seed: int = 0,
         for p in range(nprocs):
             t = clocks[p]
             boost = 2.2 if p in hot else 1.0
-            t = b.call(t, 90 * boost * (1 + .1 * rng.standard_normal()) * _US,
+            t = b.call(t, 90 * boost * (1 + .1 * rng.standard_normal()) * _US
+                       * _pfac(perturb, "ComputeInteractions()"),
                        "ComputeInteractions()", p)
             dst = int(rng.integers(0, nprocs))
             b.enter(t, "SendVisitMessages()", p)
             b.event(t + 2 * _US, "MpiSend", "MpiSend", p, partner=dst,
                     size=float(rng.integers(256, 4096)), tag=it)
-            t += 60 * boost * 0.8 * _US
+            t += 60 * boost * 0.8 * _US * _pfac(perturb, "SendVisitMessages()")
             b.leave(t, "SendVisitMessages()", p)
-            t = b.call(t, 70 * boost * (1 + .1 * rng.standard_normal()) * _US,
+            t = b.call(t, 70 * boost * (1 + .1 * rng.standard_normal()) * _US
+                       * _pfac(perturb, "ReceiveVisitMessages(const VisitMessage &impl_noname_1)"),
                        "ReceiveVisitMessages(const VisitMessage &impl_noname_1)", p)
             # under-loaded procs idle while hot procs finish
             idle = (180.0 * (2.2 - boost) + 20 * abs(rng.standard_normal())) * _US
-            t = b.call(t, idle, "Idle", p)
+            t = b.call(t, idle * _pfac(perturb, "Idle"), "Idle", p)
             clocks[p] = t
     for p in range(nprocs):
         b.leave(clocks[p] + 5 * _US, "main()", p)
@@ -242,7 +273,7 @@ def loimos(nprocs: int = 128, iters: int = 4, seed: int = 0,
 
 
 def axonn_training(nprocs: int = 8, iters: int = 8, version: int = 0,
-                   seed: int = 0) -> Trace:
+                   seed: int = 0, perturb: Perturb = None) -> Trace:
     """Data/tensor-parallel training iterations at three optimization levels
     (Fig. 13):
 
@@ -263,8 +294,10 @@ def axonn_training(nprocs: int = 8, iters: int = 8, version: int = 0,
     for it in range(iters):
         for p in range(nprocs):
             t = clocks[p]
-            t = b.call(t, (900 + 25 * rng.standard_normal()) * _US, "forward", p, 0)
-            bwd = (1800 + 40 * rng.standard_normal()) * _US
+            t = b.call(t, (900 + 25 * rng.standard_normal()) * _US
+                       * _pfac(perturb, "forward"), "forward", p, 0)
+            bwd = (1800 + 40 * rng.standard_normal()) * _US \
+                * _pfac(perturb, "backward")
             if overlap:
                 # backward on stream 0; bucketed all-reduce on stream 1
                 b.enter(t, "backward", p, 0)
@@ -294,11 +327,56 @@ def axonn_training(nprocs: int = 8, iters: int = 8, version: int = 0,
                         partner=(p - 1) % nprocs, size=grad_bytes, tag=it)
                 b.leave(t + dur, "ncclAllReduce", p, 0)
                 t += dur
-            t = b.call(t, 120 * _US, "optimizer_step", p, 0)
+            t = b.call(t, 120 * _US * _pfac(perturb, "optimizer_step"),
+                       "optimizer_step", p, 0)
             clocks[p] = t
     for p in range(nprocs):
         b.leave(clocks[p] + 5 * _US, "train()", p, 0)
     return b.trace(label=f"axonn_v{version}_{nprocs}")
+
+
+_APPS = {
+    "gol": gol, "stencil3d": stencil3d, "amg_vcycle": amg_vcycle,
+    "kripke_sweep": kripke_sweep, "tortuga": tortuga, "loimos": loimos,
+    "axonn_training": axonn_training,
+}
+
+
+def regression_pair(app: str = "tortuga", func: str = "computeRhs",
+                    factor: float = 1.5, seed: int = 0,
+                    **kw) -> Tuple[Trace, Trace]:
+    """A "before/after" trace pair with one *known* injected regression.
+
+    Generates ``app`` twice with the same seed — identical except that in
+    the "after" run every call of ``func`` is slowed by ``factor`` (the
+    ``perturb`` knob), so downstream timestamps shift consistently while
+    every other function's own durations stay bit-identical.  The pair is
+    the ground truth the TraceDiff subsystem's ``regression_report`` is
+    tested and benchmarked against: its top-ranked function must be
+    ``func``.
+
+    Args:
+        app: generator name (one of gol, stencil3d, amg_vcycle,
+            kripke_sweep, tortuga, loimos, axonn_training).
+        func: exact event name to slow down (as emitted by the generator,
+            e.g. ``"compute_cells()"`` for gol).
+        factor: duration multiplier for the "after" run (> 1 = regression,
+            < 1 = improvement).
+        **kw: forwarded to the generator (nprocs, iters, ...).
+
+    Returns:
+        ``(before, after)`` traces labeled ``<app>-before`` / ``<app>-after``.
+    """
+    try:
+        gen = _APPS[app]
+    except KeyError:
+        raise ValueError(f"unknown app {app!r}; one of {sorted(_APPS)}") \
+            from None
+    before = gen(seed=seed, **kw)
+    after = gen(seed=seed, perturb={func: factor}, **kw)
+    before.label = f"{app}-before"
+    after.label = f"{app}-after"
+    return before, after
 
 
 def _balanced_dims(n: int, k: int):

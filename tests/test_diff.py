@@ -1,0 +1,364 @@
+"""TraceDiff subsystem: TraceSet/SetQuery shared plans + comparison ops.
+
+Ground truth comes from the tracegen perturbation knob: generating the same
+app with and without a ``perturb`` multiplier yields a before/after pair
+whose only injected difference is known.
+"""
+
+import numpy as np
+import pytest
+
+from repro import tracegen as tg
+from repro.core import Filter, TraceSet, list_ops
+from repro.core import structure
+from repro.core.constants import EXC, NAME, PROC, TS
+from repro.core.diff import align_flat_profiles, regression_report
+from repro.readers import write_jsonl
+
+
+# ---------------------------------------------------------------------------
+# injected regressions are recovered
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("app,func", [
+    ("tortuga", "computeRhs"),
+    ("gol", "compute_cells()"),
+    ("stencil3d", "kernel_update()"),
+])
+def test_regression_report_recovers_injection(app, func):
+    kw = dict(nprocs=4, iters=3) if app != "stencil3d" else dict(nprocs=8, iters=3)
+    before, after = tg.regression_pair(app, func=func, factor=1.6, **kw)
+    rep = TraceSet([before, after]).regression_report()
+    assert str(rep[NAME][0]) == func            # top-1 ranked by delta
+    top = {c: rep[c][0] for c in rep.columns}
+    assert top["status"] == "regressed"
+    assert top["delta"] > 0
+    assert top["delta_rel"] == pytest.approx(0.6, rel=1e-9)  # exact knob
+
+
+def test_regression_pair_identical_elsewhere():
+    """The pair differs *only* in the perturbed function's own durations."""
+    before, after = tg.regression_pair("tortuga", func="computeRhs",
+                                       factor=2.0, nprocs=4, iters=2)
+    rep = regression_report([before, after])
+    byname = {str(n): (d, s) for n, d, s in
+              zip(rep[NAME], rep["delta"], rep["status"])}
+    # compute functions other than the injected one keep their durations
+    # (clock shifts only perturb float64 rounding, sub-ns); waits downstream
+    # of the shifted clocks are the only real movers
+    for fn in ("gradC2C", "setGhostCvsInterfaces", "endGhostCvsInterfaces"):
+        assert abs(byname[fn][0]) < 1e-6        # < one millionth of a ns
+        assert byname[fn][1] == "stable"
+
+
+def test_improvement_factor_below_one():
+    before, after = tg.regression_pair("gol", func="compute_cells()",
+                                       factor=0.5, nprocs=4, iters=3)
+    rep = regression_report([before, after])
+    byname = {str(n): s for n, s in zip(rep[NAME], rep["status"])}
+    assert byname["compute_cells()"] == "improved"
+
+
+# ---------------------------------------------------------------------------
+# delta profiles: antisymmetry + name alignment
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["absolute", "normalized"])
+def test_diff_flat_profile_antisymmetric(mode):
+    a = tg.tortuga(nprocs=4, iters=2, seed=0)
+    b = tg.tortuga(nprocs=4, iters=2, seed=1)
+    ab = TraceSet([a, b]).diff_flat_profile(mode=mode)
+    ba = TraceSet([b, a]).diff_flat_profile(mode=mode)
+    # rows align (same |delta| ranking, same name tie-breaks)...
+    assert list(ab[NAME]) == list(ba[NAME])
+    da = np.asarray(ab[[c for c in ab.columns if c.startswith("delta|")][0]])
+    db = np.asarray(ba[[c for c in ba.columns if c.startswith("delta|")][0]])
+    # ...and diff(a,b) == -diff(b,a)
+    np.testing.assert_allclose(da, -db, rtol=0, atol=0)
+
+
+def test_name_alignment_functions_in_one_run_only():
+    a = tg.tortuga(nprocs=4, iters=2)
+    b = tg.tortuga(nprocs=4, iters=2)
+    # drop gradC2C from the "after" run entirely: it vanished
+    b_small = b.filter(Filter(NAME, "not-in", ["gradC2C"]))
+    b_small.label = "after"
+    a.label = "before"
+    rep = regression_report([a, b_small])
+    byname = {str(n): s for n, s in zip(rep[NAME], rep["status"])}
+    assert byname["gradC2C"] == "vanished"
+    # and the reverse direction flags it as new
+    rep2 = regression_report([b_small, a])
+    byname2 = {str(n): (s, r) for n, s, r in
+               zip(rep2[NAME], rep2["status"], rep2["delta_rel"])}
+    assert byname2["gradC2C"][0] == "new"
+    assert np.isinf(byname2["gradC2C"][1])
+    # the aligned profile zero-fills the missing run, keeps the name
+    labels, names, mat, present = align_flat_profiles([a, b_small])
+    j = names.index("gradC2C")
+    assert present[0, j] and not present[1, j]
+    assert mat[1, j] == 0.0 and mat[0, j] > 0
+
+
+def test_diff_load_imbalance_pair():
+    # skew (not uniform slowdown) changes max/mean: gol puts extra work on
+    # process 0, so raising that knob raises compute_cells' imbalance
+    balanced = tg.gol(nprocs=8, iters=3, imbalance=0.05)
+    skewed = tg.gol(nprocs=8, iters=3, imbalance=0.8)
+    d = TraceSet([balanced, skewed]).diff_load_imbalance()
+    byname = {str(n): v for n, v in zip(d[NAME], d["delta"])}
+    assert byname["compute_cells()"] > 0.05
+    # the skewed compute and the waits it induces top the ranking
+    assert "compute_cells()" in set(map(str, d[NAME][:2]))
+    # deltas sorted descending
+    dd = np.asarray(d["delta"], np.float64)
+    assert np.all(np.diff(dd) <= 1e-12)
+
+
+def test_diff_time_profile_localizes_change():
+    before, after = tg.regression_pair("tortuga", func="computeRhs",
+                                       factor=1.7, nprocs=4, iters=3)
+    d = TraceSet([before, after]).diff_time_profile(num_bins=16)
+    assert list(d["bin"]) == list(range(16))
+    # the perturbed function carries the largest total |delta| → first column
+    funcs = [c for c in d.columns if c not in ("bin", "bin_frac")]
+    assert funcs[0] == "computeRhs"
+    assert np.asarray(d["computeRhs"]).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# scaling series
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("app,sizes", [
+    ("gol", (2, 4, 8)),
+    ("stencil3d", (8, 16, 32)),
+])
+def test_scaling_analysis_monotone(app, sizes):
+    gen = getattr(tg, app)
+    runs = [gen(nprocs=n, iters=2) for n in sizes]
+    s = TraceSet(runs).scaling_analysis()
+    nprocs = np.asarray(s["num_processes"], np.int64)
+    assert list(nprocs) == sorted(sizes)        # ordered by process count
+    # per-process work is constant in these apps, so total summed exclusive
+    # time grows monotonically with the process count
+    tot = np.asarray(s[f"{EXC}.total"], np.float64)
+    assert np.all(np.diff(tot) > 0)
+    # baseline row is its own reference
+    assert s["speedup"][0] == pytest.approx(1.0)
+    assert s["efficiency"][0] == pytest.approx(1.0)
+
+
+def test_scaling_analysis_weak_vs_strong():
+    runs = [tg.tortuga(nprocs=n, iters=2) for n in (4, 8)]
+    strong = TraceSet(runs).scaling_analysis(mode="strong")
+    weak = TraceSet(runs).scaling_analysis(mode="weak")
+    # same speedups, different efficiency normalization
+    np.testing.assert_allclose(np.asarray(strong["speedup"]),
+                               np.asarray(weak["speedup"]))
+    assert strong["efficiency"][1] == pytest.approx(
+        weak["efficiency"][1] / 2.0)
+    with pytest.raises(ValueError):
+        TraceSet(runs).scaling_analysis(mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# TraceSet / SetQuery mechanics
+# ---------------------------------------------------------------------------
+
+def test_one_plan_over_three_traces_structure_once(monkeypatch):
+    """One shared plan over >= 3 traces; event matching runs exactly once
+    per member even across two terminal comparison ops."""
+    traces = [tg.tortuga(nprocs=4, iters=2, seed=s) for s in range(3)]
+    calls = {"n": 0}
+    orig = structure.match_events
+
+    def counting(ev):
+        calls["n"] += 1
+        return orig(ev)
+
+    monkeypatch.setattr(structure, "match_events", counting)
+    ts = TraceSet(traces)
+    q = (ts.query()
+           .filter(Filter(NAME, "not-in", ["MPI_Isend"]))
+           .restrict_processes(range(3)))
+    d = q.diff_flat_profile()            # terminal #1: materializes members
+    rep = q.regression_report()          # terminal #2: reuses them
+    assert calls["n"] == 3               # once per member, not per op
+    assert len([c for c in d.columns if c.startswith("delta|")]) == 2
+    assert len(rep) > 0
+    # restriction applied to every member
+    for t in q.collect():
+        assert set(np.asarray(t.events[PROC]).tolist()) <= {0, 1, 2}
+
+
+def test_set_query_matches_manual_per_trace_chain():
+    a = tg.gol(nprocs=4, iters=3, seed=0)
+    b = tg.gol(nprocs=4, iters=3, seed=1)
+    ts_all = np.asarray(a.events[TS], np.float64)
+    lo, hi = np.percentile(ts_all, 20), np.percentile(ts_all, 80)
+    via_set = (TraceSet([a, b]).query().slice_time(lo, hi)
+               .diff_flat_profile())
+    manual = regression_report(
+        [a.slice_time(lo, hi), b.slice_time(lo, hi)])
+    # same aligned name set either way
+    assert set(map(str, via_set[NAME])) == set(map(str, manual[NAME]))
+
+
+def test_single_trace_op_maps_over_set():
+    ts = TraceSet([tg.gol(nprocs=2, iters=2, seed=s) for s in range(3)])
+    profs = ts.query().flat_profile()
+    assert isinstance(profs, list) and len(profs) == 3
+    ids = ts.idle_time()
+    assert len(ids) == 3
+
+
+def test_set_ops_rejected_on_single_trace_query():
+    t = tg.gol(nprocs=2, iters=1)
+    with pytest.raises(ValueError, match="TraceSet"):
+        t.query().run("regression_report")
+    with pytest.raises(ValueError, match="at least 2"):
+        TraceSet([t]).regression_report()
+    with pytest.raises(ValueError):
+        TraceSet([])
+    with pytest.raises(AttributeError):
+        TraceSet([t]).no_such_op()
+
+
+def test_traceset_open_sniffs_and_labels(tmp_path):
+    traces = [tg.gol(nprocs=2, iters=2, seed=s) for s in range(3)]
+    paths = []
+    for i, t in enumerate(traces):
+        p = str(tmp_path / f"run{i}.jsonl")
+        write_jsonl(t, p)
+        paths.append(p)
+    ts = TraceSet.open(paths, labels=["r0", "r1", "r2"])
+    assert ts.labels == ["r0", "r1", "r2"]
+    assert [len(t) for t in ts] == [len(t) for t in traces]
+    d = ts.diff_flat_profile()
+    assert any(c == f"{EXC}|r1" for c in d.columns)
+
+
+def test_parallel_preparation_matches_serial(tmp_path):
+    before, after = tg.regression_pair("gol", func="compute_cells()",
+                                       factor=1.5, nprocs=4, iters=3)
+    ts = TraceSet([before, after])
+    serial = ts.query().run("regression_report")
+    par = ts.query().run("regression_report", processes=2)
+    assert list(serial[NAME]) == list(par[NAME])
+    np.testing.assert_allclose(np.asarray(serial["delta"]),
+                               np.asarray(par["delta"]))
+
+
+def test_multirun_analysis_still_matches_diff_alignment():
+    """Trace.multirun_analysis is now a thin wrapper over the TraceDiff
+    alignment — same rows/columns contract as the seed implementation."""
+    from repro.core.trace import Trace
+    traces = [tg.tortuga(nprocs=n, iters=2) for n in (4, 8)]
+    df = Trace.multirun_analysis(traces, top_n=6)
+    assert df.columns[0] == "Run"
+    assert "computeRhs" in df.columns
+    labels, names, mat, _ = align_flat_profiles(traces, top_n=6)
+    np.testing.assert_allclose(np.asarray(df["computeRhs"]),
+                               mat[:, names.index("computeRhs")])
+
+
+def test_set_ops_registered():
+    have = set(list_ops())
+    assert {"diff_flat_profile", "diff_time_profile", "scaling_analysis",
+            "diff_load_imbalance", "regression_report"} <= have
+
+
+# ---------------------------------------------------------------------------
+# review hardening: run indices, totals, caching, batched-open input shapes
+# ---------------------------------------------------------------------------
+
+def test_out_of_range_run_index_is_loud():
+    a, b = tg.gol(nprocs=2, iters=1, seed=0), tg.gol(nprocs=2, iters=1, seed=1)
+    with pytest.raises(IndexError):
+        regression_report([a, b], baseline=-3)
+    with pytest.raises(IndexError):
+        regression_report([a, b], target=2)
+    with pytest.raises(IndexError):
+        TraceSet([a, b]).diff_flat_profile(baseline=5)
+
+
+def test_scaling_total_not_truncated_by_top_n():
+    runs = [tg.tortuga(nprocs=n, iters=2) for n in (4, 8)]
+    s1 = TraceSet(runs).scaling_analysis(top_n=1)
+    s8 = TraceSet(runs).scaling_analysis(top_n=None)
+    # the .total column sums ALL functions regardless of column truncation
+    np.testing.assert_allclose(np.asarray(s1[f"{EXC}.total"]),
+                               np.asarray(s8[f"{EXC}.total"]))
+
+
+def test_chained_set_ops_profile_each_member_once(monkeypatch):
+    from repro.core import ops_summary
+    calls = {"n": 0}
+    orig = ops_summary.flat_profile
+
+    def counting(trace, *a, **kw):
+        calls["n"] += 1
+        return orig(trace, *a, **kw)
+
+    monkeypatch.setattr(ops_summary, "flat_profile", counting)
+    traces = [tg.gol(nprocs=2, iters=2, seed=s) for s in range(2)]
+    q = TraceSet(traces).query()
+    q.regression_report()
+    q.diff_flat_profile()     # second op over the same prepared members
+    assert calls["n"] == 2    # one aggregation pass per member, not per op
+
+
+def test_open_many_single_path_string(tmp_path):
+    from repro.readers import open_many
+    t = tg.gol(nprocs=2, iters=1)
+    p = str(tmp_path / "one.jsonl")
+    write_jsonl(t, p)
+    out = open_many(p)        # bare string, not iterated char-by-char
+    assert len(out) == 1 and len(out[0]) == len(t)
+
+
+def test_jsonl_sniff_survives_truncated_head(tmp_path):
+    # first event line longer than the 8KB sniff window
+    t = tg.gol(nprocs=2, iters=1)
+    p = str(tmp_path / "fat.jsonl")
+    write_jsonl(t, p)
+    with open(p) as f:
+        lines = f.read().splitlines()
+    import json as _json
+    fat = _json.loads(lines[0])
+    fat["blob"] = "x" * 10000
+    with open(p, "w") as f:
+        f.write(_json.dumps(fat) + "\n")
+        f.write("\n".join(lines[1:]) + "\n")
+    from repro.core.trace import Trace
+    assert len(Trace.open(p)) == len(t)   # sniffed as jsonl despite truncation
+
+
+def test_labels_do_not_mutate_caller_traces():
+    a = tg.gol(nprocs=2, iters=1, seed=0)
+    b = tg.gol(nprocs=2, iters=1, seed=1)
+    a.label = "prod-run"
+    ts = TraceSet([a, b], labels=["base", "exp"])
+    assert ts.labels == ["base", "exp"]
+    assert a.label == "prod-run"          # caller's object untouched
+    # clones share the events frame, so structure caches once for both
+    ts[0]._ensure_structure()
+    assert a._structured or "time.exc" in a.events  # columns landed in place
+
+
+def test_processes_honored_on_cached_members(monkeypatch):
+    from repro.core.diff import SetQuery
+    calls = {"n": 0}
+    orig = SetQuery._pool_prepare
+
+    def counting(traces, steps, ns, nm, processes):
+        calls["n"] += 1
+        return orig(traces, steps, ns, nm, processes)
+
+    monkeypatch.setattr(SetQuery, "_pool_prepare", staticmethod(counting))
+    traces = [tg.gol(nprocs=2, iters=1, seed=s) for s in range(2)]
+    q = TraceSet(traces).query().restrict_processes([0, 1])
+    q.collect()                             # caches members, no prereqs yet
+    q.run("diff_flat_profile", processes=2)  # pool must still be used
+    assert calls["n"] == 1

@@ -1,0 +1,34 @@
+"""Docs drift check: docs/api.md must match the live registries.
+
+This wires ``tools/gen_api_docs.py --check`` into the tier-1 verify flow —
+registering/changing an op or reader without regenerating the API page
+fails here with the regeneration command in the message.
+"""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_api_docs_in_sync_with_registry():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "gen_api_docs.py"),
+         "--check"],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert proc.returncode == 0, (
+        "docs/api.md is out of date with the op/reader registry.\n"
+        "Regenerate with: PYTHONPATH=src python tools/gen_api_docs.py\n"
+        f"stderr: {proc.stderr}")
+
+
+def test_readme_and_guides_exist():
+    for rel in ("README.md", "docs/api.md", "docs/comparing-traces.md"):
+        path = os.path.join(REPO, rel)
+        assert os.path.exists(path), f"{rel} missing"
+        with open(path) as f:
+            assert len(f.read()) > 500, f"{rel} suspiciously empty"

@@ -126,3 +126,30 @@ def test_hlo_reader_models_collectives():
     assert (cm.diagonal() == 0).all()
     bd = t.comm_comp_breakdown()
     assert np.asarray(bd["comm_only"] + bd["overlap"]).sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# format resolution errors (ISSUE 2 satellite)
+# ---------------------------------------------------------------------------
+
+def test_open_unrecognized_content_raises_valueerror(tmp_path):
+    """An unrecognized file must raise ValueError listing the registered
+    formats and their sniffers — never a bare KeyError from a reader the
+    extension happened to match."""
+    # extension matches chrome/otf2j, but no content sniffer accepts it
+    p = tmp_path / "mystery.json"
+    p.write_text('{"foo": 1, "bar": [2, 3]}')
+    with pytest.raises(ValueError) as exc:
+        Trace.open(str(p))
+    msg = str(exc.value)
+    assert "cannot determine trace format" in msg
+    for fmt in ("chrome", "csv", "hlo", "jsonl", "otf2j"):
+        assert fmt in msg
+    assert "sniffer" in msg and "_sniff_chrome" in msg
+    assert "format=" in msg  # tells the user the escape hatch
+
+    # same for content with no extension hit at all
+    q = tmp_path / "mystery.bin"
+    q.write_text("\x00\x01 binary junk")
+    with pytest.raises(ValueError, match="cannot determine trace format"):
+        Trace.open(str(q))

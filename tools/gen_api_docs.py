@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Generate docs/api.md from the live op/reader registries.
+
+The API page is *derived*, never hand-edited: every section is rendered
+from what is actually registered in :mod:`repro.core.registry` (op name,
+signature, declared prerequisites, scope, docstring; reader name,
+extensions, sniffer, shard hint).  That makes drift impossible to hide —
+``--check`` re-renders and compares against the committed file, and the
+test suite runs it (tests/test_docs.py), so adding or changing a registered
+op without regenerating the docs fails the verify flow.
+
+Usage::
+
+    PYTHONPATH=src python tools/gen_api_docs.py           # rewrite docs/api.md
+    PYTHONPATH=src python tools/gen_api_docs.py --check   # exit 1 on drift
+"""
+
+from __future__ import annotations
+
+import argparse
+import inspect
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+HEADER = """\
+# API reference — registered analysis ops and trace readers
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: PYTHONPATH=src python tools/gen_api_docs.py -->
+
+This page is rendered directly from the live registries in
+`repro.core.registry`, so it always matches the code: every op listed here
+is callable as a terminal method on a lazy query (`trace.query().<op>()`
+for single-trace ops, `TraceSet(...).query().<op>()` / `TraceSet.<op>()`
+for set-scoped comparison ops), and every reader is resolvable through
+`Trace.open(path, format="auto")`.
+
+Register your own the same way the built-ins do:
+
+```python
+from repro.core import register_op
+
+@register_op("my_analysis", needs_structure=True)
+def my_analysis(trace, **kwargs):
+    ...
+```
+"""
+
+
+def _sig(fn) -> str:
+    try:
+        return str(inspect.signature(fn))
+    except (TypeError, ValueError):  # pragma: no cover - C callables etc.
+        return "(...)"
+
+
+def _doc(fn) -> str:
+    doc = inspect.getdoc(fn)
+    return doc.rstrip() if doc else "*(no docstring)*"
+
+
+def render() -> str:
+    # importing trace/readers populates both registries (op modules + diff
+    # are load-bearing imports of repro.core.trace)
+    import repro.readers  # noqa: F401
+    from repro.core import trace as _trace  # noqa: F401
+    from repro.core import registry
+
+    lines = [HEADER]
+
+    for scope, title, blurb in (
+        ("trace", "Single-trace analysis ops",
+         "Terminal methods on `Trace` / `TraceQuery` (paper §IV). "
+         "`needs structure` ops get enter/leave matching, parents and "
+         "inclusive/exclusive metrics materialized first; `needs messages` "
+         "ops get send/recv matching."),
+        ("set", "Multi-trace comparison ops (TraceDiff)",
+         "Terminal methods on `TraceSet` / `SetQuery` "
+         "(`repro.core.diff`): the first argument is the *sequence* of "
+         "member traces, prepared by one shared query plan."),
+    ):
+        lines.append(f"\n## {title}\n\n{blurb}\n")
+        for name in registry.list_ops():
+            spec = registry.get_op(name)
+            if spec.scope != scope:
+                continue
+            prereqs = [p for p, on in (("structure", spec.needs_structure),
+                                       ("messages", spec.needs_messages)) if on]
+            lines.append(f"### `{name}`\n")
+            lines.append(f"```python\n{name}{_sig(spec.fn)}\n```\n")
+            lines.append(f"*needs: {', '.join(prereqs) if prereqs else 'nothing'}"
+                         f" · scope: {spec.scope}*\n")
+            lines.append(_doc(spec.fn) + "\n")
+
+    lines.append("\n## Registered trace readers\n\n"
+                 "Formats `Trace.open(path, format=\"auto\")` resolves; "
+                 "content sniffers take precedence over file extensions, and "
+                 "a `shard hint` lets the parallel driver skip per-rank "
+                 "shards a process-restricted plan cannot need.\n")
+    for name in registry.list_readers():
+        spec = registry.get_reader(name)
+        ext = ", ".join(f"`{e}`" for e in spec.extensions) or "*(none)*"
+        sniffer = f"`{spec.sniff.__name__}`" if spec.sniff else "*(extension only)*"
+        shard = f"`{spec.shard_procs.__name__}`" if spec.shard_procs else "—"
+        lines.append(f"### `{name}`\n")
+        lines.append(f"```python\n{name}.read{_sig(spec.read)}\n```\n")
+        lines.append(f"*extensions: {ext} · sniffer: {sniffer} · "
+                     f"shard hint: {shard}*\n")
+        lines.append(_doc(spec.read) + "\n")
+
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if docs/api.md is out of date instead of "
+                         "rewriting it")
+    ap.add_argument("--out", default=os.path.join(REPO, "docs", "api.md"))
+    args = ap.parse_args(argv)
+
+    text = render()
+    if args.check:
+        try:
+            with open(args.out) as f:
+                on_disk = f.read()
+        except OSError:
+            on_disk = None
+        if on_disk != text:
+            print(f"{args.out} is out of date with the registry; "
+                  f"regenerate with: PYTHONPATH=src python tools/gen_api_docs.py",
+                  file=sys.stderr)
+            return 1
+        print(f"{args.out} is in sync with the registry")
+        return 0
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
