@@ -1,0 +1,132 @@
+"""Out-of-core streaming vs in-memory execution: peak RSS and wall time.
+
+Acceptance benchmark for the streaming engine: ``flat_profile`` over a
+10M-event sharded JSONL trace must return **byte-identical** results under
+streaming execution at **>= 2x lower peak RSS** than the fully
+materialized path.
+
+Each phase runs in its own subprocess so ``ru_maxrss`` is a clean
+per-phase high-water mark; the parent compares SHA-256 digests of the
+result frames (names + counts + metric bytes).
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_streaming [--events N]
+
+or through ``benchmarks/run.py``.  BENCH_STREAM_EVENTS overrides the
+default event count (the full 10M takes a few minutes to generate+parse;
+CI smoke runs use ~1M).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import resource
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_EVENTS = int(os.environ.get("BENCH_STREAM_EVENTS", 10_000_000))
+NPROCS = 8
+
+
+def _chunk_rows(events: int) -> int:
+    # scale chunks with the benchmark size so the streaming phase's peak is
+    # dominated by the chunk, not the Python/numpy import baseline, at
+    # smoke sizes too
+    return min(250_000, max(events // 8, 10_000))
+
+
+def _digest(prof) -> str:
+    import numpy as np
+    h = hashlib.sha256()
+    h.update("\x00".join(map(str, prof["Name"])).encode())
+    h.update(np.ascontiguousarray(np.asarray(prof["count"],
+                                             np.int64)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(prof["time.exc"],
+                                             np.float64)).tobytes())
+    return h.hexdigest()
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_phase(mode: str, shard_dir: str, chunk_rows: int) -> None:
+    """Child process: one execution mode, JSON result on stdout."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.trace import Trace
+    shards = sorted(os.path.join(shard_dir, f) for f in os.listdir(shard_dir))
+    t0 = time.time()
+    if mode == "memory":
+        trace = Trace.open(shards)
+        prof = trace.flat_profile()
+    else:
+        handle = Trace.open(shards, streaming=True, chunk_rows=chunk_rows)
+        prof = handle.flat_profile()
+    dt = time.time() - t0
+    print(json.dumps({"mode": mode, "seconds": round(dt, 2),
+                      "peak_rss_mb": round(_peak_rss_mb(), 1),
+                      "rows": len(prof), "digest": _digest(prof)}))
+
+
+def bench(events: int = DEFAULT_EVENTS) -> dict:
+    from repro.tracegen import big_trace
+    chunk_rows = _chunk_rows(events)
+    out = {"events": events, "chunk_rows": chunk_rows, "nprocs": NPROCS}
+    with tempfile.TemporaryDirectory(prefix="bench_stream_") as d:
+        shard_dir = os.path.join(d, "shards")
+        t0 = time.time()
+        big_trace(shard_dir, nprocs=NPROCS,
+                  events_per_proc=max(events // NPROCS, 1000))
+        out["gen_seconds"] = round(time.time() - t0, 1)
+        out["trace_mb"] = round(sum(
+            os.path.getsize(os.path.join(shard_dir, f))
+            for f in os.listdir(shard_dir)) / 1e6, 1)
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src")
+                   + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        for mode in ("memory", "stream"):
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_streaming",
+                 "--phase", mode, "--shards", shard_dir,
+                 "--chunk-rows", str(chunk_rows)],
+                capture_output=True, text=True, cwd=REPO, env=env,
+                check=True)
+            out[mode] = json.loads(r.stdout.strip().splitlines()[-1])
+    out["identical"] = out["memory"]["digest"] == out["stream"]["digest"]
+    mem_rss = out["memory"]["peak_rss_mb"]
+    stream_rss = out["stream"]["peak_rss_mb"]
+    out["rss_ratio"] = round(mem_rss / max(stream_rss, 1e-9), 2)
+    out["rss_target_met"] = out["rss_ratio"] >= 2.0
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", type=int, default=DEFAULT_EVENTS)
+    ap.add_argument("--phase", choices=["memory", "stream"])
+    ap.add_argument("--shards")
+    ap.add_argument("--chunk-rows", type=int, default=250_000)
+    args = ap.parse_args(argv)
+    if args.phase:
+        run_phase(args.phase, args.shards, args.chunk_rows)
+        return 0
+    res = bench(args.events)
+    print(json.dumps(res, indent=1))
+    if not res["identical"]:
+        print("FAIL: streaming result differs from in-memory", file=sys.stderr)
+        return 1
+    if not res["rss_target_met"]:
+        print("FAIL: peak-RSS ratio below 2x", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,9 +5,10 @@ Sections (one per paper table/figure + the roofline deliverable):
   2. per-op scaling exponents (§VI)      — bench_ops
   3. lazy query plans vs eager (§IV-E)   — bench_query_plan
   4. TraceDiff shared-plan diffs (§IV-D) — bench_diff
-  5. case studies (§VII, Figs. 7-13)     — bench_case_studies
-  6. Pallas kernel roofline              — bench_kernels
-  7. roofline table (all dry-run cells)  — roofline
+  5. out-of-core streaming vs in-memory  — bench_streaming
+  6. case studies (§VII, Figs. 7-13)     — bench_case_studies
+  7. Pallas kernel roofline              — bench_kernels
+  8. roofline table (all dry-run cells)  — roofline
 """
 
 from __future__ import annotations
@@ -24,31 +25,35 @@ def main():
     print("=" * 72)
 
     from . import bench_reader_scaling
-    print("\n## [1/7] Reader & op scaling vs trace size (paper Fig. 5)")
+    print("\n## [1/8] Reader & op scaling vs trace size (paper Fig. 5)")
     print(json.dumps(bench_reader_scaling.bench(), indent=1))
 
     from . import bench_ops
-    print("\n## [2/7] Per-operation scaling exponents (paper §VI)")
+    print("\n## [2/8] Per-operation scaling exponents (paper §VI)")
     print(json.dumps(bench_ops.bench(), indent=1))
 
     from . import bench_query_plan
-    print("\n## [3/7] Lazy query plans: fused chain vs eager seed path (§IV-E)")
+    print("\n## [3/8] Lazy query plans: fused chain vs eager seed path (§IV-E)")
     print(json.dumps(bench_query_plan.bench(), indent=1))
 
     from . import bench_diff
-    print("\n## [4/7] TraceDiff: shared-plan N-trace diff vs sequential runs (§IV-D)")
+    print("\n## [4/8] TraceDiff: shared-plan N-trace diff vs sequential runs (§IV-D)")
     print(json.dumps(bench_diff.bench(), indent=1))
 
+    from . import bench_streaming
+    print("\n## [5/8] Out-of-core streaming vs in-memory (peak RSS, identical results)")
+    print(json.dumps(bench_streaming.bench(), indent=1))
+
     from . import bench_case_studies
-    print("\n## [5/7] Case studies (paper §VII, Figs. 7-13)")
+    print("\n## [6/8] Case studies (paper §VII, Figs. 7-13)")
     print(json.dumps(bench_case_studies.bench(), indent=1))
 
     from . import bench_kernels
-    print("\n## [6/7] Pallas kernel block-size roofline")
+    print("\n## [7/8] Pallas kernel block-size roofline")
     print(json.dumps(bench_kernels.bench(), indent=1))
 
     from . import roofline
-    print("\n## [7/7] Roofline table (from dry-run artifacts)")
+    print("\n## [8/8] Roofline table (from dry-run artifacts)")
     roofline.main()
 
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")

@@ -13,15 +13,21 @@ from .constants import (ENTER, ET, EXC, INC, INSTANT, LEAVE, MPI_RECV,
 from .diff import SetQuery, TraceSet
 from .filters import Filter, time_window_filter
 from .frame import Categorical, EventFrame, concat
+from .frame import optimize_dtypes
 from .ops_patterns import mass, matrix_profile
 from .query import TraceQuery, scan
-from .registry import (list_ops, list_readers, register_op, register_reader)
+from .registry import (PlanHints, list_ops, list_readers, register_chunked,
+                       register_op, register_reader, register_streaming)
+from .streaming import StreamingTrace, StreamingUnsupported
 from .trace import Trace
 
 __all__ = [
     "Trace", "TraceQuery", "scan", "TraceSet", "SetQuery", "EventFrame",
-    "Categorical", "concat", "Filter", "time_window_filter", "CCT",
+    "Categorical", "concat", "optimize_dtypes", "Filter",
+    "time_window_filter", "CCT",
     "CCTNode", "mass", "matrix_profile", "register_op", "register_reader",
+    "register_streaming", "register_chunked", "PlanHints",
+    "StreamingTrace", "StreamingUnsupported",
     "list_ops", "list_readers",
     "TS", "ET", "NAME", "PROC", "THREAD", "ENTER", "LEAVE", "INSTANT",
     "INC", "EXC", "MSG_SIZE", "PARTNER", "TAG", "MPI_SEND", "MPI_RECV",

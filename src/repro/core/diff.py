@@ -43,6 +43,7 @@ from .filters import Filter
 from .frame import EventFrame
 from .query import (ProcessStep, SliceTimeStep, TraceQuery, _decompose_filter,
                     _TraceSource)
+from .streaming import StreamAgg, StreamingTrace
 
 __all__ = ["TraceSet", "SetQuery", "align_flat_profiles", "diff_flat_profile",
            "diff_time_profile", "scaling_analysis", "diff_load_imbalance",
@@ -120,9 +121,58 @@ def align_flat_profiles(traces: Sequence, metric: str = EXC,
 
 def _ensure_structured(traces: Sequence) -> None:
     """Defensive prerequisite materialization for direct (non-query) calls;
-    no-op per member when the SetQuery engine already ensured it."""
+    no-op per member when the SetQuery engine already ensured it.  Streaming
+    members have no whole-trace structure — their per-op aggregates stitch
+    it chunk by chunk instead."""
     for t in traces:
-        t._ensure_structure()
+        if not isinstance(t, StreamingTrace):
+            t._ensure_structure()
+
+
+def _member_op(t, op_name: str, *args, **kwargs):
+    """Run a single-trace op on one set member: in-memory members call the
+    registered fn directly (prerequisites already ensured); streaming
+    members execute the op's combinable form out of core."""
+    if isinstance(t, StreamingTrace):
+        return t.run(op_name, *args, **kwargs)
+    return registry.get_op(op_name).fn(t, *args, **kwargs)
+
+
+class _MetricTotalAgg(StreamAgg):
+    """Streaming total of a call metric over the whole selection — the
+    per-row semantics of the eager scaling_analysis total (each completed
+    call contributes; an unmatched Enter contributes 0), *not* the
+    flat-profile group semantics (where one unmatched Enter zeroes its
+    whole function)."""
+
+    needs_calls = True
+
+    def __init__(self, metric: str = EXC):
+        if metric not in ("time.inc", EXC):
+            from .streaming import StreamingUnsupported
+            raise StreamingUnsupported(
+                f"streaming scaling_analysis supports metrics "
+                f"('time.inc', {EXC!r}), got {metric!r}; open the members "
+                f"with streaming=False for custom metric columns")
+        self.metric = metric
+        self.total = 0.0
+
+    def update(self, chunk) -> None:
+        calls = chunk.calls
+        if calls is None or len(calls.name) == 0:
+            return
+        vals = calls.inc if self.metric == "time.inc" else calls.exc
+        self.total += float(np.nan_to_num(vals).sum())
+
+    def result(self, ctx) -> float:
+        return self.total
+
+
+def _stream_metric_total(t: StreamingTrace, metric: str) -> float:
+    from .streaming import execute_streaming
+    spec = registry.OpSpec("_metric_total", fn=None,
+                           streaming=_MetricTotalAgg)
+    return execute_streaming(t, t._steps, spec, (), {"metric": metric})
 
 
 # flat profiles keyed per trace object — the shared-plan workflow chains
@@ -134,6 +184,15 @@ _PROFILE_CACHE = weakref.WeakKeyDictionary()
 
 
 def _flat_profile_cached(t, metric: str):
+    if isinstance(t, StreamingTrace):
+        # handles are immutable (paths + plan steps), so no staleness guard
+        try:
+            entry = _PROFILE_CACHE.setdefault(t, {})
+        except TypeError:  # pragma: no cover - defensive
+            entry = {}
+        if metric not in entry:
+            entry[metric] = t.run("flat_profile", metrics=[metric])
+        return entry[metric]
     try:
         entry = _PROFILE_CACHE.get(t)
     except TypeError:       # non-weakrefable trace subclass: just compute
@@ -271,8 +330,8 @@ def diff_time_profile(traces: Sequence, num_bins: int = 32, metric: str = EXC,
     base_i, tgt_i = _resolve_run(baseline, n), _resolve_run(target, n)
     profs = {}
     for i in (base_i, tgt_i):
-        p = ops_summary.time_profile(traces[i], num_bins=num_bins,
-                                     metric=metric, normalized=normalized)
+        p = _member_op(traces[i], "time_profile", num_bins=num_bins,
+                       metric=metric, normalized=normalized)
         funcs = [c for c in p.columns if c not in ("bin_start", "bin_end")]
         profs[i] = {f: np.asarray(p[f], np.float64) for f in funcs}
     union = sorted(set(profs[base_i]) | set(profs[tgt_i]))
@@ -327,6 +386,14 @@ def scaling_analysis(traces: Sequence, metric: str = EXC,
     dur = np.empty(len(runs))
     tot = np.empty(len(runs))
     for i, t in enumerate(runs):
+        if isinstance(t, StreamingTrace):
+            # whole-stream facts: span from the one-pass stats, total from
+            # a dedicated per-call aggregate (matches the eager per-row
+            # nan_to_num sum exactly, including unbalanced traces)
+            st = t.stats()
+            dur[i] = (st.ts_max - st.ts_min) if st.n_events else 0.0
+            tot[i] = _stream_metric_total(t, metric)
+            continue
         ev = t.events
         ts = np.asarray(ev[TS], np.float64)
         dur[i] = float(ts.max() - ts.min()) if len(ts) else 0.0
@@ -381,8 +448,8 @@ def diff_load_imbalance(traces: Sequence, metric: str = EXC, baseline: int = 0,
     col = f"{metric}.imbalance"
     imb: Dict[int, Dict[str, float]] = {}
     for i in (base_i, tgt_i):
-        li = ops_summary.load_imbalance(traces[i], metric=metric,
-                                        num_processes=num_processes)
+        li = _member_op(traces[i], "load_imbalance", metric=metric,
+                        num_processes=num_processes)
         imb[i] = {str(nm): float(v)
                   for nm, v in zip(li[NAME], np.asarray(li[col], np.float64))}
     union = sorted(set(imb[base_i]) | set(imb[tgt_i]))
@@ -522,7 +589,11 @@ class SetQuery:
     def explain(self) -> str:
         """The shared plan, as TraceQuery.explain, once per member source."""
         lines = [f"set of {len(self._traces)} trace(s); shared plan:"]
-        proto = TraceQuery(_TraceSource(self._traces[0]), self._steps)
+        first = self._traces[0]
+        if isinstance(first, StreamingTrace):
+            proto = TraceQuery(first.query()._source, self._steps)
+        else:
+            proto = TraceQuery(_TraceSource(first), self._steps)
         lines.extend("  " + ln for ln in proto.explain().splitlines())
         return "\n".join(lines)
 
@@ -537,12 +608,19 @@ class SetQuery:
         """Run collect + prerequisite materialization in a spawn pool and
         reassemble the prepared Traces in the parent."""
         from .trace import Trace
+        from ..readers.parallel import spawn_pool_ok
         import multiprocessing as mp
         args = [(t.events, t._structured, t._msg_match, t.definitions,
                  t.label, tuple(steps), needs_structure, needs_messages)
                 for t in traces]
-        with mp.get_context("spawn").Pool(min(processes, len(args))) as pool:
-            parts = pool.map(_prepare_member, args)
+        if not spawn_pool_ok():
+            # stdin / -c / REPL __main__ cannot survive a spawn re-import;
+            # degrade to serial preparation instead of crashing the pool
+            parts = [_prepare_member(a) for a in args]
+        else:
+            with mp.get_context("spawn").Pool(min(processes,
+                                                  len(args))) as pool:
+                parts = pool.map(_prepare_member, args)
         out = []
         for ev, structured, mm, label, defs in parts:
             t = Trace(ev, definitions=defs, label=label)
@@ -554,8 +632,19 @@ class SetQuery:
     def _prepare(self, needs_structure: bool, needs_messages: bool,
                  processes: Optional[int] = None) -> List:
         """Collect every member's plan and ensure prerequisites, caching the
-        materialized traces on this query (shared-plan execution)."""
+        materialized traces on this query (shared-plan execution).
+
+        Streaming members are never materialized: the shared plan's steps
+        are bound onto the handle (``with_steps``) and each terminal op
+        executes them out of core, chunk by chunk."""
         use_pool = bool(processes and processes > 1)
+        if self._collected is None and any(
+                isinstance(t, StreamingTrace) for t in self._traces):
+            self._collected = [
+                t.with_steps(tuple(t._steps) + self._steps)
+                if isinstance(t, StreamingTrace)
+                else TraceQuery(_TraceSource(t), self._steps).collect()
+                for t in self._traces]
         if self._collected is None:
             if use_pool and len(self._traces) > 1:
                 self._collected = self._pool_prepare(
@@ -570,8 +659,9 @@ class SetQuery:
             # prerequisites may still be unmaterialized — honor the pool
             # request for that (possibly heavy) work too
             idx = [i for i, t in enumerate(self._collected)
-                   if (needs_structure and not t._structured)
-                   or (needs_messages and t._msg_match is None)]
+                   if not isinstance(t, StreamingTrace)
+                   and ((needs_structure and not t._structured)
+                        or (needs_messages and t._msg_match is None))]
             if len(idx) > 1:
                 prepared = self._pool_prepare(
                     [self._collected[i] for i in idx], (), needs_structure,
@@ -579,6 +669,8 @@ class SetQuery:
                 for i, t in zip(idx, prepared):
                     self._collected[i] = t
         for t in self._collected:
+            if isinstance(t, StreamingTrace):
+                continue  # structure stitches per chunk inside each op
             if needs_structure:
                 t._ensure_structure()
             if needs_messages:
@@ -606,7 +698,7 @@ class SetQuery:
                                processes)
         if spec.scope == "set":
             return spec.fn(traces, *args, **kwargs)
-        return [spec.fn(t, *args, **kwargs) for t in traces]
+        return [_member_op(t, op_name, *args, **kwargs) for t in traces]
 
     def __getattr__(self, name: str):
         return registry.terminal_op(name, self.run, "SetQuery")
@@ -615,6 +707,10 @@ class SetQuery:
 def _relabel(t, label: str):
     """Shallow clone of a Trace under a new label, sharing the events frame
     and every derivation cache with the original."""
+    if isinstance(t, StreamingTrace):
+        clone = t.with_steps(t._steps)
+        clone.label = label
+        return clone
     clone = type(t)(t.events, definitions=t.definitions, label=label)
     clone._structured = t._structured
     clone._msg_match = t._msg_match
@@ -653,11 +749,30 @@ class TraceSet:
     @classmethod
     def open(cls, paths: Sequence, format: str = "auto",
              processes: Optional[int] = None,
-             labels: Optional[Sequence[str]] = None, **kw) -> "TraceSet":
+             labels: Optional[Sequence[str]] = None, streaming: bool = False,
+             chunk_rows: Optional[int] = None, **kw) -> "TraceSet":
         """Open N traces (any registered format; content is sniffed per
         member exactly like ``Trace.open``).  Each item may itself be a list
         of per-rank shard paths — those go through the parallel shard
-        driver.  ``processes`` > 1 opens members concurrently."""
+        driver.  ``processes`` > 1 opens members concurrently.
+
+        ``streaming=True`` opens every member as an out-of-core
+        :class:`~repro.core.streaming.StreamingTrace`: comparison ops then
+        stream each member chunk by chunk (diff profiles across traces that
+        do not fit in RAM together)."""
+        if streaming:
+            if processes is not None:
+                raise ValueError(
+                    "processes only applies to eager ingest; streaming "
+                    "members are handles that read nothing at open time")
+            from .streaming import DEFAULT_CHUNK_ROWS
+            members = [StreamingTrace(p, format=format,
+                                      chunk_rows=chunk_rows
+                                      or DEFAULT_CHUNK_ROWS, **kw)
+                       for p in paths]
+            return cls(members, labels=labels)
+        if chunk_rows is not None:
+            raise ValueError("chunk_rows only applies with streaming=True")
         from ..readers.parallel import open_many
         return cls(open_many(paths, kind=format, processes=processes, **kw),
                    labels=labels)

@@ -20,7 +20,7 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 
 import numpy as np
 
-__all__ = ["Categorical", "EventFrame", "concat"]
+__all__ = ["Categorical", "EventFrame", "concat", "optimize_dtypes"]
 
 
 class Categorical:
@@ -344,6 +344,34 @@ def _fmt(v: Any) -> str:
     if isinstance(v, (float, np.floating)):
         return f"{v:.6g}"
     return str(v)
+
+
+_DOWNCASTS = (np.int8, np.int16, np.int32)
+
+
+def optimize_dtypes(frame: EventFrame) -> EventFrame:
+    """Downcast integer columns in place to the narrowest dtype that holds
+    their values (ingest-side memory optimization).
+
+    Every consumer converts through ``np.asarray(col, np.int64/float64)``
+    before arithmetic, so narrowing the *storage* dtype is lossless; for
+    trace data it typically shrinks process/thread/partner/tag columns 4-8×
+    and (for short traces) timestamps 2×.  String columns are already
+    dictionary-encoded by ``Categorical``.  Returns the same frame.
+    """
+    for name in frame.columns:
+        col = frame.column(name)
+        if isinstance(col, Categorical) or not isinstance(col, np.ndarray):
+            continue
+        if col.dtype.kind != "i" or col.dtype.itemsize <= 4 or len(col) == 0:
+            continue
+        lo, hi = int(col.min()), int(col.max())
+        for dt in _DOWNCASTS:
+            info = np.iinfo(dt)
+            if info.min <= lo and hi <= info.max:
+                frame._cols[name] = col.astype(dt)
+                break
+    return frame
 
 
 def concat(frames: Sequence[EventFrame]) -> EventFrame:

@@ -7,10 +7,11 @@ from typing import Callable, Optional, Sequence, Tuple
 import numpy as np
 
 from .constants import (DEFAULT_COMM_PREFIXES, ENTER, ET, INC, LEAVE, MPI_RECV,
-                        MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, THREAD, TS)
+                        MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, TS)
 from .frame import EventFrame
 from .intervals import merge_intervals
-from .registry import register_op
+from .registry import register_op, register_streaming
+from .streaming import StreamAgg, grow_to
 
 __all__ = [
     "comm_matrix", "message_histogram", "comm_by_process", "comm_over_time",
@@ -124,6 +125,196 @@ def comm_over_time(trace, num_bins: int = 32, output: str = "size"
     vals, _ = np.histogram(np.asarray(s[TS], np.float64), bins=edges,
                            weights=np.nan_to_num(w))
     return vals, edges
+
+
+# ---------------------------------------------------------------------------
+# streaming (out-of-core) forms — message aggregates are naturally
+# combinable: every send instant carries its (sender, receiver, bytes)
+# inline, so per-chunk partial sums merge exactly
+# ---------------------------------------------------------------------------
+
+def _chunk_sends(chunk):
+    """(src, dst, size) arrays of the send instants in a chunk."""
+    ev = chunk.events
+    if PARTNER not in ev:
+        return None
+    sel = ev.cat(NAME).mask_eq(MPI_SEND)
+    if not np.any(sel):
+        return None
+    return (np.asarray(ev[PROC], np.int64)[sel],
+            np.asarray(ev[PARTNER], np.int64)[sel],
+            np.nan_to_num(np.asarray(ev[MSG_SIZE], np.float64)[sel]),
+            np.asarray(ev[TS], np.float64)[sel])
+
+
+def _check_partner_range(extent: int, n: int, op: str) -> None:
+    """The in-memory ops size their output by the selected trace's process
+    count and raise on partner ids beyond it (np.add.at IndexError);
+    silently truncating here would turn that loud failure into wrong
+    zeros — e.g. restrict_processes([0]) then comm_matrix()."""
+    if extent > n:
+        raise IndexError(
+            f"streaming {op}: message partner ids reach process "
+            f"{extent - 1} but the selected stream only contains processes "
+            f"0..{n - 1}; widen the process restriction to cover message "
+            f"partners (the in-memory path fails on this selection too)")
+
+
+@register_streaming("comm_matrix")
+class _CommMatrixAgg(StreamAgg):
+    """Combinable comm matrix: per-chunk (sender, receiver) partial sums."""
+
+    def __init__(self, output: str = "size"):
+        self.output = output
+        self._mat = np.zeros((0, 0))
+        self._neg = np.zeros(0)  # sends with partner -1, keyed by sender
+        self._extent = 0
+
+    def update(self, chunk) -> None:
+        s = _chunk_sends(chunk)
+        if s is None:
+            return
+        src, dst, size, _ts = s
+        w = size if self.output == "size" else np.ones(len(src))
+        neg = dst < 0
+        if np.any(neg):
+            # the in-memory op's np.add.at wraps dst=-1 into the LAST
+            # column of its n×n matrix; n is only known at finalize, so
+            # park these per sender and place them then
+            n = int(src[neg].max()) + 1
+            self._neg = grow_to(self._neg, (n,))
+            np.add.at(self._neg, src[neg], w[neg])
+            src, dst, w = src[~neg], dst[~neg], w[~neg]
+        if not len(src):
+            return
+        n = int(max(src.max(), dst.max())) + 1
+        self._extent = max(self._extent, n)
+        self._mat = grow_to(self._mat, (n, n))
+        np.add.at(self._mat, (src, dst), w)
+
+    def result(self, ctx) -> np.ndarray:
+        n = ctx.num_processes
+        _check_partner_range(self._extent, n, "comm_matrix")
+        out = np.zeros((max(n, 0), max(n, 0)))
+        sub = self._mat[:n, :n]
+        out[: sub.shape[0], : sub.shape[1]] = sub
+        if n and np.any(self._neg):
+            out[: min(n, len(self._neg)), n - 1] += self._neg[:n]
+        return out
+
+
+@register_streaming("comm_by_process")
+class _CommByProcessAgg(StreamAgg):
+    """Combinable per-process communication volume."""
+
+    def __init__(self, output: str = "size"):
+        self.output = output
+        self._sent = np.zeros(0)
+        self._recv = np.zeros(0)
+        self._neg = 0.0  # receives credited to partner -1 (wraps to last)
+        self._extent = 0
+
+    def update(self, chunk) -> None:
+        s = _chunk_sends(chunk)
+        if s is None:
+            return
+        src, dst, size, _ts = s
+        w = size if self.output == "size" else np.ones(len(src))
+        n = int(src.max()) + 1
+        self._sent = grow_to(self._sent, (n,))
+        np.add.at(self._sent, src, w)
+        neg = dst < 0
+        if np.any(neg):
+            # in-memory np.add.at(recv, -1, w) wraps to the last process
+            self._neg += float(w[neg].sum())
+            dst, w = dst[~neg], w[~neg]
+        if not len(dst):
+            return
+        n = int(dst.max()) + 1
+        self._extent = max(self._extent, n)
+        self._recv = grow_to(self._recv, (n,))
+        np.add.at(self._recv, dst, w)
+
+    def result(self, ctx) -> EventFrame:
+        n = ctx.num_processes
+        _check_partner_range(self._extent, n, "comm_by_process")
+        sent = np.zeros(max(n, 0))
+        recv = np.zeros(max(n, 0))
+        sent[: min(n, len(self._sent))] = self._sent[:n]
+        recv[: min(n, len(self._recv))] = self._recv[:n]
+        if n:
+            recv[n - 1] += self._neg
+        return EventFrame({PROC: np.arange(n, dtype=np.int32), "sent": sent,
+                           "received": recv, "total": sent + recv})
+
+
+@register_streaming("message_histogram")
+class _MessageHistogramAgg(StreamAgg):
+    """Combinable size histogram: a stats pre-pass fixes the [min, max]
+    byte range (the same edges ``np.histogram`` derives), then per-chunk
+    counts over those edges merge exactly."""
+
+    needs_stats = True
+
+    def __init__(self, bins: int = 10):
+        self.bins = bins
+        self._counts = np.zeros(bins, np.int64)
+        self._edges: Optional[np.ndarray] = None
+
+    def begin(self, stats) -> None:
+        if stats.n_sends == 0:
+            return
+        self._edges = np.histogram_bin_edges(
+            np.asarray([stats.size_min, stats.size_max]), bins=self.bins,
+            range=(stats.size_min, stats.size_max))
+
+    def update(self, chunk) -> None:
+        if self._edges is None:
+            return
+        s = _chunk_sends(chunk)
+        if s is None:
+            return
+        _src, _dst, size, _ts = s
+        c, _ = np.histogram(size, bins=self._edges)
+        self._counts += c
+
+    def result(self, ctx) -> Tuple[np.ndarray, np.ndarray]:
+        if self._edges is None:
+            return np.zeros(self.bins, np.int64), np.linspace(0, 1,
+                                                              self.bins + 1)
+        return self._counts, self._edges
+
+
+@register_streaming("comm_over_time")
+class _CommOverTimeAgg(StreamAgg):
+    """Combinable traffic-over-time: bin edges come from the stats pre-pass
+    (whole-stream time span), per-chunk weighted histograms merge exactly
+    for integer byte counts."""
+
+    needs_stats = True
+
+    def __init__(self, num_bins: int = 32, output: str = "size"):
+        self.num_bins = num_bins
+        self.output = output
+        self._vals = np.zeros(num_bins)
+        self._edges: Optional[np.ndarray] = None
+
+    def begin(self, stats) -> None:
+        t0 = stats.ts_min if stats.n_events else 0.0
+        t1 = stats.ts_max if stats.n_events else 1.0
+        self._edges = np.linspace(t0, max(t1, t0 + 1), self.num_bins + 1)
+
+    def update(self, chunk) -> None:
+        s = _chunk_sends(chunk)
+        if s is None:
+            return
+        _src, _dst, size, ts = s
+        w = size if self.output == "size" else np.ones(len(ts))
+        v, _ = np.histogram(ts, bins=self._edges, weights=w)
+        self._vals += v
+
+    def result(self, ctx) -> Tuple[np.ndarray, np.ndarray]:
+        return self._vals, self._edges
 
 
 def comm_name_mask(events: EventFrame,

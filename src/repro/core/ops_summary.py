@@ -2,6 +2,12 @@
 
 All functions take a Trace whose structure columns (matching, parent,
 time.inc/time.exc) are already materialized; Trace methods guarantee that.
+
+Each op with a combinable partial-aggregate form also registers a streaming
+aggregator (``register_streaming``) so the out-of-core executor
+(:mod:`repro.core.streaming`) can run it chunk by chunk over traces that do
+not fit in RAM; the aggregators reproduce the in-memory results (exactly,
+for integer-ns traces — see docs/streaming.md).
 """
 
 from __future__ import annotations
@@ -12,7 +18,8 @@ import numpy as np
 
 from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, NAME, PROC, TS)
 from .frame import Categorical, EventFrame
-from .registry import register_op
+from .registry import register_op, register_streaming
+from .streaming import StreamAgg, StreamingUnsupported, grow_to
 
 
 @register_op("flat_profile", needs_structure=True)
@@ -223,6 +230,310 @@ def idle_time(trace, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
     order = np.argsort(-out, kind="stable")
     res = EventFrame({PROC: order.astype(np.int32), "idle_time": out[order]})
     return res.head(k) if k else res
+
+
+# ---------------------------------------------------------------------------
+# streaming (out-of-core) forms — combinable partial aggregates per chunk
+# ---------------------------------------------------------------------------
+
+_CALL_METRICS = (INC, EXC)
+
+
+def _check_metric(metric: str, op: str) -> None:
+    if metric not in _CALL_METRICS:
+        raise StreamingUnsupported(
+            f"streaming {op} supports metrics {_CALL_METRICS}, got "
+            f"{metric!r}; materialize with .collect() for custom metrics")
+
+
+def _alpha(ctx, nf: int):
+    """(sorted names, gather order, code→alphabetical-position map) over the
+    first ``nf`` global codes — restores the category-code group order the
+    in-memory groupby produces.  ``arr[order]`` re-orders a code-indexed
+    axis alphabetically; ``inv[code]`` is a code's alphabetical position."""
+    names = np.asarray(ctx.names.names[:nf], dtype=object).astype(str)
+    order = np.argsort(names, kind="stable")
+    inv = np.empty(nf, np.int64)
+    inv[order] = np.arange(nf)
+    return names[order], order, inv
+
+
+def _pad_to(arr: np.ndarray, shape) -> np.ndarray:
+    """Zero-padded copy of ``arr`` with exactly ``shape`` (accumulators may
+    be under-grown when late chunks discovered names but produced no calls,
+    and over-grown by the power-of-two capacity)."""
+    out = np.zeros(shape, dtype=arr.dtype)
+    sub = arr[tuple(slice(0, min(a, s)) for a, s in zip(arr.shape, shape))]
+    out[tuple(slice(0, n) for n in sub.shape)] = sub
+    return out
+
+
+@register_streaming("flat_profile")
+class _FlatProfileAgg(StreamAgg):
+    """Combinable flat profile: per-name (or per name×process) metric sums
+    over completed calls plus call counts over every Enter row.  Sums of
+    integer-ns metrics are exact in float64 (< 2⁵³), so merging partials is
+    order-independent and the result matches the in-memory op bit for bit.
+    A name with an unmatched Enter reproduces the in-memory NaN-poisoning:
+    its group total collapses to 0 (``nan_to_num`` after aggregation)."""
+
+    needs_calls = True
+
+    def __init__(self, metrics: Sequence[str] = (EXC,),
+                 groupby_column: str = NAME, per_process: bool = False):
+        if groupby_column != NAME:
+            raise StreamingUnsupported(
+                f"streaming flat_profile groups by {NAME!r} only, got "
+                f"groupby_column={groupby_column!r}")
+        self.metrics = list(metrics)
+        for m in self.metrics:
+            _check_metric(m, "flat_profile")
+        self.per_process = per_process
+        nm = len(self.metrics)
+        if per_process:
+            self._counts = np.zeros((0, 0), np.int64)
+            self._sums = np.zeros((nm, 0, 0))
+        else:
+            self._counts = np.zeros(0, np.int64)
+            self._sums = np.zeros((nm, 0))
+
+    def update(self, chunk) -> None:
+        ev = chunk.events
+        is_enter = ev.cat(ET).mask_eq(ENTER)
+        codes = chunk.gcodes[is_enter]
+        calls = chunk.calls
+        nf = len(chunk.names)
+        metric_vals = {INC: calls.inc, EXC: calls.exc}
+        if self.per_process:
+            procs = np.asarray(ev[PROC], np.int64)[is_enter]
+            np_ = int(max(procs.max() + 1 if len(procs) else 0,
+                          calls.proc.max() + 1 if len(calls.proc) else 0))
+            self._counts = grow_to(self._counts, (nf, np_))
+            self._sums = grow_to(self._sums, (self._sums.shape[0], nf, np_))
+            np.add.at(self._counts, (codes, procs), 1)
+            for i, m in enumerate(self.metrics):
+                np.add.at(self._sums[i], (calls.name, calls.proc),
+                          metric_vals[m])
+        else:
+            self._counts = grow_to(self._counts, (nf,))
+            self._sums = grow_to(self._sums, (self._sums.shape[0], nf))
+            np.add.at(self._counts, codes, 1)
+            for i, m in enumerate(self.metrics):
+                np.add.at(self._sums[i], calls.name, metric_vals[m])
+
+    def result(self, ctx) -> EventFrame:
+        nf = len(ctx.names)
+        if nf == 0 or not np.any(self._counts):
+            out = EventFrame()
+            out[NAME] = np.asarray([])
+            for m in self.metrics:
+                out[m] = np.asarray([])
+            return out
+        names_alpha, order, inv = _alpha(ctx, nf)
+        open_names, open_procs = ctx.open_calls
+        nm = len(self.metrics)
+        if self.per_process:
+            np_ = max(self._counts.shape[1], self._sums.shape[2], 1)
+            counts = _pad_to(self._counts, (nf, np_))[order]
+            sums = _pad_to(self._sums, (nm, nf, np_))[:, order]
+            if len(open_names):
+                sums[:, inv[open_names], open_procs] = 0.0
+            f_alpha, p_alpha = np.nonzero(counts)
+            out = EventFrame()
+            out[NAME] = Categorical(f_alpha.astype(np.int32), names_alpha)
+            out[PROC] = p_alpha.astype(np.int64)
+            out["count"] = counts[f_alpha, p_alpha]
+            for i, m in enumerate(self.metrics):
+                out[m] = sums[i, f_alpha, p_alpha]
+        else:
+            counts = _pad_to(self._counts, (nf,))[order]
+            sums = _pad_to(self._sums, (nm, nf))[:, order]
+            if len(open_names):
+                sums[:, inv[open_names]] = 0.0
+            present = np.nonzero(counts)[0]
+            out = EventFrame()
+            out[NAME] = Categorical(present.astype(np.int32), names_alpha)
+            out["count"] = counts[present]
+            for i, m in enumerate(self.metrics):
+                out[m] = sums[i, present]
+        order = np.argsort(-np.asarray(out[self.metrics[0]]), kind="stable")
+        return out.take(order)
+
+
+@register_streaming("time_profile")
+class _TimeProfileAgg(StreamAgg):
+    """Combinable time profile: the exact five-histogram decomposition of
+    the in-memory op, accumulated per chunk over completed calls.  A stats
+    pre-pass fixes the global [t_min, t_max] bin edges first (the stream is
+    read twice; peak memory stays bounded).  Partial-sum order differs from
+    the in-memory single pass, so values agree to float64 rounding, not
+    necessarily bit-for-bit."""
+
+    needs_calls = True
+    needs_stats = True
+
+    def __init__(self, num_bins: int = 32, metric: str = EXC,
+                 normalized: bool = False, backend: str = "numpy"):
+        _check_metric(metric, "time_profile")
+        if backend != "numpy":
+            raise StreamingUnsupported(
+                f"streaming time_profile supports backend='numpy' only, "
+                f"got {backend!r}")
+        self.num_bins = num_bins
+        self.metric = metric
+        self.normalized = normalized
+        self._H = np.zeros((5, num_bins + 2, 0))
+        self._Z = np.zeros((num_bins, 0))
+        self._edges: Optional[np.ndarray] = None
+
+    def begin(self, stats) -> None:
+        if stats.n_events == 0:
+            return
+        t0, t1 = stats.ts_min, stats.ts_max
+        if t1 <= t0:
+            t1 = t0 + 1.0
+        self._edges = np.linspace(t0, t1, self.num_bins + 1)
+
+    def update(self, chunk) -> None:
+        calls = chunk.calls
+        if calls is None or len(calls.name) == 0:
+            return
+        nf = len(chunk.names)
+        self._H = grow_to(self._H, (5, self.num_bins + 2, nf))
+        self._Z = grow_to(self._Z, (self.num_bins, nf))
+        starts, ends = calls.start, calls.end
+        inc = ends - starts
+        w = np.nan_to_num(calls.inc if self.metric == INC else calls.exc)
+        rate = np.where(inc > 0, w / np.maximum(inc, 1e-30), 0.0)
+        codes = calls.name
+        si = np.searchsorted(self._edges, starts, side="left")
+        ei = np.searchsorted(self._edges, ends, side="left")
+        np.add.at(self._H[0], (si, codes), rate)
+        np.add.at(self._H[1], (ei, codes), rate)
+        np.add.at(self._H[2], (si, codes), rate * starts)
+        np.add.at(self._H[3], (ei, codes), rate * starts)
+        np.add.at(self._H[4], (ei, codes), rate * (ends - starts))
+        zsel = inc <= 0
+        if np.any(zsel & (w > 0)):
+            b = np.clip(np.searchsorted(self._edges, starts[zsel],
+                                        side="right") - 1,
+                        0, self.num_bins - 1)
+            np.add.at(self._Z, (b, codes[zsel]), w[zsel])
+
+    def result(self, ctx) -> EventFrame:
+        if self._edges is None:
+            return EventFrame({"bin_start": np.asarray([]),
+                               "bin_end": np.asarray([])})
+        nf = len(ctx.names)
+        H = _pad_to(self._H, (5, self.num_bins + 2, nf))
+        Z = _pad_to(self._Z, (self.num_bins, nf))
+        cum = np.cumsum(H[:, : self.num_bins + 1, :], axis=1)
+        t = self._edges[:, None]
+        C = t * (cum[0] - cum[1]) - (cum[2] - cum[3]) + cum[4]
+        prof = np.maximum(np.diff(C, axis=0), 0.0) + Z
+        names_alpha, order, _inv = _alpha(ctx, nf)
+        prof = prof[:, order]
+        if self.normalized:
+            denom = prof.sum(axis=1, keepdims=True)
+            prof = prof / np.maximum(denom, 1e-30)
+        out = EventFrame({"bin_start": self._edges[:-1],
+                          "bin_end": self._edges[1:]})
+        keep = np.nonzero(prof.sum(axis=0) > 0)[0]
+        order = keep[np.argsort(-prof[:, keep].sum(axis=0), kind="stable")]
+        for f in order:
+            out[str(names_alpha[f])] = prof[:, f]
+        return out
+
+
+@register_streaming("load_imbalance")
+class _LoadImbalanceAgg(StreamAgg):
+    """Combinable load imbalance: the per-(function, process) metric totals
+    merge exactly across chunks (integer-ns sums); the ratio arithmetic at
+    finalize is identical to the in-memory op."""
+
+    needs_calls = True
+
+    def __init__(self, metric: str = EXC, num_processes: int = 5,
+                 top_functions: Optional[int] = None):
+        _check_metric(metric, "load_imbalance")
+        self.metric = metric
+        self.num_processes = num_processes
+        self.top_functions = top_functions
+        self._tot = np.zeros((0, 0))
+
+    def update(self, chunk) -> None:
+        calls = chunk.calls
+        if calls is None or len(calls.name) == 0:
+            return
+        nf = len(chunk.names)
+        np_ = int(calls.proc.max()) + 1
+        self._tot = grow_to(self._tot, (nf, np_))
+        vals = calls.inc if self.metric == INC else calls.exc
+        np.add.at(self._tot, (calls.name, calls.proc), vals)
+
+    def result(self, ctx) -> EventFrame:
+        nf = len(ctx.names)
+        nprocs = ctx.num_processes
+        tot = _pad_to(self._tot, (nf, max(nprocs, 1)))
+        names_alpha, order, _inv = _alpha(ctx, nf)
+        tot = tot[order]
+        active = tot.sum(axis=1) > 0
+        mean = tot.sum(axis=1) / max(nprocs, 1)
+        mx = tot.max(axis=1) if tot.size else np.zeros(nf)
+        imb = np.where(mean > 0, mx / np.maximum(mean, 1e-30), 0.0)
+        topk = np.argsort(-tot, axis=1)[:, : self.num_processes]
+        sel = np.nonzero(active)[0]
+        order = sel[np.argsort(-mean[sel], kind="stable")]
+        if self.top_functions:
+            order = order[: self.top_functions]
+        return EventFrame({
+            NAME: Categorical(order.astype(np.int32), names_alpha),
+            f"{self.metric}.imbalance": imb[order],
+            "Top processes": np.asarray(
+                [list(map(int, topk[i])) for i in order], dtype=object),
+            f"{self.metric}.mean": mean[order],
+            f"{self.metric}.max": mx[order],
+        })
+
+
+@register_streaming("idle_time")
+class _IdleTimeAgg(StreamAgg):
+    """Combinable idle time: per-process inclusive-ns sums of idle-named
+    completed calls — exact merge for integer-ns traces."""
+
+    needs_calls = True
+
+    def __init__(self, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
+                 k: Optional[int] = None):
+        self.idle = [str(n) for n in idle_functions]
+        self.k = k
+        self._out = np.zeros(0)
+
+    def update(self, chunk) -> None:
+        calls = chunk.calls
+        if calls is None or len(calls.name) == 0:
+            return
+        idle_codes = [c for c in
+                      (chunk.names.code(n) for n in self.idle)
+                      if c >= 0]
+        if not idle_codes:
+            return
+        sel = np.isin(calls.name, np.asarray(idle_codes, np.int64))
+        if not np.any(sel):
+            return
+        np_ = int(calls.proc[sel].max()) + 1
+        self._out = grow_to(self._out, (np_,))
+        np.add.at(self._out, calls.proc[sel], np.nan_to_num(calls.inc[sel]))
+
+    def result(self, ctx) -> EventFrame:
+        nprocs = ctx.num_processes
+        out = np.zeros(max(nprocs, 0))
+        sub = self._out[:nprocs]
+        out[: len(sub)] = sub
+        order = np.argsort(-out, kind="stable")
+        res = EventFrame({PROC: order.astype(np.int32),
+                          "idle_time": out[order]})
+        return res.head(self.k) if self.k else res
 
 
 def multi_run_analysis(traces: Sequence, metric: str = EXC, top_n: int = 16,

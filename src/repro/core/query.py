@@ -330,6 +330,23 @@ class _TraceSource:
                f"{len(self.trace)} events)"
 
 
+class _StreamSource:
+    """Out-of-core source: a :class:`~repro.core.streaming.StreamingTrace`
+    handle.  Terminal ops with a registered streaming form execute chunk by
+    chunk; ``collect()`` (and ops without one) materialize explicitly."""
+
+    def __init__(self, handle):
+        self.handle = handle
+
+    def load(self, procs=None, proc_bounds=None):
+        return self.handle.load_raw(procs=procs, proc_bounds=proc_bounds)
+
+    def describe(self) -> str:
+        h = self.handle
+        return (f"stream({len(h.paths)} path(s), format={h.format!r}, "
+                f"chunk_rows={h.chunk_rows})")
+
+
 class _ScanSource:
     """Deferred sharded ingest: paths are read (in parallel) at collect time,
     after the plan's process restriction is known, so excluded shards are
@@ -521,6 +538,14 @@ class TraceQuery:
                 f"{op_name!r} is a multi-trace comparison op; run it on a "
                 f"TraceSet (repro.core.diff.TraceSet) instead of a "
                 f"single-trace query")
+        if isinstance(self._source, _StreamSource):
+            # out-of-core execution: fused masks run per chunk and the op's
+            # combinable partial aggregates merge across chunks.  Ops
+            # without a streaming form raise StreamingUnsupported with the
+            # escape hatches spelled out.
+            from .streaming import execute_streaming
+            return execute_streaming(self._source.handle, self._steps,
+                                     spec, args, kwargs)
         trace = self.collect()
         if spec.needs_structure:
             trace._ensure_structure()

@@ -33,14 +33,47 @@ from __future__ import annotations
 
 import os
 import re
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass, replace
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Set, Tuple)
 
 __all__ = [
-    "OpSpec", "register_op", "get_op", "list_ops", "terminal_op",
-    "ReaderSpec", "register_reader", "get_reader", "list_readers",
-    "resolve_reader", "sniff_format", "rank_shard_procs",
+    "OpSpec", "register_op", "register_streaming", "get_op", "list_ops",
+    "terminal_op",
+    "ReaderSpec", "register_reader", "register_chunked", "get_reader",
+    "list_readers",
+    "resolve_reader", "sniff_format", "rank_shard_procs", "PlanHints",
 ]
+
+
+@dataclass(frozen=True)
+class PlanHints:
+    """Pushdown hints a query plan hands to a chunked reader.
+
+    Every field is advisory: a reader may drop rows/chunks that provably
+    cannot satisfy the hints (cheaper than parsing then masking), or ignore
+    any hint entirely — the streaming executor re-applies the full fused
+    mask per chunk, so correctness never depends on reader cooperation.
+
+    * ``procs`` — explicit set of process ids the plan restricts to;
+    * ``proc_bounds`` — inclusive ``[lo, hi]`` bound on process ids;
+    * ``time_window`` — inclusive ``[t0, t1]`` ns window such that every
+      surviving row's own timestamp lies inside (only emitted for
+      ``trim="within"`` windows — overlap windows extend past row
+      timestamps and are never pushed down).
+    """
+
+    procs: Optional[frozenset] = None
+    proc_bounds: Optional[Tuple[float, float]] = None
+    time_window: Optional[Tuple[float, float]] = None
+
+    def admits_proc(self, p: int) -> bool:
+        if self.procs is not None and p not in self.procs:
+            return False
+        if self.proc_bounds is not None and not (
+                self.proc_bounds[0] <= p <= self.proc_bounds[1]):
+            return False
+        return True
 
 
 # ---------------------------------------------------------------------------
@@ -65,6 +98,11 @@ class OpSpec:
     needs_structure: bool = False
     needs_messages: bool = False
     scope: str = "trace"
+    #: factory building a streaming aggregator (see
+    #: :mod:`repro.core.streaming`) for out-of-core execution, or None when
+    #: the op has no combinable partial-aggregate form and must run on a
+    #: fully materialized trace.
+    streaming: Optional[Callable[..., Any]] = None
 
 
 _OP_REGISTRY: Dict[str, OpSpec] = {}
@@ -86,6 +124,29 @@ def register_op(name: Optional[str] = None, *, needs_structure: bool = False,
         _OP_REGISTRY[op_name] = OpSpec(op_name, fn, needs_structure,
                                        needs_messages, scope)
         return fn
+
+    return deco
+
+
+def register_streaming(op_name: str) -> Callable:
+    """Decorator declaring ``op_name``'s streaming (combinable) form.
+
+    The decorated callable is an *aggregator factory*: called with the op's
+    own ``(*args, **kwargs)`` it returns a streaming aggregator (see
+    :class:`repro.core.streaming.StreamAgg`) whose mergeable partial results
+    reproduce the in-memory op.  Ops without a registered factory raise a
+    clear error under out-of-core execution instead of silently
+    materializing the whole trace.
+    """
+
+    def deco(factory: Callable) -> Callable:
+        spec = _OP_REGISTRY.get(op_name)
+        if spec is None:
+            raise ValueError(
+                f"cannot declare streaming form of unregistered op "
+                f"{op_name!r}; register the op first")
+        _OP_REGISTRY[op_name] = replace(spec, streaming=factory)
+        return factory
 
     return deco
 
@@ -135,6 +196,15 @@ class ReaderSpec:
     is this format.  ``shard_procs(path)`` optionally returns the set of
     process ids a shard file contains (or None when unknown) — the parallel
     driver uses it to skip shards a process-restricted plan cannot need.
+
+    ``iter_chunks(path, chunk_rows, hints)`` optionally yields successive
+    EventFrames of at most ``chunk_rows`` events each without ever holding
+    the whole trace — the out-of-core streaming executor
+    (:mod:`repro.core.streaming`) drives it.  ``hints`` is a
+    :class:`PlanHints` carrying the plan's predicate/process/time-window
+    pushdown; applying it is optional (the executor re-masks every chunk).
+    Formats without a chunked reader fall back to a whole-file read sliced
+    into chunks (correct, but with no memory win).
     """
 
     name: str
@@ -143,6 +213,7 @@ class ReaderSpec:
     sniff: Optional[Callable[[str, str], bool]] = None
     shard_procs: Optional[Callable[[str], Optional[Set[int]]]] = None
     priority: int = 0  # higher sniffs first
+    iter_chunks: Optional[Callable[..., Iterator[Any]]] = None
 
 
 _READER_REGISTRY: Dict[str, ReaderSpec] = {}
@@ -151,13 +222,32 @@ _READER_REGISTRY: Dict[str, ReaderSpec] = {}
 def register_reader(name: str, *, extensions: Sequence[str] = (),
                     sniff: Optional[Callable[[str, str], bool]] = None,
                     shard_procs: Optional[Callable[[str], Optional[Set[int]]]] = None,
-                    priority: int = 0) -> Callable:
+                    priority: int = 0,
+                    iter_chunks: Optional[Callable[..., Iterator[Any]]] = None
+                    ) -> Callable:
     """Decorator registering a reader callable under ``name``."""
 
     def deco(fn: Callable) -> Callable:
         _READER_REGISTRY[name] = ReaderSpec(
             name, fn, tuple(e.lower() for e in extensions), sniff,
-            shard_procs, priority)
+            shard_procs, priority, iter_chunks)
+        return fn
+
+    return deco
+
+
+def register_chunked(name: str) -> Callable:
+    """Decorator attaching a chunked reader to the already-registered
+    format ``name`` (readers usually register ``read`` first, then the
+    chunked variant right below it)."""
+
+    def deco(fn: Callable) -> Callable:
+        spec = _READER_REGISTRY.get(name)
+        if spec is None:
+            raise ValueError(
+                f"cannot attach chunked reader to unregistered format "
+                f"{name!r}; register the reader first")
+        _READER_REGISTRY[name] = replace(spec, iter_chunks=fn)
         return fn
 
     return deco

@@ -1,0 +1,661 @@
+"""Out-of-core streaming execution of lazy query plans (paper §VI scaled).
+
+The paper's core critique of GUI trace tools — "challenging to scale to
+large trace sizes" — applies equally to any engine that must materialize a
+whole trace before the first analysis op runs.  This module executes
+:class:`~repro.core.query.TraceQuery` plans over traces that do not fit in
+RAM:
+
+* readers expose ``iter_chunks(path, chunk_rows, hints)`` in the reader
+  registry (:class:`~repro.core.registry.ReaderSpec`), yielding bounded
+  EventFrames with the plan's predicate/process/time-window restriction
+  pushed down (:class:`~repro.core.registry.PlanHints`);
+* the executor applies the plan's **fused mask** to each chunk (one boolean
+  AND per chunk, exactly like the in-memory fusion path) and feeds the
+  surviving rows to the terminal op's **streaming aggregator** — a
+  combinable partial-aggregate form registered next to the op with
+  :func:`~repro.core.registry.register_streaming`;
+* structure-dependent aggregates (flat/time profiles, load imbalance, idle
+  time) are fed **completed-call records** stitched across chunk boundaries
+  by :class:`CallStitcher`: within-chunk enter/leave pairs are matched with
+  the same vectorized kernel the in-memory path uses, and the few calls
+  split across a boundary (an open ``main()`` spans *every* boundary) are
+  carried on per-(process, thread) stacks until their leave arrives — the
+  boundary-stitching path for pairs split across chunks;
+* ops with no combinable form (``detect_pattern``,
+  ``critical_path_analysis``, ...) raise :class:`StreamingUnsupported`
+  with the escape hatches spelled out instead of silently loading the
+  trace.
+
+Entry points: ``Trace.open(path, streaming=True)`` returns a
+:class:`StreamingTrace`; ``trace.query()...<op>()`` then executes out of
+core.  See ``docs/streaming.md`` for the execution model and guarantees.
+"""
+
+from __future__ import annotations
+
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from . import registry, structure
+from .constants import ENTER, ET, LEAVE, NAME, PROC, THREAD, TS
+from .frame import Categorical, EventFrame, concat
+
+__all__ = ["StreamingTrace", "StreamingUnsupported", "StreamAgg",
+           "CallBlock", "Chunk", "StreamStats", "StreamContext",
+           "execute_streaming", "iter_chunks_fallback", "grow_to"]
+
+DEFAULT_CHUNK_ROWS = 1_000_000
+
+
+class StreamingUnsupported(RuntimeError):
+    """A plan or op has no out-of-core form.  The message always names the
+    escape hatches: ``.collect()`` (materialize, then run eagerly) or
+    ``Trace.open(..., streaming=False)``."""
+
+
+# ---------------------------------------------------------------------------
+# shared name space across chunks
+# ---------------------------------------------------------------------------
+
+class GlobalNames:
+    """Interner mapping every chunk's local Categorical onto one stable
+    global code space (codes are assigned in first-seen order; results that
+    need the in-memory alphabetical order sort at finalize time)."""
+
+    def __init__(self):
+        self._code: Dict[str, int] = {}
+        self.names: List[str] = []
+
+    def encode(self, cat: Categorical) -> np.ndarray:
+        """Global int64 code per row of ``cat``."""
+        local = np.empty(len(cat.categories), np.int64)
+        for i, c in enumerate(cat.categories):
+            s = str(c)
+            g = self._code.get(s)
+            if g is None:
+                g = len(self.names)
+                self._code[s] = g
+                self.names.append(s)
+            local[i] = g
+        return local[cat.codes]
+
+    def code(self, name: str) -> int:
+        """Global code of ``name``, or -1 when never seen."""
+        return self._code.get(str(name), -1)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def grow_to(arr: np.ndarray, shape: Tuple[int, ...], fill=0) -> np.ndarray:
+    """Return ``arr`` grown (power-of-two per axis) to hold ``shape`` —
+    the accumulator pattern streaming aggregators use while the name/process
+    universe is still being discovered."""
+    target = []
+    need = False
+    for have, want in zip(arr.shape, shape):
+        if want > have:
+            cap = max(have, 1)
+            while cap < want:
+                cap *= 2
+            target.append(cap)
+            need = True
+        else:
+            target.append(have)
+    if not need:
+        return arr
+    out = np.full(tuple(target), fill, dtype=arr.dtype)
+    out[tuple(slice(0, n) for n in arr.shape)] = arr
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunk payloads
+# ---------------------------------------------------------------------------
+
+class CallBlock:
+    """Completed calls discovered in one chunk: one entry per call whose
+    Leave arrived (whether its Enter was in this chunk or carried over)."""
+
+    __slots__ = ("name", "proc", "start", "end", "inc", "exc")
+
+    def __init__(self, name, proc, start, end, inc, exc):
+        self.name = name      # global name codes (int64)
+        self.proc = proc      # int64
+        self.start = start    # float64 enter timestamps
+        self.end = end        # float64 leave timestamps
+        self.inc = inc        # float64 inclusive ns
+        self.exc = exc        # float64 exclusive ns
+
+
+class Chunk:
+    """What an aggregator sees per chunk: the masked frame, its rows' global
+    name codes, and (when requested) the completed-call block."""
+
+    __slots__ = ("events", "gcodes", "calls", "names")
+
+    def __init__(self, events: EventFrame, gcodes: np.ndarray,
+                 calls: Optional[CallBlock], names: GlobalNames):
+        self.events = events
+        self.gcodes = gcodes
+        self.calls = calls
+        self.names = names
+
+
+class StreamStats:
+    """Global pre-pass statistics over the masked stream (two-pass ops)."""
+
+    __slots__ = ("n_events", "ts_min", "ts_max", "proc_max", "size_min",
+                 "size_max", "n_sends")
+
+    def __init__(self):
+        self.n_events = 0
+        self.ts_min = np.inf
+        self.ts_max = -np.inf
+        self.proc_max = -1
+        self.size_min = np.inf
+        self.size_max = -np.inf
+        self.n_sends = 0
+
+    @property
+    def num_processes(self) -> int:
+        return self.proc_max + 1
+
+
+class StreamAgg:
+    """Base class for streaming aggregators.
+
+    Subclasses declare what they consume and implement the three-phase
+    protocol; the executor guarantees ``begin`` → ``update``\\* → ``result``.
+    ``needs_stats`` triggers a dedicated first pass over the masked stream
+    (the stream is re-read — CPU doubles, peak memory stays bounded).
+    """
+
+    needs_calls = False   # completed-call records (structure across chunks)
+    needs_stats = False   # StreamStats pre-pass
+
+    def begin(self, stats: Optional[StreamStats]) -> None:
+        pass
+
+    def update(self, chunk: Chunk) -> None:
+        raise NotImplementedError
+
+    def result(self, ctx: "StreamContext") -> Any:
+        raise NotImplementedError
+
+
+class StreamContext:
+    """Finalization context: the global name table, pre-pass stats (if any),
+    and the (name code, process) pairs of calls left open at end of stream
+    (their Leave never arrived — the in-memory path's unmatched enters)."""
+
+    __slots__ = ("names", "stats", "open_calls", "proc_max")
+
+    def __init__(self, names: GlobalNames, stats: Optional[StreamStats],
+                 open_calls: Tuple[np.ndarray, np.ndarray], proc_max: int):
+        self.names = names
+        self.stats = stats
+        self.open_calls = open_calls
+        self.proc_max = proc_max
+
+    @property
+    def num_processes(self) -> int:
+        return self.proc_max + 1
+
+
+# ---------------------------------------------------------------------------
+# cross-chunk call stitching
+# ---------------------------------------------------------------------------
+
+class _Frame:
+    """One open call carried across chunk boundaries."""
+
+    __slots__ = ("name", "proc", "start", "child_inc")
+
+    def __init__(self, name: int, proc: int, start: float):
+        self.name = name
+        self.proc = proc
+        self.start = start
+        self.child_inc = 0.0
+
+
+class CallStitcher:
+    """Turns a sorted chunk stream into completed-call records, stitching
+    enter/leave pairs split across chunk boundaries.
+
+    Within a chunk, pairs are matched with the same vectorized kernel the
+    in-memory path uses (:func:`repro.core.structure.match_events`) and
+    their inclusive/exclusive times come from the canonical
+    :func:`~repro.core.structure.compute_inc_exc` — all direct children of a
+    within-chunk call are provably inside the chunk, so those values are
+    exact.  Events the chunk cannot resolve are exactly the boundary ones:
+    an Enter whose Leave is in a later chunk is pushed on a per-(process,
+    thread) carry stack; an unmatched Leave pops the innermost open carried
+    call and completes it.  Exclusive time of a carried call is its
+    inclusive time minus the child time accumulated on its stack frame —
+    chunk-level top calls are bucket-summed onto the innermost open frame
+    between boundary events, so no per-event Python loop ever runs.
+
+    Requires each (process, thread) sub-stream to arrive in non-decreasing
+    time order (trace files written per-rank or in canonical (process,
+    time) order satisfy this); violations raise StreamingUnsupported.
+    """
+
+    def __init__(self):
+        self._stacks: Dict[int, List[_Frame]] = {}
+        self._last_ts: Dict[int, float] = {}
+
+    # -- public ------------------------------------------------------------
+    def push_chunk(self, ev: EventFrame, gcodes: np.ndarray) -> CallBlock:
+        n = len(ev)
+        if n == 0:
+            return CallBlock(*[np.empty(0, np.int64)] * 2,
+                             *[np.empty(0, np.float64)] * 4)
+        gkey = self._group_key_rows(ev)
+        ts = np.asarray(ev[TS], np.float64)
+        self._check_sorted(gkey, ts)
+
+        matching, _depth, parent, inc, exc = structure.derive_structure(ev)
+
+        et = ev.cat(ET)
+        is_enter = et.mask_eq(ENTER)
+        is_leave = et.mask_eq(LEAVE)
+        procs = np.asarray(ev[PROC], np.int64)
+
+        matched_ent = np.nonzero(is_enter & (matching >= 0))[0]
+        # chunk-level top calls: matched calls whose parent the chunk cannot
+        # see — their inclusive time belongs to the innermost open carried
+        # call at their position
+        top_ent = matched_ent[parent[matched_ent] < 0]
+
+        boundary = np.nonzero((is_enter | is_leave) & (matching < 0))[0]
+        # matched calls whose parent is a *boundary enter of this chunk*
+        # (the parent's own exc is NaN here — its frame is pushed below):
+        # credit their inclusive time straight onto that frame
+        par = parent[matched_ent]
+        has_par = par >= 0
+        bp = matched_ent[has_par]
+        bp = bp[(matching[parent[bp]] < 0) & is_enter[parent[bp]]]
+        pending_child = {}
+        if len(bp):
+            add = np.zeros(n)
+            np.add.at(add, parent[bp], inc[bp])
+            pending_child = {int(r): float(add[r])
+                             for r in np.unique(parent[bp])}
+        carried = self._stitch(gkey, gcodes, ts, procs, is_enter,
+                               boundary, top_ent, inc, pending_child)
+
+        name = gcodes[matched_ent]
+        proc = procs[matched_ent]
+        start = ts[matched_ent]
+        end = ts[matching[matched_ent]]
+        binc = inc[matched_ent]
+        bexc = exc[matched_ent]
+        if carried:
+            cn, cp, cs, ce, ci, cx = (np.asarray(c) for c in zip(*carried))
+            name = np.concatenate([name, cn.astype(np.int64)])
+            proc = np.concatenate([proc, cp.astype(np.int64)])
+            start = np.concatenate([start, cs])
+            end = np.concatenate([end, ce])
+            binc = np.concatenate([binc, ci])
+            bexc = np.concatenate([bexc, cx])
+        return CallBlock(name, proc, start, end, binc, bexc)
+
+    def open_calls(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(global name codes, process ids) of calls still open at end of
+        stream — their Leave never arrived, i.e. the in-memory matcher's
+        unmatched enters."""
+        frames = [f for st in self._stacks.values() for f in st]
+        return (np.asarray([f.name for f in frames], np.int64),
+                np.asarray([f.proc for f in frames], np.int64))
+
+    # -- internals -----------------------------------------------------------
+    def _check_sorted(self, gkey: np.ndarray, ts: np.ndarray) -> None:
+        order = np.lexsort((np.arange(len(gkey)), gkey))
+        g_s, t_s = gkey[order], ts[order]
+        same = g_s[1:] == g_s[:-1]
+        if np.any(same & (np.diff(t_s) < 0)):
+            raise StreamingUnsupported(
+                "streaming execution needs each (process, thread) event "
+                "stream in non-decreasing time order within a chunk; this "
+                "trace is not sorted.  Re-shard it (e.g. "
+                "readers.parallel.split_jsonl_by_process) or open with "
+                "streaming=False.")
+        firsts = np.nonzero(np.concatenate([[True], ~same]))[0]
+        for i in firsts:
+            g = int(g_s[i])
+            last = self._last_ts.get(g)
+            if last is not None and t_s[i] < last:
+                raise StreamingUnsupported(
+                    "streaming execution needs each (process, thread) event "
+                    "stream in non-decreasing time order across chunks; "
+                    "this trace interleaves out of order.  Re-shard it or "
+                    "open with streaming=False.")
+        # record per-group max ts of this chunk
+        lasts = np.nonzero(np.concatenate([~same, [True]]))[0]
+        for i in lasts:
+            self._last_ts[int(g_s[i])] = float(t_s[i])
+
+    def _stitch(self, gkey, gcodes, ts, procs, is_enter, boundary,
+                top_ent, inc, pending_child) -> List[tuple]:
+        """Walk boundary events per group in row order, bucket-attributing
+        chunk-top call time to the innermost open carried frame."""
+        completed: List[tuple] = []
+        if len(boundary) == 0 and not self._stacks:
+            return completed
+        # bucket chunk-top calls between boundary events, per group
+        by_group_b: Dict[int, np.ndarray] = {}
+        for g in np.unique(gkey[boundary]) if len(boundary) else []:
+            rows = boundary[gkey[boundary] == g]
+            by_group_b[int(g)] = rows
+        by_group_t: Dict[int, np.ndarray] = {}
+        if len(top_ent):
+            for g in np.unique(gkey[top_ent]):
+                by_group_t[int(g)] = top_ent[gkey[top_ent] == g]
+
+        groups = set(by_group_b) | set(by_group_t)
+        for g in groups:
+            stack = self._stacks.setdefault(g, [])
+            b_rows = by_group_b.get(g, np.empty(0, np.int64))
+            t_rows = by_group_t.get(g, np.empty(0, np.int64))
+            # which boundary interval each top call falls into: index of the
+            # first boundary row after it
+            bucket = np.searchsorted(b_rows, t_rows)
+            # per-bucket inclusive-time sums (tops between boundary events)
+            sums = np.zeros(len(b_rows) + 1)
+            if len(t_rows):
+                np.add.at(sums, bucket, inc[t_rows])
+            counts = np.zeros(len(b_rows) + 1, np.int64)
+            if len(t_rows):
+                np.add.at(counts, bucket, 1)
+
+            def attribute(k):
+                if counts[k] and stack:
+                    stack[-1].child_inc += float(sums[k])
+
+            attribute(0)
+            for k, r in enumerate(b_rows):
+                if is_enter[r]:
+                    fr = _Frame(int(gcodes[r]), int(procs[r]), float(ts[r]))
+                    fr.child_inc += pending_child.get(int(r), 0.0)
+                    stack.append(fr)
+                else:
+                    if stack:
+                        fr = stack.pop()
+                        c_inc = float(ts[r]) - fr.start
+                        c_exc = c_inc - fr.child_inc
+                        completed.append((fr.name, fr.proc, fr.start,
+                                          float(ts[r]), c_inc, c_exc))
+                        if stack:
+                            stack[-1].child_inc += c_inc
+                    # else: leave with no open call anywhere upstream — the
+                    # in-memory matcher leaves it unmatched too; ignore
+                attribute(k + 1)
+            if not stack:
+                self._stacks.pop(g, None)
+        return completed
+
+    @staticmethod
+    def _group_key_rows(ev: EventFrame) -> np.ndarray:
+        """One stable (process, thread) integer key per row — must be
+        identical across every chunk of a stream, since it indexes the
+        carry stacks.  2³² headroom for the thread id: traces that keep raw
+        OS tids (Linux pid_max ≤ 2²²) must not collide across processes."""
+        proc = np.asarray(ev[PROC], np.int64)
+        if THREAD in ev:
+            thread = np.asarray(ev[THREAD], np.int64)
+        else:
+            thread = np.zeros_like(proc)
+        return proc * (1 << 32) + thread
+
+
+# ---------------------------------------------------------------------------
+# the executor
+# ---------------------------------------------------------------------------
+
+def _validate_steps(steps: Sequence) -> None:
+    from .query import SliceTimeStep
+    for step in steps:
+        if step.reads_derived():
+            raise StreamingUnsupported(
+                f"streaming plans cannot filter on derived columns "
+                f"({step.describe()}): those values depend on the selected "
+                f"frame.  Materialize first with .collect() or open with "
+                f"streaming=False.")
+        if isinstance(step, SliceTimeStep) and step.trim == "overlap":
+            raise StreamingUnsupported(
+                "slice_time(trim='overlap') extends the window through "
+                "enter/leave matching, which streaming chunks cannot see "
+                "ahead of time.  Use trim='within', or materialize with "
+                ".collect() / streaming=False.")
+
+
+def _steps_hints(steps: Sequence, base_procs=None,
+                 base_bounds=None) -> registry.PlanHints:
+    """Reader pushdown from the plan: the conjunction of process
+    restrictions plus the intersection of within-trimmed windows."""
+    from .query import SliceTimeStep
+    bounds = base_bounds
+    pset = frozenset(base_procs) if base_procs is not None else None
+    window = None
+    for step in steps:
+        b, s = step.proc_hint()
+        if b is not None:
+            bounds = b if bounds is None else (max(bounds[0], b[0]),
+                                               min(bounds[1], b[1]))
+        if s is not None:
+            pset = s if pset is None else (pset & s)
+        if isinstance(step, SliceTimeStep) and step.trim == "within":
+            window = ((step.start, step.end) if window is None else
+                      (max(window[0], step.start), min(window[1], step.end)))
+    return registry.PlanHints(procs=pset, proc_bounds=bounds,
+                              time_window=window)
+
+
+def _masked_chunks(handle: "StreamingTrace", steps: Sequence
+                   ) -> Iterator[EventFrame]:
+    """The fused-mask-per-chunk pipeline: every chunk the reader yields is
+    masked once with the AND of all step masks (mask fusion, per chunk)."""
+    from .trace import Trace
+    hints = _steps_hints(steps)
+    for frame in handle._iter_frames(hints):
+        if not steps:
+            yield frame
+            continue
+        t = Trace(frame, label=handle.label)
+        mask = None
+        for step in steps:
+            m = step.mask(t)
+            mask = m if mask is None else (mask & m)
+        yield frame.mask(mask)
+
+
+def _stats_pass(handle: "StreamingTrace", steps: Sequence) -> StreamStats:
+    from .constants import MPI_SEND, MSG_SIZE
+    st = StreamStats()
+    for frame in _masked_chunks(handle, steps):
+        n = len(frame)
+        if n == 0:
+            continue
+        st.n_events += n
+        ts = np.asarray(frame[TS], np.float64)
+        st.ts_min = min(st.ts_min, float(ts.min()))
+        st.ts_max = max(st.ts_max, float(ts.max()))
+        st.proc_max = max(st.proc_max,
+                          int(np.asarray(frame[PROC], np.int64).max()))
+        if MSG_SIZE in frame:
+            sends = frame.cat(NAME).mask_eq(MPI_SEND)
+            if np.any(sends):
+                sz = np.nan_to_num(
+                    np.asarray(frame[MSG_SIZE], np.float64)[sends])
+                st.n_sends += int(sends.sum())
+                st.size_min = min(st.size_min, float(sz.min()))
+                st.size_max = max(st.size_max, float(sz.max()))
+    return st
+
+
+def execute_streaming(handle: "StreamingTrace", steps: Sequence,
+                      spec: registry.OpSpec, args: tuple,
+                      kwargs: dict) -> Any:
+    """Run one registered op out of core over ``handle`` under ``steps``."""
+    if spec.streaming is None:
+        raise StreamingUnsupported(
+            f"op {spec.name!r} has no combinable streaming form (it needs "
+            f"the whole trace structure at once).  Materialize with "
+            f".collect().{spec.name}(...) on the collected trace, or open "
+            f"with streaming=False.")
+    _validate_steps(steps)
+    agg: StreamAgg = spec.streaming(*args, **kwargs)
+    stats = None
+    if agg.needs_stats:
+        # the handle caches its own no-extra-steps stats; reuse instead of
+        # re-reading the stream when the plan adds nothing on top
+        if tuple(steps) == tuple(handle._steps):
+            stats = handle.stats()
+        else:
+            stats = _stats_pass(handle, steps)
+    agg.begin(stats)
+    names = GlobalNames()
+    stitcher = CallStitcher() if agg.needs_calls else None
+    proc_max = -1
+    for frame in _masked_chunks(handle, steps):
+        if len(frame) == 0:
+            continue
+        gcodes = names.encode(frame.cat(NAME))
+        calls = stitcher.push_chunk(frame, gcodes) if stitcher else None
+        proc_max = max(proc_max, int(np.asarray(frame[PROC], np.int64).max()))
+        agg.update(Chunk(frame, gcodes, calls, names))
+    open_calls = (stitcher.open_calls() if stitcher
+                  else (np.empty(0, np.int64), np.empty(0, np.int64)))
+    ctx = StreamContext(names, stats, open_calls, proc_max)
+    return agg.result(ctx)
+
+
+# ---------------------------------------------------------------------------
+# chunked-reading plumbing
+# ---------------------------------------------------------------------------
+
+def iter_chunks_fallback(path: str, chunk_rows: int,
+                         hints: Optional[registry.PlanHints],
+                         reader: Callable[..., Any],
+                         **reader_kwargs) -> Iterator[EventFrame]:
+    """Correctness fallback for formats without a chunked reader: read the
+    whole file, slice into ``chunk_rows`` windows.  No memory win — the
+    streaming executor still works, but peak RSS matches the eager read."""
+    ev = reader(path, **reader_kwargs).events
+    for lo in range(0, len(ev), chunk_rows):
+        yield ev.take(np.arange(lo, min(lo + chunk_rows, len(ev))))
+
+
+class StreamingTrace:
+    """A trace opened out of core: a handle over (possibly sharded) paths
+    that is never fully materialized.
+
+    ``query()`` starts a lazy plan whose terminal ops execute chunk by
+    chunk; registered ops are also available directly
+    (``st.flat_profile()``), exactly like on an in-memory Trace.  Member of
+    a :class:`~repro.core.diff.TraceSet` works too — comparison ops stream
+    each member.  ``materialize()`` is the escape hatch back to a fully
+    loaded :class:`~repro.core.trace.Trace`.
+    """
+
+    def __init__(self, paths, format: str = "auto",
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS,
+                 label: Optional[str] = None, **reader_kwargs):
+        if isinstance(paths, (str, bytes)) or hasattr(paths, "__fspath__"):
+            paths = [paths]
+        import os
+        self.paths = [os.fspath(p) for p in paths]
+        self.format = format
+        self.chunk_rows = int(chunk_rows)
+        self.label = label or (self.paths[0] if self.paths else "stream")
+        self.reader_kwargs = reader_kwargs
+        self._steps: tuple = ()
+        self._stats0: Optional[StreamStats] = None  # no-selection stats
+
+    # -- plumbing ----------------------------------------------------------
+    def _iter_frames(self, hints: Optional[registry.PlanHints] = None
+                     ) -> Iterator[EventFrame]:
+        """Chunks across all shard paths, with shard skipping (registered
+        ``shard_procs`` hints) and per-chunk pushdown."""
+        from ..readers.parallel import select_shards
+        from .. import readers  # noqa: F401 — populate the registry
+        procs = set(hints.procs) if hints and hints.procs is not None else None
+        bounds = hints.proc_bounds if hints else None
+        paths = select_shards(self.paths, self.format, procs=procs,
+                              proc_bounds=bounds)
+        for p in paths:
+            spec = registry.resolve_reader(p, self.format)
+            if spec.iter_chunks is not None:
+                yield from spec.iter_chunks(p, self.chunk_rows, hints,
+                                            **self.reader_kwargs)
+            else:
+                yield from iter_chunks_fallback(p, self.chunk_rows, hints,
+                                                spec.read,
+                                                **self.reader_kwargs)
+
+    def iter_chunks(self) -> Iterator[EventFrame]:
+        """Raw chunk frames (this handle's plan steps applied, masks
+        fused per chunk)."""
+        yield from _masked_chunks(self, self._steps)
+
+    def with_steps(self, steps: Sequence) -> "StreamingTrace":
+        """Shallow copy carrying plan ``steps`` — how a shared TraceSet
+        plan binds its selection to each streaming member."""
+        clone = StreamingTrace(self.paths, format=self.format,
+                               chunk_rows=self.chunk_rows, label=self.label,
+                               **self.reader_kwargs)
+        clone._steps = tuple(steps)
+        return clone
+
+    # -- materialization escape hatch --------------------------------------
+    def load_raw(self, procs=None, proc_bounds=None):
+        """Concatenate every chunk into one in-memory Trace *without*
+        applying this handle's plan steps (the query engine applies them
+        once — this is ``_StreamSource.load``)."""
+        from .trace import Trace
+        hints = registry.PlanHints(
+            procs=frozenset(procs) if procs is not None else None,
+            proc_bounds=proc_bounds)
+        frames = list(self._iter_frames(hints))
+        ev = concat(frames) if frames else EventFrame()
+        return Trace(ev, label=self.label)
+
+    def materialize(self):
+        """Load everything into one in-memory Trace (applies this handle's
+        plan steps, if any, via the normal fused-mask path)."""
+        return self.query().collect()
+
+    # -- cheap whole-stream facts ------------------------------------------
+    def stats(self) -> StreamStats:
+        """One pass over the (selection-masked) stream: event count, time
+        span, process count, message-size range.  Cached."""
+        if self._stats0 is None:
+            self._stats0 = _stats_pass(self, self._steps)
+        return self._stats0
+
+    @property
+    def num_processes(self) -> int:
+        return self.stats().num_processes
+
+    def __len__(self) -> int:
+        return self.stats().n_events
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"StreamingTrace(label={self.label!r}, "
+                f"{len(self.paths)} path(s), chunk_rows={self.chunk_rows}, "
+                f"steps={len(self._steps)})")
+
+    # -- query / terminal ops ----------------------------------------------
+    def query(self):
+        from .query import TraceQuery, _StreamSource
+        return TraceQuery(_StreamSource(self), self._steps)
+
+    def run(self, op_name: str, *args: Any, **kwargs: Any) -> Any:
+        return self.query().run(op_name, *args, **kwargs)
+
+    def __getattr__(self, name: str):
+        return registry.terminal_op(name, self.run, "StreamingTrace")

@@ -199,6 +199,24 @@ def compute_inc_exc(events: EventFrame, matching: np.ndarray, parent: np.ndarray
     return inc, exc
 
 
+def derive_structure(events: EventFrame) -> Tuple[np.ndarray, np.ndarray,
+                                                  np.ndarray, np.ndarray,
+                                                  np.ndarray]:
+    """The full structural derivation in one call:
+    ``(matching, depth, parent, inc, exc)``.
+
+    Single source of truth for the match → parents → inc/exc pipeline —
+    used by ``Trace._ensure_structure`` on whole traces and by the
+    streaming engine's :class:`~repro.core.streaming.CallStitcher` on every
+    chunk (whose within-chunk pairs it resolves with exactly this kernel,
+    keeping chunked and in-memory results bit-identical).
+    """
+    matching, depth, order = match_events(events)
+    parent = compute_parents(events, matching, depth, order)
+    inc, exc = compute_inc_exc(events, matching, parent)
+    return matching, depth, parent, inc, exc
+
+
 def match_messages(events: EventFrame) -> np.ndarray:
     """FIFO-match MpiSend/MpiRecv instants by (src, dst, tag) channel order.
 

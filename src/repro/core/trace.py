@@ -79,17 +79,33 @@ class Trace:
         return cls(events, label=label)
 
     @classmethod
-    def open(cls, path, format: str = "auto", **kw) -> "Trace":
+    def open(cls, path, format: str = "auto", streaming: bool = False,
+             chunk_rows: Optional[int] = None, **kw):
         """Open a trace of any registered format.
 
         ``format="auto"`` sniffs the on-disk content (CSV header, JSONL event
         keys, Chrome ``traceEvents`` envelope, OTF2-structured archives —
         file or directory — and HLO text).  A list of paths is read as
         per-location shards through the parallel driver.
+
+        ``streaming=True`` returns a
+        :class:`~repro.core.streaming.StreamingTrace` instead: an
+        out-of-core handle that never materializes the trace — terminal
+        analysis ops with a combinable streaming form execute chunk by
+        chunk (at most ``chunk_rows`` events in memory per chunk), with the
+        plan's predicate/process/time-window restriction pushed into the
+        chunked readers.  See docs/streaming.md.
         """
         import os
         from .. import readers  # noqa: F401 — populates the reader registry
         from .registry import resolve_reader
+        if streaming:
+            from .streaming import DEFAULT_CHUNK_ROWS, StreamingTrace
+            return StreamingTrace(path, format=format,
+                                  chunk_rows=chunk_rows or DEFAULT_CHUNK_ROWS,
+                                  **kw)
+        if chunk_rows is not None:
+            raise ValueError("chunk_rows only applies with streaming=True")
         if isinstance(path, (list, tuple)):
             from ..readers.parallel import read_parallel
             return read_parallel([os.fspath(p) for p in path], kind=format,
@@ -120,9 +136,7 @@ class Trace:
         if self._structured:
             return
         ev = self.events
-        matching, depth, order = structure.match_events(ev)
-        parent = structure.compute_parents(ev, matching, depth, order)
-        inc, exc = structure.compute_inc_exc(ev, matching, parent)
+        matching, depth, parent, inc, exc = structure.derive_structure(ev)
         ev[MATCH] = matching
         ev["_depth"] = depth
         ev[PARENT] = parent

@@ -11,14 +11,14 @@ ops work on GPU traces too.
 from __future__ import annotations
 
 import json
-from typing import Optional
+from typing import Iterator, List, Optional
 
 import numpy as np
 
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
                               MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
-from ..core.frame import Categorical, EventFrame
-from ..core.registry import register_reader
+from ..core.frame import Categorical, EventFrame, optimize_dtypes
+from ..core.registry import PlanHints, register_chunked, register_reader
 from ..core.trace import Trace
 
 _ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
@@ -31,6 +31,37 @@ def _sniff_chrome(path: str, head: str) -> bool:
     if '"traceEvents"' in head:
         return True
     return h.startswith("[") and '"ph"' in head
+
+
+def _dispatch_event(e: dict, emit) -> None:
+    """The single CTF phase-code switch: decode one event object into row
+    emissions.  Shared by the whole-file and chunked readers so a new
+    ``ph`` mapping can never land in only one path.  ``emit(t_us, code,
+    name, pid, tid, size=..., partner=..., tag=...)`` receives the *raw*
+    pid — callers densify/filter."""
+    ph = e.get("ph", "X")
+    name = str(e.get("name", ""))
+    pid = e.get("pid", 0)
+    tid = int(e.get("tid", 0) or 0)
+    t = float(e.get("ts", 0.0))
+    args = e.get("args") or {}
+    if ph == "X":
+        dur = float(e.get("dur", 0.0))
+        emit(t, 0, name, pid, tid)
+        emit(t + dur, 1, name, pid, tid)
+    elif ph == "B":
+        emit(t, 0, name, pid, tid)
+    elif ph == "E":
+        emit(t, 1, name, pid, tid)
+    elif ph in ("i", "I", "n"):
+        emit(t, 2, name, pid, tid)
+    elif ph == "s":  # flow start == send
+        emit(t, 2, MPI_SEND, pid, tid, size=float(args.get("size", 0.0)),
+             partner=int(args.get("partner", -1)), tag=int(e.get("id", 0)))
+    elif ph in ("t", "f"):  # flow step/finish == recv
+        emit(t, 2, MPI_RECV, pid, tid, size=float(args.get("size", 0.0)),
+             partner=int(args.get("partner", -1)), tag=int(e.get("id", 0)))
+    # metadata events (ph == "M") are folded into definitions
 
 
 @register_reader("chrome", extensions=(".json",), sniff=_sniff_chrome,
@@ -53,7 +84,12 @@ def read_chrome(path_or_buf, label: Optional[str] = None) -> Trace:
     has_msg = False
 
     def emit(t, code, name, pid, tid, size=np.nan, partner=-1, tag=0):
-        ts.append(int(t * 1000))  # us -> ns
+        # round, don't truncate: CTF timestamps are float µs, and ns values
+        # that went through a /1000 round-trip sit epsilon below the integer
+        nonlocal has_msg
+        if not np.isnan(size):  # only flow (message) events carry a size
+            has_msg = True
+        ts.append(round(t * 1000))  # us -> ns
         et.append(code)
         names.append(name)
         procs.append(pid_of.get(pid, 0))
@@ -63,31 +99,7 @@ def read_chrome(path_or_buf, label: Optional[str] = None) -> Trace:
         tags.append(tag)
 
     for e in events:
-        ph = e.get("ph", "X")
-        name = str(e.get("name", ""))
-        pid = e.get("pid", 0)
-        tid = int(e.get("tid", 0) or 0)
-        t = float(e.get("ts", 0.0))
-        args = e.get("args") or {}
-        if ph == "X":
-            dur = float(e.get("dur", 0.0))
-            emit(t, 0, name, pid, tid)
-            emit(t + dur, 1, name, pid, tid)
-        elif ph == "B":
-            emit(t, 0, name, pid, tid)
-        elif ph == "E":
-            emit(t, 1, name, pid, tid)
-        elif ph in ("i", "I", "n"):
-            emit(t, 2, name, pid, tid)
-        elif ph == "s":  # flow start == send
-            has_msg = True
-            emit(t, 2, MPI_SEND, pid, tid, size=float(args.get("size", 0.0)),
-                 partner=int(args.get("partner", -1)), tag=int(e.get("id", 0)))
-        elif ph in ("t", "f"):  # flow step/finish == recv
-            has_msg = True
-            emit(t, 2, MPI_RECV, pid, tid, size=float(args.get("size", 0.0)),
-                 partner=int(args.get("partner", -1)), tag=int(e.get("id", 0)))
-        # metadata events (ph == "M") are folded into definitions
+        _dispatch_event(e, emit)
     ev = EventFrame({
         TS: np.asarray(ts, np.int64),
         ET: Categorical.from_codes(np.asarray(et, np.int32), _ET_CATS),
@@ -100,4 +112,191 @@ def read_chrome(path_or_buf, label: Optional[str] = None) -> Trace:
         ev[PARTNER] = np.asarray(partners, np.int64)
         ev[TAG] = np.asarray(tags, np.int64)
     defs = {"pids": pids}
-    return Trace(ev, definitions=defs, label=label)
+    return Trace(optimize_dtypes(ev), definitions=defs, label=label)
+
+
+# ---------------------------------------------------------------------------
+# chunked (out-of-core) reading
+# ---------------------------------------------------------------------------
+
+def _iter_array_items(path: str, block: int = 1 << 16) -> Iterator[dict]:
+    """Incrementally decode the JSON array of trace events in ``path``
+    without loading the document: scan to the ``traceEvents`` array (or a
+    bare top-level array), then ``raw_decode`` one object at a time from a
+    bounded text buffer."""
+    dec = json.JSONDecoder()
+    with open(path) as f:
+        buf = f.read(block)
+        key = '"traceEvents"'
+        if buf.lstrip().startswith("["):
+            start = buf.find("[")
+        else:
+            # scan to the key with a bounded sliding window (keep only a
+            # key-length tail across reads — a large metadata prefix must
+            # not accumulate in the reader that exists to bound RSS)...
+            while True:
+                k = buf.find(key)
+                if k >= 0:
+                    buf = buf[k + len(key):]
+                    break
+                buf = buf[-len(key):]
+                nxt = f.read(block)
+                if not nxt:
+                    return
+                buf += nxt
+            # ...then to the opening bracket (only ':' and whitespace can
+            # sit between the key and its array)
+            while True:
+                start = buf.find("[")
+                if start >= 0:
+                    break
+                nxt = f.read(block)
+                if not nxt:
+                    return
+                buf = nxt
+        buf = buf[start + 1:]
+        pos = 0
+        while True:
+            # skip separators
+            while True:
+                stripped = buf[pos:].lstrip()
+                pos = len(buf) - len(stripped)
+                if stripped.startswith(","):
+                    pos += 1
+                    continue
+                break
+            if pos < len(buf) and buf[pos] == "]":
+                return
+            try:
+                obj, end = dec.raw_decode(buf, pos)
+            except ValueError:
+                nxt = f.read(block)
+                if not nxt:
+                    return  # truncated tail
+                buf = buf[pos:] + nxt
+                pos = 0
+                continue
+            yield obj
+            pos = end
+            if pos > block:
+                buf = buf[pos:]
+                pos = 0
+
+
+def _decode_batch(batch: List[dict], hints: Optional[PlanHints],
+                  pid_of: dict) -> Optional[EventFrame]:
+    """One uniform-column EventFrame from a batch of CTF event objects,
+    with pids densified through ``pid_of`` — the same sorted-dense mapping
+    the whole-file reader builds, so chunked and in-memory reads agree."""
+    tw = hints.time_window if hints is not None else None
+    check_proc = hints is not None and (hints.procs is not None
+                                        or hints.proc_bounds is not None)
+    ts, et, names, procs, threads = [], [], [], [], []
+    sizes, partners, tags = [], [], []
+
+    def emit(t, code, name, pid, tid, size=np.nan, partner=-1, tag=0):
+        p = pid_of.get(pid, 0)
+        if check_proc and not hints.admits_proc(p):
+            return
+        v = round(t * 1000)
+        if tw is not None and not (tw[0] <= v <= tw[1]):
+            return
+        ts.append(v)
+        et.append(code)
+        names.append(name)
+        procs.append(p)
+        threads.append(tid)
+        sizes.append(size)
+        partners.append(partner)
+        tags.append(tag)
+
+    for e in batch:
+        _dispatch_event(e, emit)
+    if not ts:
+        return None
+    ev = EventFrame({
+        TS: np.asarray(ts, np.int64),
+        ET: Categorical.from_codes(np.asarray(et, np.int32), _ET_CATS),
+        NAME: np.asarray(names, dtype=object),
+        PROC: np.asarray(procs, np.int64),
+        THREAD: np.asarray(threads, np.int64),
+        MSG_SIZE: np.asarray(sizes),
+        PARTNER: np.asarray(partners, np.int64),
+        TAG: np.asarray(tags, np.int64),
+    })
+    return optimize_dtypes(ev)
+
+
+@register_chunked("chrome")
+def iter_chunks_chrome(path: str, chunk_rows: int,
+                       hints: Optional[PlanHints] = None,
+                       label: Optional[str] = None) -> Iterator[EventFrame]:
+    """Stream a Chrome trace in bounded chunks via incremental JSON array
+    decoding (an ``X`` event expands to two rows, so chunks may slightly
+    exceed ``chunk_rows``).
+
+    A cheap pre-pass collects the pid set so pids densify to exactly the
+    sorted 0..N-1 mapping the whole-file reader uses — Process ids (and
+    therefore pushdown and per-process results) are identical either way,
+    at the cost of decoding the stream twice; memory stays bounded."""
+    pids = set()
+    for obj in _iter_array_items(path):
+        pids.add(obj.get("pid", 0))
+    pid_of = {p: i for i, p in enumerate(sorted(pids))}
+    batch: List[dict] = []
+    for obj in _iter_array_items(path):
+        batch.append(obj)
+        if len(batch) >= max(chunk_rows // 2, 1):
+            ev = _decode_batch(batch, hints, pid_of)
+            if ev is not None:
+                yield ev
+            batch = []
+    if batch:
+        ev = _decode_batch(batch, hints, pid_of)
+        if ev is not None:
+            yield ev
+
+
+def write_chrome(trace_or_events, path: str) -> None:
+    """Serialize a trace to Chrome Trace Format (inverse of
+    :func:`read_chrome`): B/E phase events preserve exact event order,
+    flow events carry the message instants."""
+    ev = getattr(trace_or_events, "events", trace_or_events)
+    cols = ev.columns
+    ts = np.asarray(ev[TS], np.int64)
+    et = ev[ET]
+    names = ev[NAME]
+    procs = np.asarray(ev[PROC], np.int64)
+    threads = (np.asarray(ev[THREAD], np.int64) if THREAD in cols
+               else np.zeros(len(ev), np.int64))
+    sizes = np.asarray(ev[MSG_SIZE], np.float64) if MSG_SIZE in cols else None
+    partners = np.asarray(ev[PARTNER], np.int64) if PARTNER in cols else None
+    tags = np.asarray(ev[TAG], np.int64) if TAG in cols else None
+    with open(path, "w") as f:
+        f.write('{"traceEvents": [\n')
+        first = True
+        for i in range(len(ev)):
+            e = et[i]
+            nm = str(names[i])
+            d = {"name": nm, "pid": int(procs[i]), "tid": int(threads[i]),
+                 "ts": ts[i] / 1000.0}
+            if e == ENTER:
+                d["ph"] = "B"
+            elif e == LEAVE:
+                d["ph"] = "E"
+            elif nm == MPI_SEND and partners is not None:
+                d["ph"] = "s"
+                d["id"] = int(tags[i])
+                d["args"] = {"size": float(np.nan_to_num(sizes[i])),
+                             "partner": int(partners[i])}
+            elif nm == MPI_RECV and partners is not None:
+                d["ph"] = "f"
+                d["id"] = int(tags[i])
+                d["args"] = {"size": float(np.nan_to_num(sizes[i])),
+                             "partner": int(partners[i])}
+            else:
+                d["ph"] = "i"
+            f.write(("" if first else ",\n") + json.dumps(d))
+            first = False
+        f.write("\n]}\n")
+

@@ -7,14 +7,15 @@ columns are kept verbatim (numeric when they parse as floats).
 
 from __future__ import annotations
 
-import io
-from typing import Optional
+import itertools
+from typing import Iterator, List, Optional
 
 import numpy as np
 
 from ..core.constants import ET, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS
-from ..core.frame import Categorical, EventFrame
-from ..core.registry import rank_shard_procs, register_reader
+from ..core.frame import Categorical, EventFrame, optimize_dtypes
+from ..core.registry import (PlanHints, rank_shard_procs, register_chunked,
+                             register_reader)
 from ..core.trace import Trace
 
 _UNIT = {"(s)": 1e9, "(ms)": 1e6, "(us)": 1e3, "(ns)": 1.0}
@@ -45,6 +46,97 @@ def _sniff_csv(path: str, head: str) -> bool:
     return TS in toks and (ET in toks or NAME in toks)
 
 
+def _parse_header(line: str):
+    headers, scales = [], []
+    for h in line.split(","):
+        name, scale = _canon_header(h)
+        headers.append(name)
+        scales.append(scale)
+    return headers, scales
+
+
+def _rows_to_frame(headers: List[str], scales: List[float],
+                   rows: List[List[str]],
+                   decisions: Optional[List[str]] = None):
+    """Build a frame from parsed rows; returns ``(frame, decisions)`` where
+    ``decisions[i]`` records each column's inferred type ("num" / "cat").
+    Passing previous ``decisions`` pins them — chunked reads must not let a
+    column's dtype flip between chunks (a chunk whose string column happens
+    to be all-numeric would otherwise silently diverge from the whole-file
+    read)."""
+    ncol = len(headers)
+    cols = [[] for _ in range(ncol)]
+    for parts in rows:
+        if len(parts) < ncol:
+            parts = parts + [""] * (ncol - len(parts))
+        for i in range(ncol):
+            cols[i].append(parts[i])
+    ev = EventFrame()
+    out_dec: List[str] = []
+    for i, h in enumerate(headers):
+        vals = cols[i]
+        arr: object
+        want = decisions[i] if decisions is not None else None
+        if want == "cat":
+            arr = None
+        else:
+            try:
+                arr = np.asarray([float(v) if v else np.nan for v in vals])
+                if h == TS:
+                    arr = (arr * scales[i]).astype(np.int64)
+                elif h in (PROC, THREAD, PARTNER, TAG):
+                    arr = np.nan_to_num(arr, nan=-1).astype(np.int64)
+            except ValueError:
+                if want == "num":
+                    from ..core.streaming import StreamingUnsupported
+                    raise StreamingUnsupported(
+                        f"CSV column {h!r} parsed as numeric in an earlier "
+                        f"chunk but holds non-numeric values later; the "
+                        f"whole-file read types columns over all rows — "
+                        f"open with streaming=False") from None
+                arr = None
+        if arr is None:
+            arr = Categorical.from_values(
+                np.asarray(vals, dtype=object).astype(str))
+            out_dec.append("cat")
+        else:
+            out_dec.append("num")
+        ev[h] = arr
+    return ev, out_dec
+
+
+def _infer_decisions(headers: List[str], rows: List[List[str]],
+                     prev: Optional[List[str]]) -> List[str]:
+    """Per-column num/cat decisions from (unfiltered) chunk rows, merged
+    with earlier chunks': cat is sticky; num -> cat means an earlier chunk
+    was already yielded with the wrong dtype, which the whole-file read
+    would have typed differently — fail loudly."""
+    out: List[str] = []
+    for i, h in enumerate(headers):
+        dec = "num"
+        for parts in rows:
+            v = parts[i] if i < len(parts) else ""
+            if not v:
+                continue
+            try:
+                float(v)
+            except ValueError:
+                dec = "cat"
+                break
+        if prev is not None:
+            if prev[i] == "cat":
+                dec = "cat"
+            elif prev[i] == "num" and dec == "cat":
+                from ..core.streaming import StreamingUnsupported
+                raise StreamingUnsupported(
+                    f"CSV column {h!r} parsed as numeric in an earlier "
+                    f"chunk but holds non-numeric values later; the "
+                    f"whole-file read types columns over all rows — open "
+                    f"with streaming=False")
+        out.append(dec)
+    return out
+
+
 @register_reader("csv", extensions=(".csv",), sniff=_sniff_csv,
                  shard_procs=rank_shard_procs)
 def read_csv(path_or_buf, label: Optional[str] = None) -> Trace:
@@ -57,32 +149,87 @@ def read_csv(path_or_buf, label: Optional[str] = None) -> Trace:
     lines = [ln for ln in text.splitlines() if ln.strip()]
     if not lines:
         return Trace(EventFrame(), label=label)
-    raw_headers = [h for h in lines[0].split(",")]
-    headers, scales = [], []
-    for h in raw_headers:
-        name, scale = _canon_header(h)
-        headers.append(name)
-        scales.append(scale)
-    ncol = len(headers)
-    cols = [[] for _ in range(ncol)]
-    for ln in lines[1:]:
-        parts = [p.strip() for p in ln.split(",")]
-        if len(parts) < ncol:
-            parts += [""] * (ncol - len(parts))
-        for i in range(ncol):
-            cols[i].append(parts[i])
+    headers, scales = _parse_header(lines[0])
+    rows = [[p.strip() for p in ln.split(",")] for ln in lines[1:]]
+    ev, _ = _rows_to_frame(headers, scales, rows)
+    return Trace(optimize_dtypes(ev), label=label)
 
-    ev = EventFrame()
-    for i, h in enumerate(headers):
-        vals = cols[i]
-        arr: object
+
+@register_chunked("csv")
+def iter_chunks_csv(path: str, chunk_rows: int,
+                    hints: Optional[PlanHints] = None,
+                    label: Optional[str] = None) -> Iterator[EventFrame]:
+    """Stream a CSV trace in bounded chunks, with process/time pushdown
+    applied per row before the columns are built."""
+    with open(path) as f:
+        header = f.readline()
+        if not header.strip():
+            return
+        headers, scales = _parse_header(header)
         try:
-            arr = np.asarray([float(v) if v else np.nan for v in vals])
-            if h == TS:
-                arr = (arr * scales[i]).astype(np.int64)
-            elif h in (PROC, THREAD, PARTNER, TAG):
-                arr = np.nan_to_num(arr, nan=-1).astype(np.int64)
+            p_i = headers.index(PROC)
         except ValueError:
-            arr = Categorical.from_values(np.asarray(vals, dtype=object).astype(str))
-        ev[h] = arr
-    return Trace(ev, label=label)
+            p_i = None
+        try:
+            t_i = headers.index(TS)
+        except ValueError:
+            t_i = None
+        tw = hints.time_window if hints is not None else None
+        check_proc = (hints is not None and p_i is not None
+                      and (hints.procs is not None
+                           or hints.proc_bounds is not None))
+        decisions = None
+        while True:
+            lines = list(itertools.islice(f, chunk_rows))
+            if not lines:
+                break
+            all_rows, rows = [], []
+            for ln in lines:
+                if not ln.strip():
+                    continue
+                parts = [p.strip() for p in ln.split(",")]
+                all_rows.append(parts)
+                if check_proc and len(parts) > p_i:
+                    try:
+                        if not hints.admits_proc(int(float(parts[p_i]))):
+                            continue
+                    except ValueError:
+                        pass
+                if tw is not None and t_i is not None and len(parts) > t_i:
+                    try:
+                        t = float(parts[t_i]) * scales[t_i]
+                        if not (tw[0] <= t <= tw[1]):
+                            continue
+                    except ValueError:
+                        pass
+                rows.append(parts)
+            # type decisions must come from the *unfiltered* rows: the
+            # whole-file read types columns over every row, and pushdown
+            # may drop exactly the rows whose values are non-numeric
+            if all_rows:
+                decisions = _infer_decisions(headers, all_rows, decisions)
+            if rows:
+                ev, _ = _rows_to_frame(headers, scales, rows, decisions)
+                yield optimize_dtypes(ev)
+
+
+def write_csv(trace_or_events, path: str) -> None:
+    """Serialize a trace to the canonical-header CSV format (inverse of
+    :func:`read_csv`; used by the cross-reader conformance suite)."""
+    ev = getattr(trace_or_events, "events", trace_or_events)
+    cols = ev.columns
+    ts = np.asarray(ev[TS], np.int64)
+    mats = {c: ev[c] for c in cols if c != TS}
+    with open(path, "w") as f:
+        f.write(",".join([TS] + [c for c in cols if c != TS]) + "\n")
+        names = [c for c in cols if c != TS]
+        for i in range(len(ev)):
+            parts = [str(int(ts[i]))]
+            for c in names:
+                v = mats[c][i]
+                if isinstance(v, (float, np.floating)) and np.isnan(v):
+                    parts.append("")
+                else:
+                    parts.append(str(v))
+            f.write(",".join(parts) + "\n")
+

@@ -3,19 +3,28 @@
 Keys (short forms keep files small): ``ts`` (ns), ``et`` (Enter/Leave/Instant),
 ``name``, ``proc``, ``thread``, and for messages ``size``/``partner``/``tag``.
 This is the format our own framework's tracer emits.
+
+Ingest is dtype-optimized: function names are dictionary-interned while
+parsing (one dict lookup per event instead of a 10M-string ``np.unique``
+pass) and integer id columns are downcast to the narrowest safe dtype
+(:func:`repro.core.frame.optimize_dtypes`).  The chunked reader
+(``iter_chunks``) never holds more than ``chunk_rows`` events and applies
+the plan's process/time-window pushdown while parsing.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
-from typing import Iterable, Optional
+from typing import Iterator, Optional
 
 import numpy as np
 
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MSG_SIZE, NAME,
                               PARTNER, PROC, TAG, THREAD, TS)
-from ..core.frame import Categorical, EventFrame
-from ..core.registry import rank_shard_procs, register_reader
+from ..core.frame import Categorical, EventFrame, optimize_dtypes
+from ..core.registry import (PlanHints, rank_shard_procs, register_chunked,
+                             register_reader)
 from ..core.trace import Trace
 
 _ET_CODE = {ENTER: 0, LEAVE: 1, INSTANT: 2}
@@ -43,6 +52,87 @@ def _sniff_jsonl(path: str, head: str) -> bool:
     return False
 
 
+class _JsonlParser:
+    """Shared line-batch parser: interns names into a per-file dictionary
+    (codes stay stable across chunks of one file)."""
+
+    def __init__(self):
+        self._name_code = {}
+        self._names = []
+
+    def parse(self, lines, hints: Optional[PlanHints] = None
+              ) -> Optional[EventFrame]:
+        """One EventFrame per line batch; None when every row was pushed
+        down away.  Always emits the uniform column set (thread/message
+        columns included) so chunks of one file concatenate cleanly."""
+        tw = hints.time_window if hints is not None else None
+        check_proc = hints is not None and (hints.procs is not None
+                                            or hints.proc_bounds is not None)
+        name_code = self._name_code
+        names = self._names
+        ts, et, ncodes, procs, threads = [], [], [], [], []
+        sizes, partners, tags = [], [], []
+        n = 0
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            p = int(d.get("proc", 0))
+            if check_proc and not hints.admits_proc(p):
+                continue
+            t = int(d["ts"])
+            if tw is not None and not (tw[0] <= t <= tw[1]):
+                continue
+            nm = d.get("name", "")
+            c = name_code.get(nm)
+            if c is None:
+                c = len(names)
+                name_code[nm] = c
+                names.append(nm)
+            ts.append(t)
+            et.append(_ET_CODE.get(d.get("et", ENTER), 2))
+            ncodes.append(c)
+            procs.append(p)
+            threads.append(int(d.get("thread", 0)))
+            s = d.get("size")
+            sizes.append(float(s) if s is not None else np.nan)
+            pr = d.get("partner")
+            partners.append(int(pr) if pr is not None else -1)
+            g = d.get("tag")
+            tags.append(int(g) if g is not None else 0)
+            n += 1
+        if n == 0:
+            return None
+        ev = EventFrame({
+            TS: np.asarray(ts, np.int64),
+            ET: Categorical.from_codes(np.asarray(et, np.int32), _ET_CATS),
+            NAME: Categorical.from_codes(np.asarray(ncodes, np.int32),
+                                         np.asarray(names, dtype=object)),
+            PROC: np.asarray(procs, np.int64),
+            THREAD: np.asarray(threads, np.int64),
+            MSG_SIZE: np.asarray(sizes),
+            PARTNER: np.asarray(partners, np.int64),
+            TAG: np.asarray(tags, np.int64),
+        })
+        return ev
+
+
+def _sorted_names(ev: EventFrame) -> EventFrame:
+    """Remap the interned (first-seen-order) name codes onto a sorted
+    category table — the exact Categorical ``np.unique`` ingest produced, so
+    downstream group orders are unchanged."""
+    cat = ev.column(NAME)
+    if not isinstance(cat, Categorical) or len(cat.categories) == 0:
+        return ev
+    order = np.argsort(cat.categories.astype(str), kind="stable")
+    inv = np.empty(len(order), np.int64)
+    inv[order] = np.arange(len(order))
+    ev[NAME] = Categorical(inv[cat.codes].astype(np.int32),
+                           cat.categories[order])
+    return ev
+
+
 @register_reader("jsonl", extensions=(".jsonl",), sniff=_sniff_jsonl,
                  shard_procs=rank_shard_procs, priority=10)
 def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
@@ -52,44 +142,39 @@ def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
         close = True
     else:
         f, close = path_or_buf, False
-    ts, et, names, procs, threads = [], [], [], [], []
-    sizes, partners, tags = [], [], []
-    has_msg = False
     try:
-        for line in f:
-            line = line.strip()
-            if not line:
-                continue
-            d = json.loads(line)
-            ts.append(int(d["ts"]))
-            et.append(_ET_CODE.get(d.get("et", ENTER), 2))
-            names.append(d.get("name", ""))
-            procs.append(int(d.get("proc", 0)))
-            threads.append(int(d.get("thread", 0)))
-            s = d.get("size")
-            p = d.get("partner")
-            g = d.get("tag")
-            if s is not None or p is not None:
-                has_msg = True
-            sizes.append(float(s) if s is not None else np.nan)
-            partners.append(int(p) if p is not None else -1)
-            tags.append(int(g) if g is not None else 0)
+        ev = _JsonlParser().parse(f)
     finally:
         if close:
             f.close()
-    ev = EventFrame({
-        TS: np.asarray(ts, np.int64),
-        ET: Categorical.from_codes(np.asarray(et, np.int32), _ET_CATS),
-        NAME: np.asarray(names, dtype=object),
-        PROC: np.asarray(procs, np.int64),
-    })
-    if any(t != 0 for t in threads):
-        ev[THREAD] = np.asarray(threads, np.int64)
-    if has_msg:
-        ev[MSG_SIZE] = np.asarray(sizes)
-        ev[PARTNER] = np.asarray(partners, np.int64)
-        ev[TAG] = np.asarray(tags, np.int64)
-    return Trace(ev, label=label)
+    if ev is None:
+        return Trace(EventFrame(), label=label)
+    ev = _sorted_names(ev)
+    # whole-file reads keep the historical column shape: thread / message
+    # columns only when the trace actually has them
+    if not np.any(np.asarray(ev[THREAD], np.int64)):
+        ev = ev.drop(THREAD)
+    if not (np.any(~np.isnan(np.asarray(ev[MSG_SIZE], np.float64)))
+            or np.any(np.asarray(ev[PARTNER], np.int64) >= 0)):
+        ev = ev.drop(MSG_SIZE, PARTNER, TAG)
+    return Trace(optimize_dtypes(ev), label=label)
+
+
+@register_chunked("jsonl")
+def iter_chunks_jsonl(path: str, chunk_rows: int,
+                      hints: Optional[PlanHints] = None,
+                      label: Optional[str] = None) -> Iterator[EventFrame]:
+    """Stream ``path`` in EventFrame chunks of at most ``chunk_rows`` events
+    without ever holding the file, applying pushdown while parsing."""
+    parser = _JsonlParser()
+    with open(path) as f:
+        while True:
+            lines = list(itertools.islice(f, chunk_rows))
+            if not lines:
+                break
+            ev = parser.parse(lines, hints)
+            if ev is not None:
+                yield optimize_dtypes(ev)
 
 
 def write_jsonl(trace_or_events, path: str) -> None:

@@ -1,0 +1,9 @@
+"""Test-support utilities shipped with the library.
+
+``repro.testing.hyp`` resolves to the real `hypothesis
+<https://hypothesis.readthedocs.io>`_ when it is installed (CI installs the
+``dev`` extra) and otherwise to :mod:`repro.testing.minihyp`, a small
+vendored property-testing fallback with the same surface — so the
+property-based suites *run* everywhere instead of silently skipping in
+environments without the dependency.
+"""

@@ -1,0 +1,23 @@
+"""Property-testing front door: the real hypothesis when installed, the
+vendored :mod:`repro.testing.minihyp` fallback otherwise.
+
+Use in tests as::
+
+    from repro.testing.hyp import given, settings, st
+
+so the suites run (not skip) in dependency-free environments and get full
+shrinking/replay power wherever the ``dev`` extra is installed.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - depends on environment
+    from hypothesis import HealthCheck, given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    from .minihyp import HealthCheck, given, settings  # noqa: F401
+    from .minihyp import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = False
+
+__all__ = ["given", "settings", "st", "HealthCheck", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,168 @@
+"""Minimal vendored property-testing fallback with a hypothesis-shaped API.
+
+Implements exactly the subset this repo's test suites use — ``given``,
+``settings``, and the ``strategies`` constructors ``integers``, ``floats``,
+``booleans``, ``sampled_from``, ``lists``, ``composite`` — on top of a
+seeded ``numpy.random.Generator``.  No shrinking, no database, no health
+checks: on failure the raising example's seed and draw log are printed so
+the case can be reproduced by re-running the test (generation is
+deterministic per test name).
+
+Import through :mod:`repro.testing.hyp`, which prefers the real hypothesis
+whenever it is installed.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_EXAMPLES = 100
+
+
+class Strategy:
+    """A value generator: ``do_draw(rng)`` produces one example."""
+
+    def __init__(self, draw_fn: Callable[[np.random.Generator], Any],
+                 label: str = "strategy"):
+        self._draw = draw_fn
+        self.label = label
+
+    def do_draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self.do_draw(rng)),
+                        f"{self.label}.map")
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Strategy<{self.label}>"
+
+
+class _Strategies:
+    """The ``strategies`` namespace (imported as ``st``)."""
+
+    @staticmethod
+    def integers(min_value: int = -(2 ** 31), max_value: int = 2 ** 31 - 1
+                 ) -> Strategy:
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value},{max_value})")
+
+    @staticmethod
+    def floats(min_value: float = -1e9, max_value: float = 1e9,
+               allow_nan: bool = False, allow_infinity: bool = False,
+               width: int = 64) -> Strategy:
+        def draw(rng: np.random.Generator) -> float:
+            if allow_nan and rng.random() < 0.02:
+                return float("nan")
+            if allow_infinity and rng.random() < 0.02:
+                return float(np.inf if rng.random() < 0.5 else -np.inf)
+            # mix uniform draws with boundary values — property tests live
+            # on the edges
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.1:
+                return float(max_value)
+            if r < 0.15 and min_value <= 0.0 <= max_value:
+                return 0.0
+            return float(rng.uniform(min_value, max_value))
+        return Strategy(draw, f"floats({min_value},{max_value})")
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+    @staticmethod
+    def sampled_from(elements: Sequence) -> Strategy:
+        elements = list(elements)
+        return Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                        f"sampled_from({len(elements)})")
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: Optional[int] = None) -> Strategy:
+        cap = max_size if max_size is not None else min_size + 20
+
+        def draw(rng: np.random.Generator) -> List:
+            n = int(rng.integers(min_size, cap + 1))
+            return [elements.do_draw(rng) for _ in range(n)]
+        return Strategy(draw, f"lists[{min_size},{cap}]")
+
+    @staticmethod
+    def composite(fn: Callable) -> Callable[..., Strategy]:
+        """``@st.composite`` — ``fn(draw, *args)`` builds one example."""
+
+        @functools.wraps(fn)
+        def factory(*args: Any, **kwargs: Any) -> Strategy:
+            def draw_one(rng: np.random.Generator):
+                def draw(strategy: Strategy):
+                    return strategy.do_draw(rng)
+                return fn(draw, *args, **kwargs)
+            return Strategy(draw_one, f"composite:{fn.__name__}")
+        return factory
+
+
+strategies = _Strategies()
+
+
+class HealthCheck:  # pragma: no cover - API-compat shell
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    all = staticmethod(lambda: [])
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    """Decorator recording run parameters; composes with :func:`given` in
+    either order, like the real library."""
+
+    def deco(fn: Callable) -> Callable:
+        fn._minihyp_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*strats: Strategy, **kw_strats: Strategy) -> Callable:
+    """Run the test once per generated example (seeded per test name, so
+    failures reproduce deterministically)."""
+
+    def deco(fn: Callable) -> Callable:
+        conf = getattr(fn, "_minihyp_settings", None)
+
+        @functools.wraps(fn)
+        def runner(*outer_args: Any, **outer_kwargs: Any) -> None:
+            n = (conf or getattr(runner, "_minihyp_settings", None)
+                 or {"max_examples": _DEFAULT_EXAMPLES})["max_examples"]
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                args = [s.do_draw(rng) for s in strats]
+                kwargs = {k: s.do_draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*outer_args, *args, **outer_kwargs, **kwargs)
+                except Exception:
+                    print(f"minihyp: falsifying example #{i} "
+                          f"(seed={seed}) for {fn.__qualname__}: "
+                          f"args={args!r} kwargs={kwargs!r}")
+                    raise
+
+        # strategy-bound parameters must not look like pytest fixtures:
+        # expose the signature with the bound ones removed (positional
+        # strategies bind to the rightmost params, like hypothesis)
+        params = list(inspect.signature(fn).parameters.values())
+        if strats:
+            params = params[: len(params) - len(strats)]
+        params = [p for p in params if p.name not in kw_strats]
+        runner.__signature__ = inspect.Signature(params)
+        del runner.__wrapped__
+        return runner
+    return deco

@@ -17,14 +17,17 @@ and call structure* each case study analyzes:
                            v2 comm/comp overlap on a second "stream" thread)
 
 All generators are deterministic given ``seed`` and return
-:class:`repro.core.Trace` objects.
+:class:`repro.core.Trace` objects.  :func:`big_trace` is the out-of-core
+exception: it *writes sharded JSONL to disk* in bounded batches — traces
+far larger than RAM for exercising the streaming engine.
 """
 
 from .builder import TraceBuilder
 from .apps import (amg_vcycle, axonn_training, gol, kripke_sweep, loimos,
                    regression_pair, stencil3d, tortuga)
+from .big import big_trace
 
 __all__ = [
     "TraceBuilder", "gol", "stencil3d", "amg_vcycle", "kripke_sweep",
-    "tortuga", "loimos", "axonn_training", "regression_pair",
+    "tortuga", "loimos", "axonn_training", "regression_pair", "big_trace",
 ]

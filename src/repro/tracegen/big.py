@@ -1,0 +1,118 @@
+"""Out-of-core trace generation: write arbitrarily large sharded traces
+without ever holding them in memory.
+
+:func:`big_trace` emits one JSONL shard per rank (``rank_<p>.jsonl`` — the
+layout the parallel driver's shard hints understand) in bounded batches:
+events are generated vectorized with NumPy and formatted straight to disk,
+so generating a 10M-event trace costs a few hundred MB of *file*, not RAM.
+The trace shape stress-tests the streaming engine on purpose: every rank
+runs inside one ``main()`` call spanning the whole shard, each iteration is
+wrapped in an ``iteration`` call spanning many leaf calls (so wrapper pairs
+split across chunk boundaries at any chunk size), and leaf compute/comm
+calls carry message instants for the communication ops.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["big_trace"]
+
+_US = 1_000  # ns
+
+
+def big_trace(out_dir: str, nprocs: int = 8, events_per_proc: int = 125_000,
+              calls_per_iter: int = 500, seed: int = 0,
+              batch_calls: int = 50_000) -> List[str]:
+    """Write a sharded synthetic trace of ``nprocs * events_per_proc``
+    events without holding it in memory; returns the shard paths.
+
+    Each rank's stream is, in time order::
+
+        Enter main()
+          Enter iteration / [compute_cells() | halo_exchange() + MpiSend +
+          MpiRecv] x calls_per_iter / Leave iteration
+          ... repeated ...
+        Leave main()
+
+    so ``main()`` spans the whole shard and every ``iteration`` wrapper
+    spans ~3 x calls_per_iter rows — guaranteed enter/leave pairs split
+    across chunk boundaries for any realistic ``chunk_rows``.
+
+    Args:
+        out_dir: directory for ``rank_<p>.jsonl`` shards (created).
+        nprocs: number of ranks (one shard each).
+        events_per_proc: approximate events per shard (rounded to whole
+            iterations).
+        calls_per_iter: leaf calls per ``iteration`` wrapper.
+        seed: RNG seed (per-rank streams derive from it deterministically).
+        batch_calls: leaf calls generated and formatted per write batch —
+            bounds generator memory.
+
+    Returns:
+        List of shard paths, rank order.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for p in range(nprocs):
+        path = os.path.join(out_dir, f"rank_{p}.jsonl")
+        _write_rank(path, p, nprocs, events_per_proc, calls_per_iter,
+                    seed, batch_calls)
+        paths.append(path)
+    return paths
+
+
+def _write_rank(path: str, p: int, nprocs: int, events_per_proc: int,
+                calls_per_iter: int, seed: int, batch_calls: int) -> None:
+    rng = np.random.default_rng(seed * 100_003 + p)
+    # rows per leaf call: 2 (enter/leave); every 8th call adds a message
+    # instant; each iteration adds 2 wrapper rows.  Solve for leaf count.
+    rows_per_call = 2 + 1 / 8
+    n_iters = max(1, int((events_per_proc - 2)
+                         / (calls_per_iter * rows_per_call + 2)))
+    with open(path, "w") as f:
+        t = 0
+        f.write(f'{{"ts":{t},"et":"Enter","name":"main()","proc":{p}}}\n')
+        leaf_names = ("compute_cells()", "halo_exchange()", "smooth()")
+        for it in range(n_iters):
+            f.write(f'{{"ts":{t},"et":"Enter","name":"iteration",'
+                    f'"proc":{p}}}\n')
+            done = 0
+            while done < calls_per_iter:
+                k = min(batch_calls, calls_per_iter - done)
+                t = _write_batch(f, rng, p, nprocs, t, k, it, leaf_names)
+                done += k
+            t += 2 * _US
+            f.write(f'{{"ts":{t},"et":"Leave","name":"iteration",'
+                    f'"proc":{p}}}\n')
+        t += 5 * _US
+        f.write(f'{{"ts":{t},"et":"Leave","name":"main()","proc":{p}}}\n')
+
+
+def _write_batch(f, rng, p: int, nprocs: int, t: int, k: int, tag: int,
+                 leaf_names) -> int:
+    """Vectorized: k leaf calls -> formatted lines -> one writelines."""
+    durs = rng.integers(5 * _US, 40 * _US, size=k)
+    which = rng.integers(0, len(leaf_names), size=k)
+    starts = t + np.concatenate([[0], np.cumsum(durs[:-1])])
+    ends = starts + durs
+    msg_at = np.arange(k) % 8 == 7  # every 8th call sends
+    dst = (p + 1) % nprocs
+    sizes = rng.integers(256, 8192, size=k)
+    lines = []
+    for i in range(k):
+        nm = leaf_names[which[i]]
+        lines.append(f'{{"ts":{starts[i]},"et":"Enter","name":"{nm}",'
+                     f'"proc":{p}}}\n')
+        if msg_at[i]:
+            mid = (starts[i] + ends[i]) // 2
+            lines.append(f'{{"ts":{mid},"et":"Instant","name":"MpiSend",'
+                         f'"proc":{p},"partner":{dst},"size":{sizes[i]},'
+                         f'"tag":{tag}}}\n')
+        lines.append(f'{{"ts":{ends[i]},"et":"Leave","name":"{nm}",'
+                     f'"proc":{p}}}\n')
+    f.writelines(lines)
+    return int(ends[-1]) if k else t

@@ -14,6 +14,9 @@ from repro.configs import get_config
 from repro.distributed.sharding import (DEFAULT_RULES, logical_to_spec,
                                         rules_for)
 
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
+
 
 class FakeMesh:
     def __init__(self, shape):

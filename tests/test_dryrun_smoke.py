@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
+
 ROOT = str(pathlib.Path(__file__).parent.parent)
 
 SCRIPT = textwrap.dedent("""

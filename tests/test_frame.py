@@ -3,9 +3,7 @@
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed; property tests skipped")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from repro.testing.hyp import given, settings, st
 
 from repro.core.frame import Categorical, EventFrame, concat
 

@@ -11,6 +11,9 @@ from repro.kernels.ops import (flash_attention_gqa, router_topk,
                                time_profile_matrix)
 from repro.models.attention import chunked_attention
 
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("B,S,H,KVH,D", [
     (1, 64, 2, 1, 32), (2, 128, 4, 2, 64), (1, 192, 4, 4, 128),

@@ -9,6 +9,9 @@ import pytest
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models import SHAPES, build_model, input_specs
 
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -6,15 +6,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed; property tests skipped")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from repro.testing.hyp import given, settings, st
 
 from repro.models.attention import (chunked_attention, local_attention,
                                     reference_attention)
 from repro.models.moe import moe_ffn
 from repro.models.ssm import (causal_conv1d, conv1d_step, ssd_chunked,
                               ssd_reference, ssd_step)
+
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
 
 
 @given(st.integers(1, 2), st.integers(8, 200), st.sampled_from([1, 2, 4]),

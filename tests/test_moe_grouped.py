@@ -7,6 +7,9 @@ import pytest
 
 from repro.models.moe import moe_ffn
 
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
+
 
 def _mats(T=64, d=8, E=4, f=16, seed=0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 5)

@@ -1,0 +1,192 @@
+"""Property-based tests for lazy-plan invariants (paper §IV-E).
+
+Two invariants the query engine's whole design rests on:
+
+* **fusion soundness** — a chain of selections executed as one fused plan
+  yields exactly the trace the eager step-by-step application yields;
+* **remap soundness** — when a selection provably preserves enter/leave
+  pairs and parent chains, remapping the derived structure through the
+  old→new row map is bit-identical to recomputing it from scratch.
+
+Random balanced call forests (with messages) and random selection chains
+drive both; runs under real hypothesis when installed, the vendored
+minihyp fallback otherwise.
+"""
+
+import numpy as np
+
+from repro.testing.hyp import given, settings, st
+
+from repro.core.constants import (ET, EXC, INC, MATCH, NAME, PARENT, PROC,
+                                  TS)
+from repro.core.filters import Filter, time_window_filter
+from repro.core.frame import EventFrame
+from repro.core.query import apply_selection
+from repro.core.trace import Trace
+
+
+@st.composite
+def message_forest(draw):
+    """Random balanced per-process call forest, one trace."""
+    nprocs = draw(st.integers(1, 3))
+    ts_list, et_list, name_list, proc_list = [], [], [], []
+
+    def gen(proc, t, depth, budget):
+        while budget[0] > 0 and draw(st.booleans()):
+            budget[0] -= 1
+            name = draw(st.sampled_from(["f", "g", "h", "MPI_Wait"]))
+            ts_list.append(t)
+            et_list.append("Enter")
+            name_list.append(name)
+            proc_list.append(proc)
+            t += draw(st.integers(1, 3))
+            if depth < 3:
+                t = gen(proc, t, depth + 1, budget)
+            ts_list.append(t)
+            et_list.append("Leave")
+            name_list.append(name)
+            proc_list.append(proc)
+            t += draw(st.integers(1, 3))
+        return t
+
+    for p in range(nprocs):
+        gen(p, draw(st.integers(0, 4)), 0, [draw(st.integers(1, 10))])
+    if not ts_list:  # force at least one call
+        ts_list, et_list = [0, 1], ["Enter", "Leave"]
+        name_list, proc_list = ["f", "f"], [0, 0]
+    ev = EventFrame({
+        TS: np.asarray(ts_list, np.float64),
+        ET: np.asarray(et_list),
+        NAME: np.asarray(name_list),
+        PROC: np.asarray(proc_list, np.int64),
+    }).sort_by([PROC, TS])
+    return Trace(ev)
+
+
+@st.composite
+def selection_chain(draw):
+    """1-3 random plan steps (kind, payload)."""
+    steps = []
+    for _ in range(draw(st.integers(1, 3))):
+        kind = draw(st.sampled_from(["name", "procs", "window"]))
+        if kind == "name":
+            names = draw(st.lists(st.sampled_from(["f", "g", "h"]),
+                                  min_size=1, max_size=3))
+            steps.append(("name", sorted(set(names))))
+        elif kind == "procs":
+            steps.append(("procs", sorted({draw(st.integers(0, 2)),
+                                           draw(st.integers(0, 2))})))
+        else:
+            a = draw(st.integers(0, 20))
+            steps.append(("window", (a, a + draw(st.integers(1, 30)))))
+    return steps
+
+
+def _apply_eager(trace, steps):
+    cur = trace
+    for kind, payload in steps:
+        if kind == "name":
+            cur = cur.filter(Filter(NAME, "not-in", payload))
+        elif kind == "procs":
+            cur = cur.filter_processes(payload)
+        else:
+            cur = cur.filter(time_window_filter(*payload, trim="within"))
+    return cur
+
+
+def _apply_lazy(trace, steps):
+    q = trace.query()
+    for kind, payload in steps:
+        if kind == "name":
+            q = q.filter(Filter(NAME, "not-in", payload))
+        elif kind == "procs":
+            q = q.restrict_processes(payload)
+        else:
+            q = q.filter(time_window_filter(*payload, trim="within"))
+    return q.collect()
+
+
+def _frames_identical(a: EventFrame, b: EventFrame) -> None:
+    assert sorted(a.columns) == sorted(b.columns)
+    for c in a.columns:
+        va, vb = np.asarray(a[c]), np.asarray(b[c])
+        if va.dtype.kind in "UO":
+            assert list(map(str, va)) == list(map(str, vb)), c
+        else:
+            np.testing.assert_array_equal(va, vb, err_msg=c)
+
+
+@given(message_forest(), selection_chain())
+@settings(max_examples=60, deadline=None)
+def test_fused_plan_equals_sequential_eager(trace, steps):
+    """One fused mask == the same chain applied one eager step at a time."""
+    eager = _apply_eager(trace, steps)
+    lazy = _apply_lazy(trace, steps)
+    assert len(eager) == len(lazy)
+    _frames_identical(eager.events, lazy.events)
+
+
+@given(message_forest(), selection_chain())
+@settings(max_examples=60, deadline=None)
+def test_fused_plan_profile_equals_eager_profile(trace, steps):
+    """Terminal op on the fused plan == op on the eagerly selected trace."""
+    eager = _apply_eager(trace, steps).flat_profile(metrics=[INC, EXC])
+    q = _apply_lazy(trace, steps)
+    lazy = q.flat_profile(metrics=[INC, EXC])
+    _frames_identical(eager, lazy)
+
+
+@given(message_forest(), st.lists(st.integers(0, 2), min_size=1, max_size=3))
+@settings(max_examples=60, deadline=None)
+def test_structure_remap_equals_recompute(trace, procs):
+    """Pair-preserving selections (process subsets): remapped structure ==
+    full from-scratch recompute, bit for bit."""
+    trace._ensure_structure()
+    keep = np.isin(np.asarray(trace.events[PROC], np.int64),
+                   np.unique(procs))
+    remapped = apply_selection(trace, keep)
+    if not remapped._structured:
+        return  # selection broke pairs; fallback path is the recompute
+    # from-scratch reference on the same rows
+    fresh = Trace(trace.events.drop(MATCH, PARENT, INC, EXC,
+                                    "_matching_timestamp", "_depth",
+                                    "_cct_node").mask(keep))
+    fresh._ensure_structure()
+    for col in (MATCH, PARENT, INC, EXC):
+        np.testing.assert_array_equal(
+            np.asarray(remapped.events.column(col)),
+            np.asarray(fresh.events.column(col)), err_msg=col)
+
+
+@given(message_forest())
+@settings(max_examples=40, deadline=None)
+def test_whole_subtree_drop_remap(trace):
+    """Dropping whole call subtrees (a name filter that removes leaf calls
+    entirely) keeps pairs; remap must equal recompute."""
+    trace._ensure_structure()
+    ev = trace.events
+    match = np.asarray(ev.column(MATCH), np.int64)
+    parent = np.asarray(ev.column(PARENT), np.int64)
+    # drop every matched leaf call of name "h" (enter+leave pairs whose
+    # enter has no children) — whole-subtree by construction
+    names = ev[NAME]
+    is_enter = ev.cat(ET).mask_eq("Enter")
+    has_child = np.zeros(len(ev), bool)
+    pe = parent[(parent >= 0)]
+    has_child[pe] = True
+    drop = np.zeros(len(ev), bool)
+    sel = np.nonzero(is_enter & (match >= 0) & ~has_child
+                     & (names == "h"))[0]
+    drop[sel] = True
+    drop[match[sel]] = True
+    keep = ~drop
+    remapped = apply_selection(trace, keep)
+    assert remapped._structured
+    fresh = Trace(trace.events.drop(MATCH, PARENT, INC, EXC,
+                                    "_matching_timestamp", "_depth",
+                                    "_cct_node").mask(keep))
+    fresh._ensure_structure()
+    for col in (MATCH, PARENT, INC, EXC):
+        np.testing.assert_array_equal(
+            np.asarray(remapped.events.column(col)),
+            np.asarray(fresh.events.column(col)), err_msg=col)

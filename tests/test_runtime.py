@@ -16,6 +16,9 @@ from repro.distributed.compression import (ErrorFeedbackState, compress_int8,
 from repro.runtime import FaultInjector, Trainer, TrainLoopConfig
 from repro.serving import Request, ServeEngine
 
+# full-matrix jax suites: minutes, not seconds — slow tier only
+pytestmark = pytest.mark.slow
+
 CFG = get_smoke_config("pipit-lm-100m")
 
 

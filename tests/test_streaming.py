@@ -1,0 +1,328 @@
+"""Out-of-core streaming engine tests (tentpole of the streaming PR).
+
+The contract under test: for every op with a combinable streaming form,
+``Trace.open(path, streaming=True)`` produces results identical to the
+fully materialized execution — at any chunk size, with plan selections
+fused per chunk, across shards with process pushdown, and for TraceSet
+comparison ops over streaming members.  Ops without a streaming form must
+fail loudly with the escape hatches spelled out.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import tracegen
+from repro.core.constants import EXC, INC, NAME, PROC
+from repro.core.diff import TraceSet
+from repro.core.filters import Filter, time_window_filter
+from repro.core.frame import optimize_dtypes
+from repro.core.streaming import StreamingTrace, StreamingUnsupported
+from repro.core.trace import Trace
+from repro.readers.jsonl import write_jsonl
+from repro.readers.parallel import split_jsonl_by_process
+
+
+def assert_frames_equal(a, b, tol=False, context=""):
+    assert a.columns == b.columns, f"{context}: {a.columns} vs {b.columns}"
+    for c in a.columns:
+        va, vb = a[c], b[c]
+        if np.asarray(va).dtype.kind in "UO":
+            assert list(map(str, va)) == list(map(str, vb)), \
+                f"{context}: column {c}"
+        elif tol:
+            np.testing.assert_allclose(np.asarray(va, float),
+                                       np.asarray(vb, float),
+                                       rtol=1e-9, atol=1e-6,
+                                       err_msg=f"{context}: column {c}")
+        else:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb),
+                                          err_msg=f"{context}: column {c}")
+
+
+@pytest.fixture(scope="module")
+def trace_file(tmp_path_factory):
+    d = tmp_path_factory.mktemp("stream")
+    t = tracegen.tortuga(nprocs=4, iters=4, seed=3)
+    path = str(d / "tortuga.jsonl")
+    write_jsonl(t, path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def mem(trace_file):
+    return Trace.open(trace_file)
+
+
+@pytest.mark.parametrize("chunk_rows", [1, 17, 251, 10 ** 6])
+def test_flat_profile_identical(trace_file, mem, chunk_rows):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=chunk_rows)
+    a = mem.flat_profile(metrics=[EXC, INC])
+    b = st.flat_profile(metrics=[EXC, INC])
+    assert_frames_equal(a, b, context=f"chunk={chunk_rows}")
+
+
+@pytest.mark.parametrize("chunk_rows", [17, 251])
+def test_per_process_and_imbalance_identical(trace_file, mem, chunk_rows):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=chunk_rows)
+    assert_frames_equal(mem.flat_profile(per_process=True),
+                        st.flat_profile(per_process=True))
+    assert_frames_equal(mem.load_imbalance(), st.load_imbalance())
+    assert_frames_equal(mem.idle_time(), st.idle_time())
+
+
+def test_time_profile_close(trace_file, mem):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=173)
+    assert_frames_equal(mem.time_profile(num_bins=24),
+                        st.time_profile(num_bins=24), tol=True)
+
+
+def test_message_ops_identical(trace_file, mem):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=89)
+    np.testing.assert_array_equal(mem.comm_matrix(), st.comm_matrix())
+    assert_frames_equal(mem.comm_by_process(), st.comm_by_process())
+    cm, em = mem.message_histogram(), st.message_histogram()
+    np.testing.assert_array_equal(cm[0], em[0])
+    np.testing.assert_allclose(cm[1], em[1])
+    vm, vs = mem.comm_over_time(num_bins=16), st.comm_over_time(num_bins=16)
+    np.testing.assert_allclose(vm[0], vs[0])
+    np.testing.assert_allclose(vm[1], vs[1])
+
+
+def test_fused_masks_per_chunk(trace_file, mem):
+    """Selection chains fuse into one mask per chunk and match the eager
+    in-memory chain exactly."""
+    st = Trace.open(trace_file, streaming=True, chunk_rows=53)
+    f = Filter(NAME, "not-in", ["MPI_Wait", "MPI_Isend"])
+    a = (mem.query().filter(f).restrict_processes([0, 1, 3])
+         .flat_profile())
+    b = (st.query().filter(f).restrict_processes([0, 1, 3])
+         .flat_profile())
+    assert_frames_equal(a, b)
+
+
+def test_within_window_pushdown(trace_file, mem):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=53)
+    w = time_window_filter(1_000_000, 9_000_000, trim="within")
+    np.testing.assert_array_equal(mem.query().filter(w).comm_matrix(),
+                                  st.query().filter(w).comm_matrix())
+
+
+def test_unsupported_op_raises(trace_file):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=100)
+    with pytest.raises(StreamingUnsupported, match="collect"):
+        st.detect_pattern()
+    with pytest.raises(StreamingUnsupported, match="within"):
+        st.query().slice_time(0, 10.0).flat_profile()
+    with pytest.raises(StreamingUnsupported, match="derived"):
+        st.query().filter(Filter(EXC, ">", 100.0)).flat_profile()
+
+
+def test_collect_escape_hatch(trace_file, mem):
+    """collect() materializes and then any op (even non-streaming) runs."""
+    st = Trace.open(trace_file, streaming=True, chunk_rows=100)
+    collected = st.query().collect()
+    assert len(collected) == len(mem)
+    patterns = collected.detect_pattern(start_event="time-loop")
+    assert patterns is not None
+
+
+def test_stats_and_len(trace_file, mem):
+    st = Trace.open(trace_file, streaming=True, chunk_rows=64)
+    assert len(st) == len(mem)
+    assert st.num_processes == mem.num_processes
+
+
+def test_sharded_pushdown(tmp_path):
+    t = tracegen.gol(nprocs=4, iters=5, seed=1)
+    whole = str(tmp_path / "g.jsonl")
+    write_jsonl(t, whole)
+    shards = split_jsonl_by_process(whole, str(tmp_path / "shards"))
+    mem = Trace.open(shards)
+    st = Trace.open(shards, streaming=True, chunk_rows=40)
+    assert_frames_equal(mem.flat_profile(per_process=True),
+                        st.flat_profile(per_process=True))
+    # restricting processes must only surface the requested ranks
+    prof = st.query().restrict_processes([2]).flat_profile(per_process=True)
+    assert set(np.asarray(prof[PROC]).tolist()) == {2}
+
+
+def test_traceset_streaming_diff(tmp_path):
+    before, after = tracegen.regression_pair(
+        "tortuga", func="computeRhs", factor=1.7, nprocs=4, iters=3)
+    pb, pa = str(tmp_path / "b.jsonl"), str(tmp_path / "a.jsonl")
+    write_jsonl(before, pb)
+    write_jsonl(after, pa)
+    ts_mem = TraceSet.open([pb, pa])
+    ts_st = TraceSet.open([pb, pa], streaming=True, chunk_rows=128)
+    assert all(isinstance(t, StreamingTrace) for t in ts_st)
+    rm, rs = ts_mem.regression_report(), ts_st.regression_report()
+    assert_frames_equal(rm, rs, context="regression_report")
+    assert str(rs[NAME][0]) == "computeRhs"  # ground-truth regression wins
+    assert_frames_equal(ts_mem.diff_flat_profile(), ts_st.diff_flat_profile())
+    assert_frames_equal(ts_mem.scaling_analysis(), ts_st.scaling_analysis(),
+                        tol=True)
+    # shared plan binds onto streaming members
+    f = Filter(NAME, "not-in", ["MPI_Wait"])
+    assert_frames_equal(ts_mem.query().filter(f).regression_report(),
+                        ts_st.query().filter(f).regression_report())
+
+
+def test_unsorted_stream_raises(tmp_path):
+    p = str(tmp_path / "unsorted.jsonl")
+    with open(p, "w") as f:
+        f.write('{"ts": 100, "et": "Enter", "name": "f", "proc": 0}\n')
+        f.write('{"ts": 200, "et": "Leave", "name": "f", "proc": 0}\n')
+        f.write('{"ts": 50, "et": "Enter", "name": "g", "proc": 0}\n')
+        f.write('{"ts": 60, "et": "Leave", "name": "g", "proc": 0}\n')
+    st = Trace.open(p, streaming=True, chunk_rows=2)
+    with pytest.raises(StreamingUnsupported, match="time order"):
+        st.flat_profile()
+
+
+def test_optimize_dtypes_lossless():
+    t = tracegen.gol(nprocs=3, iters=3)
+    base = t.flat_profile()
+    ev = optimize_dtypes(t.events.copy())
+    assert ev.column(PROC).dtype.itemsize <= 4
+    t2 = Trace(ev)
+    assert_frames_equal(base, t2.flat_profile())
+
+
+def test_streaming_ingest_dtypes(trace_file):
+    """Chunked ingest downcasts id columns; results stay identical (covered
+    elsewhere) and the storage is actually narrower."""
+    st = Trace.open(trace_file, streaming=True, chunk_rows=10 ** 6)
+    chunk = next(iter(st.iter_chunks()))
+    assert chunk.column(PROC).dtype.itemsize <= 4
+
+
+def test_chrome_nondense_pids_match_memory(tmp_path):
+    """Chrome traces with arbitrary (non-dense) pids: the chunked reader
+    must densify exactly like the whole-file reader."""
+    import json
+    p = str(tmp_path / "weird_pids.json")
+    events = []
+    for pid in (2000, 1000):
+        events += [{"ph": "B", "name": "work", "pid": pid, "tid": 0,
+                    "ts": 1.0},
+                   {"ph": "E", "name": "work", "pid": pid, "tid": 0,
+                    "ts": 50.0}]
+    with open(p, "w") as f:
+        json.dump({"traceEvents": events}, f)
+    mem = Trace.open(p)
+    st = Trace.open(p, streaming=True, chunk_rows=2)
+    assert st.num_processes == mem.num_processes == 2
+    assert_frames_equal(mem.flat_profile(per_process=True),
+                        st.flat_profile(per_process=True))
+    # pushdown operates on the densified ids, like the in-memory path
+    a = mem.query().restrict_processes([1]).flat_profile(per_process=True)
+    b = st.query().restrict_processes([1]).flat_profile(per_process=True)
+    assert_frames_equal(a, b)
+
+
+def test_csv_pushdown_does_not_change_column_types(tmp_path):
+    """Process pushdown may drop the only rows whose values make a column
+    non-numeric; the type decision must still match the whole-file read."""
+    p = str(tmp_path / "phase.csv")
+    with open(p, "w") as f:
+        f.write("Timestamp (ns),Event Type,Name,Process,phase\n")
+        f.write("0,Enter,f,0,1\n")
+        f.write("5,Leave,f,0,1\n")
+        f.write("0,Enter,g,1,warmup\n")
+        f.write("9,Leave,g,1,warmup\n")
+    mem = Trace.open(p).query().restrict_processes([0]).collect()
+    st = Trace.open(p, streaming=True, chunk_rows=100)
+    chunk = next(iter(st.with_steps(
+        st.query().restrict_processes([0])._steps).iter_chunks()))
+    # whole-file read types 'phase' over ALL rows -> categorical strings
+    assert list(map(str, mem.events["phase"])) == ["1", "1"]
+    assert list(map(str, chunk["phase"])) == ["1", "1"]
+
+
+def test_chrome_bracket_at_block_boundary(tmp_path):
+    """The incremental CTF parser must keep reading when the traceEvents
+    '[' falls just past its read-block boundary."""
+    import json
+    p = str(tmp_path / "padded.json")
+    pad = "x" * (65536 - len('{"metadata": "", "traceEvents"') - 3)
+    events = [{"ph": "B", "name": "f", "pid": 0, "tid": 0, "ts": 1.0},
+              {"ph": "E", "name": "f", "pid": 0, "tid": 0, "ts": 9.0}]
+    with open(p, "w") as f:
+        f.write('{"metadata": "%s", "traceEvents": %s}'
+                % (pad, json.dumps(events)))
+    st = Trace.open(p, format="chrome", streaming=True, chunk_rows=10)
+    assert len(st) == 2
+    mem = Trace.open(p, format="chrome")
+    assert_frames_equal(mem.flat_profile(), st.flat_profile())
+
+
+def test_comm_negative_partner_matches_memory(tmp_path):
+    """Sends without a partner (-1) must land where the in-memory op puts
+    them (np.add.at wraps -1 to the last process), not silently vanish."""
+    import json
+    p = str(tmp_path / "flows.json")
+    events = []
+    for pid in range(3):
+        events += [{"ph": "B", "name": "w", "pid": pid, "tid": 0, "ts": 1.0},
+                   {"ph": "s", "name": "flow", "pid": pid, "tid": 0,
+                    "ts": 2.0, "id": 0, "args": {"size": 64.0}},
+                   {"ph": "E", "name": "w", "pid": pid, "tid": 0, "ts": 9.0}]
+    with open(p, "w") as f:
+        json.dump({"traceEvents": events}, f)
+    mem = Trace.open(p)
+    st = Trace.open(p, streaming=True, chunk_rows=3)
+    np.testing.assert_array_equal(mem.comm_matrix(), st.comm_matrix())
+    assert mem.comm_matrix()[:, -1].sum() > 0  # the wrap actually happened
+    assert_frames_equal(mem.comm_by_process(), st.comm_by_process())
+
+
+def test_comm_partner_outside_selection_raises(tmp_path):
+    """Restricting processes so that message partners fall outside the
+    selection must fail loudly (the in-memory path raises too), never
+    silently drop the traffic."""
+    t = tracegen.gol(nprocs=4, iters=2, seed=2)
+    p = str(tmp_path / "g.jsonl")
+    write_jsonl(t, p)
+    st = Trace.open(p, streaming=True, chunk_rows=32)
+    with pytest.raises(IndexError, match="partner"):
+        st.query().restrict_processes([0]).comm_matrix()
+    with pytest.raises(IndexError, match="partner"):
+        st.query().restrict_processes([0]).comm_by_process()
+
+
+def test_scaling_total_on_unbalanced_trace(tmp_path):
+    """scaling_analysis totals use per-row semantics: a function with one
+    unmatched Enter still contributes its matched calls (streaming must
+    match the eager branch, not the flat-profile group-zeroing rule)."""
+    p = str(tmp_path / "unbal.jsonl")
+    with open(p, "w") as f:
+        for ts, et, name in [(0, "Enter", "f"), (10, "Leave", "f"),
+                             (20, "Enter", "f")]:  # trailing open call
+            f.write('{"ts": %d, "et": "%s", "name": "%s", "proc": 0}\n'
+                    % (ts, et, name))
+        f.write('{"ts": 0, "et": "Enter", "name": "g", "proc": 1}\n')
+        f.write('{"ts": 30, "et": "Leave", "name": "g", "proc": 1}\n')
+    from repro.core.diff import TraceSet
+    mem_set = TraceSet.open([p, p])
+    st_set = TraceSet.open([p, p], streaming=True, chunk_rows=2)
+    a, b = mem_set.scaling_analysis(), st_set.scaling_analysis()
+    np.testing.assert_allclose(np.asarray(a["time.exc.total"], float),
+                               np.asarray(b["time.exc.total"], float))
+    assert float(a["time.exc.total"][0]) > 0  # matched f call counted
+
+
+def test_big_trace_generator_streams(tmp_path):
+    paths = tracegen.big_trace(str(tmp_path / "big"), nprocs=2,
+                               events_per_proc=4_000, calls_per_iter=120)
+    assert [os.path.basename(p) for p in paths] == ["rank_0.jsonl",
+                                                    "rank_1.jsonl"]
+    mem = Trace.open(paths)
+    st = Trace.open(paths, streaming=True, chunk_rows=500)
+    assert_frames_equal(mem.flat_profile(), st.flat_profile())
+    assert_frames_equal(mem.load_imbalance(), st.load_imbalance())
+    np.testing.assert_array_equal(mem.comm_matrix(), st.comm_matrix())
+    # wrappers span many chunks: main() and iteration must be profiled
+    names = set(map(str, mem.flat_profile()[NAME]))
+    assert {"main()", "iteration"} <= names

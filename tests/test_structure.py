@@ -7,9 +7,7 @@ vectorized matcher recovers exactly the generator's nesting.
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed; property tests skipped")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from repro.testing.hyp import given, settings, st
 
 from repro.core.constants import ET, NAME, PROC, TS
 from repro.core.frame import EventFrame

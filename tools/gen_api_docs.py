@@ -38,6 +38,12 @@ for single-trace ops, `TraceSet(...).query().<op>()` / `TraceSet.<op>()`
 for set-scoped comparison ops), and every reader is resolvable through
 `Trace.open(path, format="auto")`.
 
+Ops marked *streaming: combinable* also run **out of core** — over a
+`Trace.open(path, streaming=True)` handle they execute chunk by chunk with
+mergeable partial aggregates and never materialize the trace (see
+`docs/streaming.md`).  Ops marked *streaming: —* need the whole trace and
+raise `StreamingUnsupported` with the escape hatches spelled out.
+
 Register your own the same way the built-ins do:
 
 ```python
@@ -89,10 +95,13 @@ def render() -> str:
                 continue
             prereqs = [p for p, on in (("structure", spec.needs_structure),
                                        ("messages", spec.needs_messages)) if on]
+            streaming = ("combinable" if spec.streaming is not None
+                         else "—")
             lines.append(f"### `{name}`\n")
             lines.append(f"```python\n{name}{_sig(spec.fn)}\n```\n")
             lines.append(f"*needs: {', '.join(prereqs) if prereqs else 'nothing'}"
-                         f" · scope: {spec.scope}*\n")
+                         f" · scope: {spec.scope}"
+                         f" · streaming: {streaming}*\n")
             lines.append(_doc(spec.fn) + "\n")
 
     lines.append("\n## Registered trace readers\n\n"
