@@ -1,0 +1,176 @@
+"""Parallel plan execution vs serial streaming: wall-clock and identical
+digests (acceptance benchmark of the multi-core executor).
+
+Generates the 10M-event sharded ``tracegen.big_trace`` (written shard by
+shard, never held in memory), then runs the combinable-op suite twice in
+separate subprocesses:
+
+* **serial** — ``Trace.open(shards, streaming=True)``: one process folds
+  every chunk;
+* **parallel** — ``executor="parallel", processes=N``: work units (whole
+  shards and/or byte ranges) fan over a spawn pool; partial aggregates and
+  cross-seam call carries merge in the parent.
+
+Every exactly-combinable op (flat_profile, per-process profile,
+load_imbalance, idle_time, comm_matrix, comm_by_process,
+message_histogram) is SHA-256-digested in both modes; digests must match
+byte for byte.  The parallel phase also times a repeated ``flat_profile``
+to report the plan-result cache hit cost.
+
+Target: >= 3x speedup over serial streaming at >= 4 workers (enforced only
+when the machine actually has that many cores — on smaller containers the
+measured speedup and core count are reported as-is).
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_parallel [--events N]
+        [--workers N] [--json PATH]
+
+BENCH_PAR_EVENTS / BENCH_PAR_WORKERS override the defaults (CI smoke uses
+~1M events at 2 workers).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_EVENTS = int(os.environ.get("BENCH_PAR_EVENTS", 10_000_000))
+DEFAULT_WORKERS = int(os.environ.get(
+    "BENCH_PAR_WORKERS", min(4, os.cpu_count() or 1)))
+NPROCS = 8
+CHUNK_ROWS = 250_000
+SPEEDUP_TARGET = 3.0
+
+
+def _digest_ops(handle) -> str:
+    """One SHA-256 over every exactly-combinable op's result."""
+    import numpy as np
+    h = hashlib.sha256()
+
+    def frame(prof):
+        for c in prof.columns:
+            v = prof[c]
+            if np.asarray(v).dtype.kind in "UO":
+                h.update("\x00".join(map(str, v)).encode())
+            else:
+                h.update(np.ascontiguousarray(np.asarray(v,
+                                                         np.float64)).tobytes())
+
+    frame(handle.flat_profile(metrics=["time.exc", "time.inc"]))
+    frame(handle.flat_profile(per_process=True))
+    frame(handle.load_imbalance())
+    frame(handle.idle_time())
+    h.update(np.ascontiguousarray(handle.comm_matrix()).tobytes())
+    frame(handle.comm_by_process())
+    counts, edges = handle.message_histogram()
+    h.update(np.ascontiguousarray(counts).tobytes())
+    h.update(np.ascontiguousarray(edges).tobytes())
+    return h.hexdigest()
+
+
+def run_phase(mode: str, shard_dir: str, workers: int) -> None:
+    """Child process: one execution mode, JSON result on stdout."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.trace import Trace
+    shards = sorted(os.path.join(shard_dir, f) for f in os.listdir(shard_dir))
+    if mode == "serial":
+        handle = Trace.open(shards, streaming=True, chunk_rows=CHUNK_ROWS,
+                            cache=False)
+    else:
+        handle = Trace.open(shards, streaming=True, chunk_rows=CHUNK_ROWS,
+                            executor="parallel", processes=workers,
+                            cache=False)
+    t0 = time.time()
+    digest = _digest_ops(handle)
+    dt = time.time() - t0
+    out = {"mode": mode, "seconds": round(dt, 2), "digest": digest}
+    if mode == "parallel":
+        # plan-result cache: repeat one op cold vs cached
+        handle.cache = True
+        t0 = time.time()
+        handle.flat_profile()
+        out["cache_miss_seconds"] = round(time.time() - t0, 3)
+        t0 = time.time()
+        handle.flat_profile()
+        out["cache_hit_seconds"] = round(time.time() - t0, 6)
+    print(json.dumps(out))
+
+
+def bench(events: int = DEFAULT_EVENTS, workers: int = DEFAULT_WORKERS) -> dict:
+    from repro.tracegen import big_trace
+    out = {"events": events, "workers": workers,
+           "cpu_count": os.cpu_count(), "chunk_rows": CHUNK_ROWS,
+           "nprocs": NPROCS}
+    with tempfile.TemporaryDirectory(prefix="bench_par_") as d:
+        shard_dir = os.path.join(d, "shards")
+        t0 = time.time()
+        big_trace(shard_dir, nprocs=NPROCS,
+                  events_per_proc=max(events // NPROCS, 1000))
+        out["gen_seconds"] = round(time.time() - t0, 1)
+        out["trace_mb"] = round(sum(
+            os.path.getsize(os.path.join(shard_dir, f))
+            for f in os.listdir(shard_dir)) / 1e6, 1)
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src")
+                   + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        for mode in ("serial", "parallel"):
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_parallel",
+                 "--phase", mode, "--shards", shard_dir,
+                 "--workers", str(workers)],
+                capture_output=True, text=True, cwd=REPO, env=env,
+                check=True)
+            out[mode] = json.loads(r.stdout.strip().splitlines()[-1])
+    out["identical"] = out["serial"]["digest"] == out["parallel"]["digest"]
+    out["speedup"] = round(out["serial"]["seconds"]
+                           / max(out["parallel"]["seconds"], 1e-9), 2)
+    cache_hit = out["parallel"].get("cache_hit_seconds", 0.0)
+    cache_miss = out["parallel"].get("cache_miss_seconds", 0.0)
+    out["cache_speedup"] = round(cache_miss / max(cache_hit, 1e-9), 1)
+    # the 3x gate needs the workers to actually exist as cores
+    out["speedup_gate_active"] = (workers >= 4
+                                  and (os.cpu_count() or 1) >= workers)
+    out["target_met"] = (not out["speedup_gate_active"]
+                         or out["speedup"] >= SPEEDUP_TARGET)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", type=int, default=DEFAULT_EVENTS)
+    ap.add_argument("--workers", type=int, default=DEFAULT_WORKERS)
+    ap.add_argument("--json", dest="json_path",
+                    help="write the result dict to PATH as JSON")
+    ap.add_argument("--phase", choices=["serial", "parallel"])
+    ap.add_argument("--shards")
+    args = ap.parse_args(argv)
+    if args.phase:
+        run_phase(args.phase, args.shards, args.workers)
+        return 0
+    res = bench(args.events, args.workers)
+    print(json.dumps(res, indent=1))
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(res, f, indent=1)
+    if not res["identical"]:
+        print("FAIL: parallel digests differ from serial streaming",
+              file=sys.stderr)
+        return 1
+    if not res["target_met"]:
+        print(f"FAIL: speedup {res['speedup']}x below "
+              f"{SPEEDUP_TARGET}x target at {res['workers']} workers",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

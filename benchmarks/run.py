@@ -1,60 +1,74 @@
 """Benchmark runner: ``PYTHONPATH=src python -m benchmarks.run``
 
-Sections (one per paper table/figure + the roofline deliverable):
-  1. reader/op scaling (Fig. 5)          — bench_reader_scaling
-  2. per-op scaling exponents (§VI)      — bench_ops
-  3. lazy query plans vs eager (§IV-E)   — bench_query_plan
-  4. TraceDiff shared-plan diffs (§IV-D) — bench_diff
-  5. out-of-core streaming vs in-memory  — bench_streaming
-  6. case studies (§VII, Figs. 7-13)     — bench_case_studies
-  7. Pallas kernel roofline              — bench_kernels
-  8. roofline table (all dry-run cells)  — roofline
+Benchmarks are auto-enumerated: every ``benchmarks/bench_*.py`` module
+exposing a ``bench()`` callable runs as one section (alphabetical order),
+followed by the roofline table.  Adding a benchmark file is enough — no
+index list to update.
+
+``--json PATH`` additionally writes every section's result dict (keyed by
+module name) as one JSON document — CI uploads it as the perf artifact,
+and repo-root ``BENCH_PR<N>.json`` snapshots are taken the same way.
+
+``--only NAME`` runs a single section (e.g. ``--only bench_parallel``).
 """
 
 from __future__ import annotations
 
+import argparse
+import importlib
 import json
+import pkgutil
 import sys
 import time
 
 
-def main():
+def discover() -> list:
+    """Names of every bench_* module in this package (no import cost)."""
+    import benchmarks
+    return sorted(m.name for m in pkgutil.iter_modules(benchmarks.__path__)
+                  if m.name.startswith("bench_"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", dest="json_path",
+                    help="write all section results to PATH as JSON")
+    ap.add_argument("--only", help="run a single section by module name")
+    args = ap.parse_args(argv)
+
     t0 = time.time()
     print("=" * 72)
     print("repro benchmarks — Pipit on TPU")
     print("=" * 72)
 
-    from . import bench_reader_scaling
-    print("\n## [1/8] Reader & op scaling vs trace size (paper Fig. 5)")
-    print(json.dumps(bench_reader_scaling.bench(), indent=1))
+    names = discover()
+    if args.only:
+        if args.only not in names + ["roofline"]:
+            print(f"unknown benchmark {args.only!r}; available: "
+                  f"{names + ['roofline']}", file=sys.stderr)
+            return 2
+        names = [args.only] if args.only != "roofline" else []
+    total = len(names) + (0 if args.only and args.only != "roofline" else 1)
+    results = {}
+    for i, name in enumerate(names, 1):
+        mod = importlib.import_module(f"benchmarks.{name}")
+        title = (mod.__doc__ or name).strip().splitlines()[0].rstrip(".")
+        print(f"\n## [{i}/{total}] {name}: {title}")
+        res = mod.bench()
+        results[name] = res
+        print(json.dumps(res, indent=1, default=str))
 
-    from . import bench_ops
-    print("\n## [2/8] Per-operation scaling exponents (paper §VI)")
-    print(json.dumps(bench_ops.bench(), indent=1))
+    if not args.only or args.only == "roofline":
+        from . import roofline
+        print(f"\n## [{total}/{total}] roofline: table from dry-run "
+              f"artifacts")
+        roofline.main()
+        results["roofline"] = "rendered to stdout (reads dry-run artifacts)"
 
-    from . import bench_query_plan
-    print("\n## [3/8] Lazy query plans: fused chain vs eager seed path (§IV-E)")
-    print(json.dumps(bench_query_plan.bench(), indent=1))
-
-    from . import bench_diff
-    print("\n## [4/8] TraceDiff: shared-plan N-trace diff vs sequential runs (§IV-D)")
-    print(json.dumps(bench_diff.bench(), indent=1))
-
-    from . import bench_streaming
-    print("\n## [5/8] Out-of-core streaming vs in-memory (peak RSS, identical results)")
-    print(json.dumps(bench_streaming.bench(), indent=1))
-
-    from . import bench_case_studies
-    print("\n## [6/8] Case studies (paper §VII, Figs. 7-13)")
-    print(json.dumps(bench_case_studies.bench(), indent=1))
-
-    from . import bench_kernels
-    print("\n## [7/8] Pallas kernel block-size roofline")
-    print(json.dumps(bench_kernels.bench(), indent=1))
-
-    from . import roofline
-    print("\n## [8/8] Roofline table (from dry-run artifacts)")
-    roofline.main()
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"\nwrote {args.json_path}")
 
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s")
     return 0

@@ -146,6 +146,7 @@ class _MetricTotalAgg(StreamAgg):
     whole function)."""
 
     needs_calls = True
+    supports_parallel = True
 
     def __init__(self, metric: str = EXC):
         if metric not in ("time.inc", EXC):
@@ -163,6 +164,9 @@ class _MetricTotalAgg(StreamAgg):
             return
         vals = calls.inc if self.metric == "time.inc" else calls.exc
         self.total += float(np.nan_to_num(vals).sum())
+
+    def merge_from(self, other, code_map) -> None:
+        self.total += other.total
 
     def result(self, ctx) -> float:
         return self.total
@@ -606,21 +610,14 @@ class SetQuery:
     def _pool_prepare(traces: Sequence, steps, needs_structure: bool,
                       needs_messages: bool, processes: int) -> List:
         """Run collect + prerequisite materialization in a spawn pool and
-        reassemble the prepared Traces in the parent."""
+        reassemble the prepared Traces in the parent (serial fallback for
+        stdin / -c / REPL ``__main__`` lives in repro.parallel_util)."""
         from .trace import Trace
-        from ..readers.parallel import spawn_pool_ok
-        import multiprocessing as mp
+        from ..parallel_util import map_maybe_parallel
         args = [(t.events, t._structured, t._msg_match, t.definitions,
                  t.label, tuple(steps), needs_structure, needs_messages)
                 for t in traces]
-        if not spawn_pool_ok():
-            # stdin / -c / REPL __main__ cannot survive a spawn re-import;
-            # degrade to serial preparation instead of crashing the pool
-            parts = [_prepare_member(a) for a in args]
-        else:
-            with mp.get_context("spawn").Pool(min(processes,
-                                                  len(args))) as pool:
-                parts = pool.map(_prepare_member, args)
+        parts, _pooled = map_maybe_parallel(_prepare_member, args, processes)
         out = []
         for ev, structured, mm, label, defs in parts:
             t = Trace(ev, definitions=defs, label=label)
@@ -759,17 +756,24 @@ class TraceSet:
         ``streaming=True`` opens every member as an out-of-core
         :class:`~repro.core.streaming.StreamingTrace`: comparison ops then
         stream each member chunk by chunk (diff profiles across traces that
-        do not fit in RAM together)."""
+        do not fit in RAM together).  ``processes=N`` then turns on the
+        multi-core plan executor for every member, with all members' work
+        units fanning into **one** shared spawn pool (worker startup is
+        paid once per set, not once per member)."""
         if streaming:
-            if processes is not None:
-                raise ValueError(
-                    "processes only applies to eager ingest; streaming "
-                    "members are handles that read nothing at open time")
             from .streaming import DEFAULT_CHUNK_ROWS
             members = [StreamingTrace(p, format=format,
                                       chunk_rows=chunk_rows
-                                      or DEFAULT_CHUNK_ROWS, **kw)
+                                      or DEFAULT_CHUNK_ROWS,
+                                      processes=processes, **kw)
                        for p in paths]
+            # one pool for the whole set whenever members will run parallel
+            # (processes=N, or executor="parallel" passed through **kw)
+            if members and members[0].wants_parallel():
+                from ..parallel_util import SharedPool
+                shared = SharedPool(processes)
+                for m in members:
+                    m._pool = shared
             return cls(members, labels=labels)
         if chunk_rows is not None:
             raise ValueError("chunk_rows only applies with streaming=True")

@@ -164,6 +164,8 @@ def _check_partner_range(extent: int, n: int, op: str) -> None:
 class _CommMatrixAgg(StreamAgg):
     """Combinable comm matrix: per-chunk (sender, receiver) partial sums."""
 
+    supports_parallel = True
+
     def __init__(self, output: str = "size"):
         self.output = output
         self._mat = np.zeros((0, 0))
@@ -192,6 +194,15 @@ class _CommMatrixAgg(StreamAgg):
         self._mat = grow_to(self._mat, (n, n))
         np.add.at(self._mat, (src, dst), w)
 
+    def merge_from(self, other, code_map) -> None:
+        # everything is keyed by global process ids — no name remap at all
+        self._mat = grow_to(self._mat, other._mat.shape)
+        a, b = other._mat.shape
+        self._mat[:a, :b] += other._mat
+        self._neg = grow_to(self._neg, other._neg.shape)
+        self._neg[: len(other._neg)] += other._neg
+        self._extent = max(self._extent, other._extent)
+
     def result(self, ctx) -> np.ndarray:
         n = ctx.num_processes
         _check_partner_range(self._extent, n, "comm_matrix")
@@ -206,6 +217,8 @@ class _CommMatrixAgg(StreamAgg):
 @register_streaming("comm_by_process")
 class _CommByProcessAgg(StreamAgg):
     """Combinable per-process communication volume."""
+
+    supports_parallel = True
 
     def __init__(self, output: str = "size"):
         self.output = output
@@ -235,6 +248,14 @@ class _CommByProcessAgg(StreamAgg):
         self._recv = grow_to(self._recv, (n,))
         np.add.at(self._recv, dst, w)
 
+    def merge_from(self, other, code_map) -> None:
+        self._sent = grow_to(self._sent, other._sent.shape)
+        self._sent[: len(other._sent)] += other._sent
+        self._recv = grow_to(self._recv, other._recv.shape)
+        self._recv[: len(other._recv)] += other._recv
+        self._neg += other._neg
+        self._extent = max(self._extent, other._extent)
+
     def result(self, ctx) -> EventFrame:
         n = ctx.num_processes
         _check_partner_range(self._extent, n, "comm_by_process")
@@ -255,6 +276,7 @@ class _MessageHistogramAgg(StreamAgg):
     counts over those edges merge exactly."""
 
     needs_stats = True
+    supports_parallel = True
 
     def __init__(self, bins: int = 10):
         self.bins = bins
@@ -278,6 +300,10 @@ class _MessageHistogramAgg(StreamAgg):
         c, _ = np.histogram(size, bins=self._edges)
         self._counts += c
 
+    def merge_from(self, other, code_map) -> None:
+        # edges were fixed by the shared stats pre-pass; counts just add
+        self._counts += other._counts
+
     def result(self, ctx) -> Tuple[np.ndarray, np.ndarray]:
         if self._edges is None:
             return np.zeros(self.bins, np.int64), np.linspace(0, 1,
@@ -292,6 +318,7 @@ class _CommOverTimeAgg(StreamAgg):
     for integer byte counts."""
 
     needs_stats = True
+    supports_parallel = True
 
     def __init__(self, num_bins: int = 32, output: str = "size"):
         self.num_bins = num_bins
@@ -312,6 +339,9 @@ class _CommOverTimeAgg(StreamAgg):
         w = size if self.output == "size" else np.ones(len(ts))
         v, _ = np.histogram(ts, bins=self._edges, weights=w)
         self._vals += v
+
+    def merge_from(self, other, code_map) -> None:
+        self._vals += other._vals
 
     def result(self, ctx) -> Tuple[np.ndarray, np.ndarray]:
         return self._vals, self._edges

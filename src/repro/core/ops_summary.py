@@ -268,6 +268,34 @@ def _pad_to(arr: np.ndarray, shape) -> np.ndarray:
     return out
 
 
+def _scatter_names(dst: np.ndarray, src: np.ndarray, code_map: np.ndarray,
+                   axis: int) -> np.ndarray:
+    """Add ``src`` (a worker accumulator whose ``axis`` is indexed by the
+    worker's local name codes) into ``dst`` with that axis remapped through
+    ``code_map`` — the shared kernel of every cross-worker ``merge_from``.
+    ``src`` is padded to exactly ``len(code_map)`` names (and ``dst``'s
+    extents on the other axes); ``dst`` is grown to hold the remapped codes.
+    ``code_map`` entries are unique, so a fancy-indexed ``+=`` is exact.
+    """
+    k = len(code_map)
+    if k == 0:
+        return dst
+    want = list(dst.shape)
+    for ax in range(dst.ndim):
+        if ax == axis:
+            want[ax] = k
+        else:
+            want[ax] = max(want[ax], src.shape[ax] if ax < src.ndim else 0)
+    src = _pad_to(src, tuple(want))
+    grown = list(src.shape)
+    grown[axis] = int(code_map.max()) + 1
+    dst = grow_to(dst, tuple(grown))
+    idx = [slice(0, n) for n in src.shape]
+    idx[axis] = code_map
+    dst[tuple(idx)] += src
+    return dst
+
+
 @register_streaming("flat_profile")
 class _FlatProfileAgg(StreamAgg):
     """Combinable flat profile: per-name (or per name×process) metric sums
@@ -278,6 +306,7 @@ class _FlatProfileAgg(StreamAgg):
     its group total collapses to 0 (``nan_to_num`` after aggregation)."""
 
     needs_calls = True
+    supports_parallel = True
 
     def __init__(self, metrics: Sequence[str] = (EXC,),
                  groupby_column: str = NAME, per_process: bool = False):
@@ -320,6 +349,14 @@ class _FlatProfileAgg(StreamAgg):
             np.add.at(self._counts, codes, 1)
             for i, m in enumerate(self.metrics):
                 np.add.at(self._sums[i], calls.name, metric_vals[m])
+
+    def merge_from(self, other, code_map) -> None:
+        # counts/sums lead with the name axis in both layouts; procs (when
+        # present) are global ids and need no remap
+        self._counts = _scatter_names(self._counts, other._counts, code_map,
+                                      axis=0)
+        self._sums = _scatter_names(self._sums, other._sums, code_map,
+                                    axis=1)
 
     def result(self, ctx) -> EventFrame:
         nf = len(ctx.names)
@@ -371,6 +408,7 @@ class _TimeProfileAgg(StreamAgg):
 
     needs_calls = True
     needs_stats = True
+    supports_parallel = True
 
     def __init__(self, num_bins: int = 32, metric: str = EXC,
                  normalized: bool = False, backend: str = "numpy"):
@@ -420,6 +458,12 @@ class _TimeProfileAgg(StreamAgg):
                         0, self.num_bins - 1)
             np.add.at(self._Z, (b, codes[zsel]), w[zsel])
 
+    def merge_from(self, other, code_map) -> None:
+        # bin edges come from the shared stats pre-pass, so workers and
+        # parent agree on them; only the name axis needs remapping
+        self._H = _scatter_names(self._H, other._H, code_map, axis=2)
+        self._Z = _scatter_names(self._Z, other._Z, code_map, axis=1)
+
     def result(self, ctx) -> EventFrame:
         if self._edges is None:
             return EventFrame({"bin_start": np.asarray([]),
@@ -452,6 +496,7 @@ class _LoadImbalanceAgg(StreamAgg):
     finalize is identical to the in-memory op."""
 
     needs_calls = True
+    supports_parallel = True
 
     def __init__(self, metric: str = EXC, num_processes: int = 5,
                  top_functions: Optional[int] = None):
@@ -470,6 +515,9 @@ class _LoadImbalanceAgg(StreamAgg):
         self._tot = grow_to(self._tot, (nf, np_))
         vals = calls.inc if self.metric == INC else calls.exc
         np.add.at(self._tot, (calls.name, calls.proc), vals)
+
+    def merge_from(self, other, code_map) -> None:
+        self._tot = _scatter_names(self._tot, other._tot, code_map, axis=0)
 
     def result(self, ctx) -> EventFrame:
         nf = len(ctx.names)
@@ -502,6 +550,7 @@ class _IdleTimeAgg(StreamAgg):
     completed calls — exact merge for integer-ns traces."""
 
     needs_calls = True
+    supports_parallel = True
 
     def __init__(self, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
                  k: Optional[int] = None):
@@ -524,6 +573,12 @@ class _IdleTimeAgg(StreamAgg):
         np_ = int(calls.proc[sel].max()) + 1
         self._out = grow_to(self._out, (np_,))
         np.add.at(self._out, calls.proc[sel], np.nan_to_num(calls.inc[sel]))
+
+    def merge_from(self, other, code_map) -> None:
+        # keyed by process only (idle-name matching already happened in the
+        # worker's own code space); plain padded add
+        self._out = grow_to(self._out, other._out.shape)
+        self._out[: len(other._out)] += other._out
 
     def result(self, ctx) -> EventFrame:
         nprocs = ctx.num_processes

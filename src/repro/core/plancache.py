@@ -1,0 +1,237 @@
+"""Plan-result cache: terminal-op results memoized by content identity.
+
+Repeated interactive analysis — the notebook workflow the paper's scripting
+pitch targets — re-runs the same terminal ops over the same traces
+constantly, and for out-of-core handles every re-run is a full re-read of
+the on-disk stream.  This cache memoizes terminal-op results keyed by a
+digest of
+
+    (trace content identity, fused plan steps, op identity, args, kwargs)
+
+so a repeated call returns the previous result object without touching the
+data.  Entries are shared process-wide: two TraceSet members over the same
+paths, or two handles opened on the same file, hit the same entry.
+
+Content identity is what makes this safe:
+
+* **streaming / scan sources** — the (path, size, mtime_ns, inode) of every
+  input file plus the handle's read configuration; touching or rewriting a
+  file changes the key, so stale hits are impossible.  On by default
+  (``Trace.open(..., cache=False)`` or a per-call ``op(..., cache=False)``
+  opts out).
+* **in-memory traces** — a SHA-256 over the trace's base event columns
+  (derived columns excluded: they are deterministic products of the base
+  and materialize lazily).  Hashing is O(N) per call, so this layer is
+  **opt-in** per call (``trace.query().flat_profile(cache=True)``); caching
+  stays exact under mutation because a mutated frame hashes differently.
+
+Anything that cannot be digested exactly — callable arguments, unknown
+custom plan steps, exotic values — silently bypasses the cache rather than
+risking a wrong hit.  ``clear()`` is the explicit invalidation hatch;
+``configure(enabled=False)`` turns the whole layer off.
+
+Like ``functools.lru_cache``, hits return the *same object* that was
+stored: treat cached results as read-only, since mutating a returned
+frame/array in place would be visible to every later hit.  Call with
+``cache=False`` (or ``.copy()`` the result) when you intend to mutate.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["lookup", "store", "plan_key", "clear", "configure", "stats"]
+
+_MAX_ENTRIES = 128
+_ENABLED = True
+_CACHE: "OrderedDict[str, Any]" = OrderedDict()
+_HITS = 0
+_MISSES = 0
+
+
+class _Undigestable(Exception):
+    """A key component has no exact digest; bypass the cache."""
+
+
+def configure(enabled: Optional[bool] = None,
+              max_entries: Optional[int] = None) -> None:
+    """Adjust the cache globally (``enabled=False`` disables lookups and
+    stores; ``max_entries`` bounds the LRU)."""
+    global _ENABLED, _MAX_ENTRIES
+    if enabled is not None:
+        _ENABLED = bool(enabled)
+    if max_entries is not None:
+        _MAX_ENTRIES = max(int(max_entries), 1)
+        while len(_CACHE) > _MAX_ENTRIES:
+            _CACHE.popitem(last=False)
+
+
+def clear() -> None:
+    """Drop every cached result (explicit invalidation)."""
+    _CACHE.clear()
+
+
+def stats() -> dict:
+    """Cache counters: entries, hits, misses (benchmarks report these)."""
+    return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES}
+
+
+def lookup(key: str) -> Tuple[bool, Any]:
+    """(hit, value) for ``key``; a hit refreshes LRU order."""
+    global _HITS, _MISSES
+    if key in _CACHE:
+        _CACHE.move_to_end(key)
+        _HITS += 1
+        return True, _CACHE[key]
+    _MISSES += 1
+    return False, None
+
+
+def store(key: str, value: Any) -> None:
+    _CACHE[key] = value
+    _CACHE.move_to_end(key)
+    while len(_CACHE) > _MAX_ENTRIES:
+        _CACHE.popitem(last=False)
+
+
+# ---------------------------------------------------------------------------
+# key construction
+# ---------------------------------------------------------------------------
+
+def _norm(v) -> Any:
+    """Normalize one argument value into a deterministic, repr-stable
+    token; raise _Undigestable for anything without an exact digest."""
+    if v is None or isinstance(v, (bool, int, float, str, bytes)):
+        return v
+    if isinstance(v, (np.integer, np.floating, np.bool_)):
+        return v.item()
+    if isinstance(v, (list, tuple)):
+        return tuple(_norm(x) for x in v)
+    if isinstance(v, (set, frozenset)):
+        return tuple(sorted((_norm(x) for x in v), key=repr))
+    if isinstance(v, dict):
+        return tuple(sorted(((str(k), _norm(x)) for k, x in v.items())))
+    if isinstance(v, range):
+        return ("range", v.start, v.stop, v.step)
+    if isinstance(v, np.ndarray) and v.size <= 4096:
+        return ("ndarray", v.dtype.str, v.shape, v.tobytes())
+    raise _Undigestable(type(v).__name__)
+
+
+def _filter_token(f) -> tuple:
+    from .filters import _And, _Not, _Or
+    if isinstance(f, _And):
+        return ("and", _filter_token(f.a), _filter_token(f.b))
+    if isinstance(f, _Or):
+        return ("or", _filter_token(f.a), _filter_token(f.b))
+    if isinstance(f, _Not):
+        return ("not", _filter_token(f.a))
+    if type(f).__name__ not in ("Filter",):
+        raise _Undigestable(type(f).__name__)  # user Filter subclass
+    return ("leaf", f.field, f.operator, _norm(f.value),
+            getattr(f, "_trim", None))
+
+
+def _steps_token(steps) -> tuple:
+    from .query import FilterStep, ProcessStep, SliceTimeStep
+    out = []
+    for step in steps:
+        if type(step) is FilterStep:
+            out.append(("filter", _filter_token(step.filter)))
+        elif type(step) is SliceTimeStep:
+            out.append(("slice", float(step.start), float(step.end),
+                        step.trim))
+        elif type(step) is ProcessStep:
+            out.append(("procs", tuple(int(p) for p in step.procs)))
+        else:
+            raise _Undigestable(type(step).__name__)
+    return tuple(out)
+
+
+def _stat_token(path: str) -> tuple:
+    import os
+    st = os.stat(path)
+    return (path, st.st_size, st.st_mtime_ns, st.st_ino)
+
+
+def _paths_token(paths) -> tuple:
+    import os
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, files in sorted(os.walk(p)):
+                out.extend(_stat_token(os.path.join(root, f))
+                           for f in sorted(files))
+        else:
+            out.append(_stat_token(p))
+    return tuple(out)
+
+
+def _content_token(trace) -> tuple:
+    """SHA-256 over the trace's base (non-derived) event columns."""
+    from .frame import Categorical
+    from .query import _strip
+    ev = _strip(trace.events)
+    h = hashlib.sha256()
+    for name in ev.columns:
+        col = ev.column(name)
+        h.update(name.encode())
+        if isinstance(col, Categorical):
+            h.update(np.ascontiguousarray(col.codes).tobytes())
+            h.update("\x00".join(map(str, col.categories)).encode())
+        else:
+            arr = np.asarray(col)
+            if arr.dtype.kind == "O":
+                raise _Undigestable(f"object column {name}")
+            h.update(arr.dtype.str.encode())
+            h.update(np.ascontiguousarray(arr).tobytes())
+    return ("mem", len(ev), h.hexdigest())
+
+
+def _source_token(source, cache_flag: Optional[bool]):
+    """Identity token for a plan source, or None when this source should
+    not be cached under the given per-call flag."""
+    from .query import _ScanSource, _StreamSource, _TraceSource
+    if isinstance(source, _StreamSource):
+        h = source.handle
+        if cache_flag is None and not h.cache:
+            return None
+        return ("stream", _paths_token(h.paths), h.format, h.chunk_rows,
+                h.executor, h.processes, _norm(h.reader_kwargs),
+                _steps_token(h._steps))
+    if isinstance(source, _ScanSource):
+        return ("scan", _paths_token(source.paths), source.format)
+    if isinstance(source, _TraceSource):
+        # hashing an in-memory trace costs a full pass — only on request
+        if not cache_flag:
+            return None
+        return _content_token(source.trace)
+    return None  # unknown source kinds are never cached
+
+
+def plan_key(source, steps, spec, args: tuple, kwargs: dict,
+             cache_flag: Optional[bool]) -> Optional[str]:
+    """Digest of one terminal-op execution, or None to bypass the cache.
+
+    ``cache_flag`` is the per-call ``cache=`` argument: False forces a
+    bypass, True opts an in-memory trace in, None applies the defaults
+    (streaming/scan sources cached, in-memory not).
+    """
+    if not _ENABLED or cache_flag is False:
+        return None
+    try:
+        src = _source_token(source, cache_flag)
+        if src is None:
+            return None
+        fn = spec.fn
+        op = (spec.name,
+              f"{getattr(fn, '__module__', '')}."
+              f"{getattr(fn, '__qualname__', '')}" if fn is not None else "")
+        token = (src, _steps_token(steps), op, _norm(args), _norm(kwargs))
+    except (_Undigestable, OSError):
+        return None
+    return hashlib.sha256(repr(token).encode()).hexdigest()

@@ -529,6 +529,14 @@ class TraceQuery:
 
     # -- terminal analysis ops (registry-resolved) -------------------------
     def run(self, op_name: str, *args: Any, **kwargs: Any) -> Any:
+        """Execute a registered terminal op over this plan.
+
+        ``cache=`` (consumed here, never passed to the op) controls the
+        plan-result cache (:mod:`repro.core.plancache`): ``False`` bypasses
+        it, ``True`` opts an in-memory trace into content-hashed caching;
+        the default caches streaming/scan sources only.
+        """
+        cache_flag = kwargs.pop("cache", None)
         spec = registry.get_op(op_name)
         if spec is None:
             raise ValueError(f"unknown analysis op {op_name!r}; "
@@ -538,20 +546,31 @@ class TraceQuery:
                 f"{op_name!r} is a multi-trace comparison op; run it on a "
                 f"TraceSet (repro.core.diff.TraceSet) instead of a "
                 f"single-trace query")
+        from . import plancache
+        key = plancache.plan_key(self._source, self._steps, spec, args,
+                                 kwargs, cache_flag)
+        if key is not None:
+            hit, value = plancache.lookup(key)
+            if hit:
+                return value
         if isinstance(self._source, _StreamSource):
             # out-of-core execution: fused masks run per chunk and the op's
             # combinable partial aggregates merge across chunks.  Ops
             # without a streaming form raise StreamingUnsupported with the
             # escape hatches spelled out.
             from .streaming import execute_streaming
-            return execute_streaming(self._source.handle, self._steps,
-                                     spec, args, kwargs)
-        trace = self.collect()
-        if spec.needs_structure:
-            trace._ensure_structure()
-        if spec.needs_messages:
-            trace._ensure_messages()
-        return spec.fn(trace, *args, **kwargs)
+            result = execute_streaming(self._source.handle, self._steps,
+                                       spec, args, kwargs)
+        else:
+            trace = self.collect()
+            if spec.needs_structure:
+                trace._ensure_structure()
+            if spec.needs_messages:
+                trace._ensure_messages()
+            result = spec.fn(trace, *args, **kwargs)
+        if key is not None:
+            plancache.store(key, result)
+        return result
 
     def __getattr__(self, name: str):
         return registry.terminal_op(name, self.run, "TraceQuery")

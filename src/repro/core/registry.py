@@ -40,9 +40,10 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
 __all__ = [
     "OpSpec", "register_op", "register_streaming", "get_op", "list_ops",
     "terminal_op",
-    "ReaderSpec", "register_reader", "register_chunked", "get_reader",
-    "list_readers",
+    "ReaderSpec", "register_reader", "register_chunked", "register_units",
+    "get_reader", "list_readers",
     "resolve_reader", "sniff_format", "rank_shard_procs", "PlanHints",
+    "ByteSpan", "ProcSpan", "even_edges", "even_groups",
 ]
 
 
@@ -77,6 +78,56 @@ class PlanHints:
 
 
 # ---------------------------------------------------------------------------
+# parallel work units
+# ---------------------------------------------------------------------------
+
+def even_edges(lo: int, hi: int, n: int) -> List[int]:
+    """n+1 monotone edges splitting [lo, hi) into ~equal integer spans —
+    the one place the byte-range partition arithmetic lives (unit planners
+    must not drift apart on span ownership)."""
+    return [lo + (hi - lo) * i // n for i in range(n + 1)]
+
+
+def even_groups(seq: Sequence, n: int) -> List[Tuple]:
+    """Split ``seq`` into up to ``n`` contiguous non-empty tuples of ~equal
+    length, preserving order — the shared group-partition arithmetic of the
+    ProcSpan unit planners."""
+    seq = list(seq)
+    out = []
+    for k in range(n):
+        part = tuple(seq[len(seq) * k // n: len(seq) * (k + 1) // n])
+        if part:
+            out.append(part)
+    return out
+
+
+@dataclass(frozen=True)
+class ByteSpan:
+    """One byte range of a line/record-oriented trace file — a parallel work
+    unit whose reader starts at the first record boundary at or after ``lo``
+    and stops at the first boundary at or after ``hi``.  Spans planned over
+    one file partition its records exactly: every record belongs to the span
+    containing its first byte."""
+
+    path: str
+    lo: int
+    hi: int
+
+
+@dataclass(frozen=True)
+class ProcSpan:
+    """One process-subset work unit of a trace file: the rows of ``procs``
+    only.  The executor *enforces* the subset with an explicit per-chunk
+    mask (reader hints stay advisory) — spans over disjoint process sets
+    therefore partition the rows exactly.  ``extra`` carries reader-specific
+    keyword items (e.g. a pre-passed pid table) as a tuple of pairs."""
+
+    path: str
+    procs: Tuple[int, ...]
+    extra: Tuple = ()
+
+
+# ---------------------------------------------------------------------------
 # op registry
 # ---------------------------------------------------------------------------
 
@@ -103,6 +154,11 @@ class OpSpec:
     #: the op has no combinable partial-aggregate form and must run on a
     #: fully materialized trace.
     streaming: Optional[Callable[..., Any]] = None
+    #: True when the streaming aggregator also declares a cross-worker merge
+    #: (``supports_parallel`` + ``merge_from`` on the aggregator class) —
+    #: the parallel executor (:mod:`repro.core.executor`) fans such ops over
+    #: a process pool; others degrade to serial streaming with a warning.
+    parallel_safe: bool = False
 
 
 _OP_REGISTRY: Dict[str, OpSpec] = {}
@@ -137,6 +193,11 @@ def register_streaming(op_name: str) -> Callable:
     reproduce the in-memory op.  Ops without a registered factory raise a
     clear error under out-of-core execution instead of silently
     materializing the whole trace.
+
+    Parallel safety is declared on the aggregator itself: a factory (class)
+    carrying ``supports_parallel = True`` and a ``merge_from(other,
+    code_map)`` method marks the op safe for multi-core execution, and the
+    registry records that in :attr:`OpSpec.parallel_safe`.
     """
 
     def deco(factory: Callable) -> Callable:
@@ -145,7 +206,10 @@ def register_streaming(op_name: str) -> Callable:
             raise ValueError(
                 f"cannot declare streaming form of unregistered op "
                 f"{op_name!r}; register the op first")
-        _OP_REGISTRY[op_name] = replace(spec, streaming=factory)
+        par = bool(getattr(factory, "supports_parallel", False)
+                   and getattr(factory, "merge_from", None) is not None)
+        _OP_REGISTRY[op_name] = replace(spec, streaming=factory,
+                                        parallel_safe=par)
         return factory
 
     return deco
@@ -205,6 +269,13 @@ class ReaderSpec:
     pushdown; applying it is optional (the executor re-masks every chunk).
     Formats without a chunked reader fall back to a whole-file read sliced
     into chunks (correct, but with no memory win).
+
+    ``plan_units(path, n_units)`` optionally splits one file into up to
+    ``n_units`` independent parallel work units (:class:`ByteSpan` byte
+    ranges for line-oriented formats, :class:`ProcSpan` process subsets
+    otherwise) for the multi-core executor (:mod:`repro.core.executor`);
+    returning None (or a single unit) means the file cannot be split and is
+    processed whole.
     """
 
     name: str
@@ -214,6 +285,7 @@ class ReaderSpec:
     shard_procs: Optional[Callable[[str], Optional[Set[int]]]] = None
     priority: int = 0  # higher sniffs first
     iter_chunks: Optional[Callable[..., Iterator[Any]]] = None
+    plan_units: Optional[Callable[[str, int], Optional[List[Any]]]] = None
 
 
 _READER_REGISTRY: Dict[str, ReaderSpec] = {}
@@ -248,6 +320,22 @@ def register_chunked(name: str) -> Callable:
                 f"cannot attach chunked reader to unregistered format "
                 f"{name!r}; register the reader first")
         _READER_REGISTRY[name] = replace(spec, iter_chunks=fn)
+        return fn
+
+    return deco
+
+
+def register_units(name: str) -> Callable:
+    """Decorator attaching a parallel unit planner (``plan_units(path,
+    n_units)``) to the already-registered format ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        spec = _READER_REGISTRY.get(name)
+        if spec is None:
+            raise ValueError(
+                f"cannot attach unit planner to unregistered format "
+                f"{name!r}; register the reader first")
+        _READER_REGISTRY[name] = replace(spec, plan_units=fn)
         return fn
 
     return deco

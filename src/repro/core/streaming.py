@@ -45,7 +45,8 @@ from .frame import Categorical, EventFrame, concat
 
 __all__ = ["StreamingTrace", "StreamingUnsupported", "StreamAgg",
            "CallBlock", "Chunk", "StreamStats", "StreamContext",
-           "execute_streaming", "iter_chunks_fallback", "grow_to"]
+           "execute_streaming", "iter_chunks_fallback", "grow_to",
+           "fold_frames", "mask_frames", "stats_from_frames"]
 
 DEFAULT_CHUNK_ROWS = 1_000_000
 
@@ -73,14 +74,19 @@ class GlobalNames:
         """Global int64 code per row of ``cat``."""
         local = np.empty(len(cat.categories), np.int64)
         for i, c in enumerate(cat.categories):
-            s = str(c)
-            g = self._code.get(s)
-            if g is None:
-                g = len(self.names)
-                self._code[s] = g
-                self.names.append(s)
-            local[i] = g
+            local[i] = self.intern(str(c))
         return local[cat.codes]
+
+    def intern(self, name: str) -> int:
+        """Code of ``name``, assigning the next one on first sight — the
+        parallel executor merges worker name spaces through this, in unit
+        order, reproducing the serial first-seen code assignment."""
+        g = self._code.get(name)
+        if g is None:
+            g = len(self.names)
+            self._code[name] = g
+            self.names.append(name)
+        return g
 
     def code(self, name: str) -> int:
         """Global code of ``name``, or -1 when never seen."""
@@ -164,6 +170,18 @@ class StreamStats:
     def num_processes(self) -> int:
         return self.proc_max + 1
 
+    def merge(self, other: "StreamStats") -> None:
+        """Fold another partial stats pass in — all fields are mins/maxes
+        or integer sums, so merging is exact and order-independent (the
+        parallel stats pre-pass relies on this)."""
+        self.n_events += other.n_events
+        self.ts_min = min(self.ts_min, other.ts_min)
+        self.ts_max = max(self.ts_max, other.ts_max)
+        self.proc_max = max(self.proc_max, other.proc_max)
+        self.size_min = min(self.size_min, other.size_min)
+        self.size_max = max(self.size_max, other.size_max)
+        self.n_sends += other.n_sends
+
 
 class StreamAgg:
     """Base class for streaming aggregators.
@@ -172,10 +190,18 @@ class StreamAgg:
     protocol; the executor guarantees ``begin`` → ``update``\\* → ``result``.
     ``needs_stats`` triggers a dedicated first pass over the masked stream
     (the stream is re-read — CPU doubles, peak memory stays bounded).
+
+    Aggregators whose partial state also merges *across workers* set
+    ``supports_parallel = True`` and implement :meth:`merge_from`; the
+    multi-core executor (:mod:`repro.core.executor`) fans exactly those over
+    a process pool and runs everything else serially (with a warning naming
+    the op).
     """
 
     needs_calls = False   # completed-call records (structure across chunks)
     needs_stats = False   # StreamStats pre-pass
+    #: declared by subclasses whose merge_from makes multi-core fan-out safe
+    supports_parallel = False
 
     def begin(self, stats: Optional[StreamStats]) -> None:
         pass
@@ -185,6 +211,18 @@ class StreamAgg:
 
     def result(self, ctx: "StreamContext") -> Any:
         raise NotImplementedError
+
+    def merge_from(self, other: "StreamAgg", code_map: np.ndarray) -> None:
+        """Fold a worker aggregator's partial state into this one.
+
+        ``other`` is the same aggregator class updated over one work unit;
+        ``code_map[c]`` is the merged global name code for the worker's
+        local code ``c`` (len == the worker's name-table size).  Only called
+        when ``supports_parallel`` is True.
+        """
+        raise StreamingUnsupported(
+            f"{type(self).__name__} declares no cross-worker merge; the op "
+            f"cannot run under the parallel executor")
 
 
 class StreamContext:
@@ -242,11 +280,24 @@ class CallStitcher:
     Requires each (process, thread) sub-stream to arrive in non-decreasing
     time order (trace files written per-rank or in canonical (process,
     time) order satisfy this); violations raise StreamingUnsupported.
+
+    ``defer_unmatched=True`` is the parallel-worker mode: events this
+    stream prefix cannot resolve (a Leave whose Enter lives in an earlier
+    work unit, and chunk-top call time that belongs to a call opened
+    upstream) are *recorded as seam events* instead of being dropped, and
+    the parent executor replays them against the carry stacks of the
+    preceding units — the cross-seam half of stitch-safe partitioning.
     """
 
-    def __init__(self):
+    def __init__(self, defer_unmatched: bool = False):
         self._stacks: Dict[int, List[_Frame]] = {}
         self._last_ts: Dict[int, float] = {}
+        self._first_ts: Dict[int, float] = {}
+        self._defer = defer_unmatched
+        # per group, in event order: ("a", inc) = attribute inc to the
+        # innermost call open upstream; ("l", ts, proc) = a Leave closing
+        # the innermost call open upstream
+        self._seams: Dict[int, List[tuple]] = {}
 
     # -- public ------------------------------------------------------------
     def push_chunk(self, ev: EventFrame, gcodes: np.ndarray) -> CallBlock:
@@ -312,6 +363,22 @@ class CallStitcher:
         return (np.asarray([f.name for f in frames], np.int64),
                 np.asarray([f.proc for f in frames], np.int64))
 
+    # -- parallel-worker exports -------------------------------------------
+    def seams(self) -> Dict[int, List[tuple]]:
+        """Per-group seam events deferred to upstream units (worker mode)."""
+        return self._seams
+
+    def trailing(self) -> Dict[int, List[Tuple[int, int, float, float]]]:
+        """Per-group open frames at end of this unit, innermost last:
+        (name code, proc, start ts, accumulated child inclusive ns)."""
+        return {g: [(f.name, f.proc, f.start, f.child_inc) for f in st]
+                for g, st in self._stacks.items() if st}
+
+    def group_span(self) -> Tuple[Dict[int, float], Dict[int, float]]:
+        """Per-group (first, last) event timestamps seen — the parent
+        executor checks cross-unit time order with these."""
+        return dict(self._first_ts), dict(self._last_ts)
+
     # -- internals -----------------------------------------------------------
     def _check_sorted(self, gkey: np.ndarray, ts: np.ndarray) -> None:
         order = np.lexsort((np.arange(len(gkey)), gkey))
@@ -327,6 +394,8 @@ class CallStitcher:
         firsts = np.nonzero(np.concatenate([[True], ~same]))[0]
         for i in firsts:
             g = int(g_s[i])
+            if g not in self._first_ts:
+                self._first_ts[g] = float(t_s[i])
             last = self._last_ts.get(g)
             if last is not None and t_s[i] < last:
                 raise StreamingUnsupported(
@@ -373,8 +442,14 @@ class CallStitcher:
                 np.add.at(counts, bucket, 1)
 
             def attribute(k):
-                if counts[k] and stack:
-                    stack[-1].child_inc += float(sums[k])
+                if counts[k]:
+                    if stack:
+                        stack[-1].child_inc += float(sums[k])
+                    elif self._defer:
+                        # belongs to whatever call is open in an earlier
+                        # work unit — replayed by the parent at the seam
+                        self._seams.setdefault(g, []).append(
+                            ("a", float(sums[k])))
 
             attribute(0)
             for k, r in enumerate(b_rows):
@@ -391,6 +466,15 @@ class CallStitcher:
                                           float(ts[r]), c_inc, c_exc))
                         if stack:
                             stack[-1].child_inc += c_inc
+                        elif self._defer:
+                            # the completed call's parent is open upstream
+                            self._seams.setdefault(g, []).append(
+                                ("a", c_inc))
+                    elif self._defer:
+                        # Leave whose Enter lives in an earlier unit: the
+                        # parent pops the matching upstream carry frame
+                        self._seams.setdefault(g, []).append(
+                            ("l", float(ts[r]), int(procs[r])))
                     # else: leave with no open call anywhere upstream — the
                     # in-memory matcher leaves it unmatched too; ignore
                 attribute(k + 1)
@@ -455,17 +539,16 @@ def _steps_hints(steps: Sequence, base_procs=None,
                               time_window=window)
 
 
-def _masked_chunks(handle: "StreamingTrace", steps: Sequence
-                   ) -> Iterator[EventFrame]:
-    """The fused-mask-per-chunk pipeline: every chunk the reader yields is
+def mask_frames(frames: Iterator[EventFrame], steps: Sequence,
+                label: Optional[str] = None) -> Iterator[EventFrame]:
+    """The fused-mask-per-chunk pipeline: every frame the source yields is
     masked once with the AND of all step masks (mask fusion, per chunk)."""
     from .trace import Trace
-    hints = _steps_hints(steps)
-    for frame in handle._iter_frames(hints):
+    for frame in frames:
         if not steps:
             yield frame
             continue
-        t = Trace(frame, label=handle.label)
+        t = Trace(frame, label=label)
         mask = None
         for step in steps:
             m = step.mask(t)
@@ -473,10 +556,18 @@ def _masked_chunks(handle: "StreamingTrace", steps: Sequence
         yield frame.mask(mask)
 
 
-def _stats_pass(handle: "StreamingTrace", steps: Sequence) -> StreamStats:
+def _masked_chunks(handle: "StreamingTrace", steps: Sequence
+                   ) -> Iterator[EventFrame]:
+    hints = _steps_hints(steps)
+    yield from mask_frames(handle._iter_frames(hints), steps, handle.label)
+
+
+def stats_from_frames(frames: Iterator[EventFrame]) -> StreamStats:
+    """One StreamStats pass over already-masked frames (exactly mergeable
+    across partitions of the stream — see :meth:`StreamStats.merge`)."""
     from .constants import MPI_SEND, MSG_SIZE
     st = StreamStats()
-    for frame in _masked_chunks(handle, steps):
+    for frame in frames:
         n = len(frame)
         if n == 0:
             continue
@@ -497,10 +588,39 @@ def _stats_pass(handle: "StreamingTrace", steps: Sequence) -> StreamStats:
     return st
 
 
+def _stats_pass(handle: "StreamingTrace", steps: Sequence) -> StreamStats:
+    return stats_from_frames(_masked_chunks(handle, steps))
+
+
+def fold_frames(frames: Iterator[EventFrame], agg: StreamAgg,
+                names: GlobalNames,
+                stitcher: Optional[CallStitcher]) -> int:
+    """Feed masked frames through the name interner / call stitcher into
+    ``agg`` — the inner loop shared by the serial executor and every
+    parallel worker.  Returns the max process id seen (or -1)."""
+    proc_max = -1
+    for frame in frames:
+        if len(frame) == 0:
+            continue
+        gcodes = names.encode(frame.cat(NAME))
+        calls = stitcher.push_chunk(frame, gcodes) if stitcher else None
+        proc_max = max(proc_max, int(np.asarray(frame[PROC], np.int64).max()))
+        agg.update(Chunk(frame, gcodes, calls, names))
+    return proc_max
+
+
 def execute_streaming(handle: "StreamingTrace", steps: Sequence,
                       spec: registry.OpSpec, args: tuple,
                       kwargs: dict) -> Any:
-    """Run one registered op out of core over ``handle`` under ``steps``."""
+    """Run one registered op out of core over ``handle`` under ``steps``.
+
+    When the handle asks for parallel execution (``executor="parallel"`` /
+    ``processes=N``) and the op's aggregator declares a cross-worker merge,
+    the plan fans out over work units through
+    :func:`repro.core.executor.execute_parallel`; degradations back to the
+    serial path always warn with the concrete reason (non-mergeable op,
+    spawn-unsafe ``__main__``, nothing to fan out, unsplittable input).
+    """
     if spec.streaming is None:
         raise StreamingUnsupported(
             f"op {spec.name!r} has no combinable streaming form (it needs "
@@ -509,6 +629,16 @@ def execute_streaming(handle: "StreamingTrace", steps: Sequence,
             f"with streaming=False.")
     _validate_steps(steps)
     agg: StreamAgg = spec.streaming(*args, **kwargs)
+    if handle.wants_parallel():
+        from . import executor
+        try:
+            return executor.execute_parallel(handle, steps, spec, args,
+                                             kwargs, agg)
+        except executor.ParallelDegraded as d:
+            import warnings
+            warnings.warn(
+                f"parallel streaming of op {spec.name!r} degraded to "
+                f"serial: {d}", RuntimeWarning, stacklevel=3)
     stats = None
     if agg.needs_stats:
         # the handle caches its own no-extra-steps stats; reuse instead of
@@ -520,14 +650,8 @@ def execute_streaming(handle: "StreamingTrace", steps: Sequence,
     agg.begin(stats)
     names = GlobalNames()
     stitcher = CallStitcher() if agg.needs_calls else None
-    proc_max = -1
-    for frame in _masked_chunks(handle, steps):
-        if len(frame) == 0:
-            continue
-        gcodes = names.encode(frame.cat(NAME))
-        calls = stitcher.push_chunk(frame, gcodes) if stitcher else None
-        proc_max = max(proc_max, int(np.asarray(frame[PROC], np.int64).max()))
-        agg.update(Chunk(frame, gcodes, calls, names))
+    proc_max = fold_frames(_masked_chunks(handle, steps), agg, names,
+                           stitcher)
     open_calls = (stitcher.open_calls() if stitcher
                   else (np.empty(0, np.int64), np.empty(0, np.int64)))
     ctx = StreamContext(names, stats, open_calls, proc_max)
@@ -560,21 +684,44 @@ class StreamingTrace:
     a :class:`~repro.core.diff.TraceSet` works too — comparison ops stream
     each member.  ``materialize()`` is the escape hatch back to a fully
     loaded :class:`~repro.core.trace.Trace`.
+
+    ``processes=N`` (or ``executor="parallel"``) fans terminal ops over a
+    multi-core work-unit pool (:mod:`repro.core.executor`); ``cache=False``
+    opts this handle out of the plan-result cache
+    (:mod:`repro.core.plancache`).
     """
 
     def __init__(self, paths, format: str = "auto",
                  chunk_rows: int = DEFAULT_CHUNK_ROWS,
-                 label: Optional[str] = None, **reader_kwargs):
+                 label: Optional[str] = None,
+                 processes: Optional[int] = None, executor: str = "auto",
+                 cache: bool = True, **reader_kwargs):
         if isinstance(paths, (str, bytes)) or hasattr(paths, "__fspath__"):
             paths = [paths]
         import os
+        if executor not in ("auto", "serial", "parallel"):
+            raise ValueError(f'executor must be "auto", "serial" or '
+                             f'"parallel", got {executor!r}')
         self.paths = [os.fspath(p) for p in paths]
         self.format = format
         self.chunk_rows = int(chunk_rows)
         self.label = label or (self.paths[0] if self.paths else "stream")
+        self.processes = processes
+        self.executor = executor
+        self.cache = cache
         self.reader_kwargs = reader_kwargs
         self._steps: tuple = ()
         self._stats0: Optional[StreamStats] = None  # no-selection stats
+        self._pool = None  # SharedPool, possibly shared across a TraceSet
+        self._units_cache: dict = {}  # work-unit plans per (paths, workers)
+
+    def wants_parallel(self) -> bool:
+        """True when terminal ops should try the multi-core executor."""
+        if self.executor == "serial":
+            return False
+        if self.executor == "parallel":
+            return True
+        return self.processes is not None and self.processes > 1
 
     # -- plumbing ----------------------------------------------------------
     def _iter_frames(self, hints: Optional[registry.PlanHints] = None
@@ -604,11 +751,17 @@ class StreamingTrace:
 
     def with_steps(self, steps: Sequence) -> "StreamingTrace":
         """Shallow copy carrying plan ``steps`` — how a shared TraceSet
-        plan binds its selection to each streaming member."""
+        plan binds its selection to each streaming member.  The clone
+        shares this handle's worker pool (if any), so set-wide work keeps
+        fanning into one pool."""
         clone = StreamingTrace(self.paths, format=self.format,
                                chunk_rows=self.chunk_rows, label=self.label,
+                               processes=self.processes,
+                               executor=self.executor, cache=self.cache,
                                **self.reader_kwargs)
         clone._steps = tuple(steps)
+        clone._pool = self._pool
+        clone._units_cache = self._units_cache  # same paths, same plans
         return clone
 
     # -- materialization escape hatch --------------------------------------
@@ -632,8 +785,17 @@ class StreamingTrace:
     # -- cheap whole-stream facts ------------------------------------------
     def stats(self) -> StreamStats:
         """One pass over the (selection-masked) stream: event count, time
-        span, process count, message-size range.  Cached."""
+        span, process count, message-size range.  Cached.  Fans over the
+        worker pool when this handle runs parallel (StreamStats partials
+        merge exactly)."""
         if self._stats0 is None:
+            if self.wants_parallel():
+                from . import executor
+                try:
+                    self._stats0 = executor.parallel_stats(self, self._steps)
+                    return self._stats0
+                except executor.ParallelDegraded:
+                    pass  # stats have no mode choice to warn about
             self._stats0 = _stats_pass(self, self._steps)
         return self._stats0
 

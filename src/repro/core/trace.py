@@ -80,13 +80,16 @@ class Trace:
 
     @classmethod
     def open(cls, path, format: str = "auto", streaming: bool = False,
-             chunk_rows: Optional[int] = None, **kw):
+             chunk_rows: Optional[int] = None,
+             processes: Optional[int] = None, executor: str = "auto",
+             cache: bool = True, **kw):
         """Open a trace of any registered format.
 
         ``format="auto"`` sniffs the on-disk content (CSV header, JSONL event
         keys, Chrome ``traceEvents`` envelope, OTF2-structured archives —
         file or directory — and HLO text).  A list of paths is read as
-        per-location shards through the parallel driver.
+        per-location shards through the parallel driver (``processes=N``
+        then fans the shard ingest over a pool).
 
         ``streaming=True`` returns a
         :class:`~repro.core.streaming.StreamingTrace` instead: an
@@ -94,7 +97,11 @@ class Trace:
         analysis ops with a combinable streaming form execute chunk by
         chunk (at most ``chunk_rows`` events in memory per chunk), with the
         plan's predicate/process/time-window restriction pushed into the
-        chunked readers.  See docs/streaming.md.
+        chunked readers.  ``processes=N`` / ``executor="parallel"`` fan
+        those ops over multi-core work units (stitch-safe partitioning,
+        byte-identical merges — see docs/streaming.md), and ``cache=False``
+        opts the handle out of the plan-result cache
+        (:mod:`repro.core.plancache`).
         """
         import os
         from .. import readers  # noqa: F401 — populates the reader registry
@@ -103,13 +110,25 @@ class Trace:
             from .streaming import DEFAULT_CHUNK_ROWS, StreamingTrace
             return StreamingTrace(path, format=format,
                                   chunk_rows=chunk_rows or DEFAULT_CHUNK_ROWS,
-                                  **kw)
+                                  processes=processes, executor=executor,
+                                  cache=cache, **kw)
         if chunk_rows is not None:
             raise ValueError("chunk_rows only applies with streaming=True")
+        if executor != "auto":
+            raise ValueError("executor only applies with streaming=True")
+        if cache is not True:
+            # eager opens have no handle to opt out; per-call cache= on the
+            # query terminal is the in-memory control
+            raise ValueError("cache only applies with streaming=True; "
+                             "in-memory caching is opt-in per call "
+                             "(query terminal cache=True)")
         if isinstance(path, (list, tuple)):
             from ..readers.parallel import read_parallel
             return read_parallel([os.fspath(p) for p in path], kind=format,
-                                 **kw)
+                                 processes=processes, **kw)
+        if processes is not None:
+            raise ValueError("processes needs streaming=True or a list of "
+                             "shard paths")
         path = os.fspath(path)
         return resolve_reader(path, format).read(path, **kw)
 

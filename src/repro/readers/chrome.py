@@ -18,7 +18,9 @@ import numpy as np
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
                               MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
-from ..core.registry import PlanHints, register_chunked, register_reader
+from ..core.registry import (PlanHints, ProcSpan, even_groups,
+                             register_chunked, register_reader,
+                             register_units)
 from ..core.trace import Trace
 
 _ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
@@ -230,7 +232,9 @@ def _decode_batch(batch: List[dict], hints: Optional[PlanHints],
 @register_chunked("chrome")
 def iter_chunks_chrome(path: str, chunk_rows: int,
                        hints: Optional[PlanHints] = None,
-                       label: Optional[str] = None) -> Iterator[EventFrame]:
+                       label: Optional[str] = None,
+                       known_pids: Optional[tuple] = None
+                       ) -> Iterator[EventFrame]:
     """Stream a Chrome trace in bounded chunks via incremental JSON array
     decoding (an ``X`` event expands to two rows, so chunks may slightly
     exceed ``chunk_rows``).
@@ -238,10 +242,16 @@ def iter_chunks_chrome(path: str, chunk_rows: int,
     A cheap pre-pass collects the pid set so pids densify to exactly the
     sorted 0..N-1 mapping the whole-file reader uses — Process ids (and
     therefore pushdown and per-process results) are identical either way,
-    at the cost of decoding the stream twice; memory stays bounded."""
-    pids = set()
-    for obj in _iter_array_items(path):
-        pids.add(obj.get("pid", 0))
+    at the cost of decoding the stream twice; memory stays bounded.
+    ``known_pids`` (the sorted raw pid tuple) skips that pre-pass — the
+    parallel unit planner runs it once and shares the table with every
+    worker."""
+    if known_pids is not None:
+        pids = set(known_pids)
+    else:
+        pids = set()
+        for obj in _iter_array_items(path):
+            pids.add(obj.get("pid", 0))
     pid_of = {p: i for i, p in enumerate(sorted(pids))}
     batch: List[dict] = []
     for obj in _iter_array_items(path):
@@ -255,6 +265,25 @@ def iter_chunks_chrome(path: str, chunk_rows: int,
         ev = _decode_batch(batch, hints, pid_of)
         if ev is not None:
             yield ev
+
+
+@register_units("chrome")
+def plan_units_chrome(path: str, n_units: int):
+    """Per-pid work units: one pid pre-pass (paid once, in the planner)
+    yields the dense process table; units are contiguous groups of dense
+    process ids, each carrying the shared pid table so workers skip their
+    own pre-pass.  Workers still each decode the JSON stream — the win is
+    in row assembly and aggregation, not the decode."""
+    pids = set()
+    for obj in _iter_array_items(path):
+        pids.add(obj.get("pid", 0))
+    raw = tuple(sorted(pids))
+    n = max(min(int(n_units), len(raw)), 1)
+    if n <= 1:
+        return None
+    extra = (("known_pids", raw),)
+    return [ProcSpan(path, procs, extra)
+            for procs in even_groups(range(len(raw)), n)]
 
 
 def write_chrome(trace_or_events, path: str) -> None:

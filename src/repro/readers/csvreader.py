@@ -14,8 +14,9 @@ import numpy as np
 
 from ..core.constants import ET, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
-from ..core.registry import (PlanHints, rank_shard_procs, register_chunked,
-                             register_reader)
+from ..core.registry import (ByteSpan, PlanHints, even_edges,
+                             rank_shard_procs, register_chunked,
+                             register_reader, register_units)
 from ..core.trace import Trace
 
 _UNIT = {"(s)": 1e9, "(ms)": 1e6, "(us)": 1e3, "(ns)": 1.0}
@@ -90,10 +91,12 @@ def _rows_to_frame(headers: List[str], scales: List[float],
                 if want == "num":
                     from ..core.streaming import StreamingUnsupported
                     raise StreamingUnsupported(
-                        f"CSV column {h!r} parsed as numeric in an earlier "
-                        f"chunk but holds non-numeric values later; the "
-                        f"whole-file read types columns over all rows — "
-                        f"open with streaming=False") from None
+                        f"CSV column {h!r} was typed numeric (by an "
+                        f"earlier chunk's values, or by its canonical "
+                        f"name under a parallel byte-range read) but "
+                        f"holds non-numeric values; the whole-file read "
+                        f"types columns over all rows — open with "
+                        f"streaming=False") from None
                 arr = None
         if arr is None:
             arr = Categorical.from_values(
@@ -158,59 +161,132 @@ def read_csv(path_or_buf, label: Optional[str] = None) -> Trace:
 @register_chunked("csv")
 def iter_chunks_csv(path: str, chunk_rows: int,
                     hints: Optional[PlanHints] = None,
-                    label: Optional[str] = None) -> Iterator[EventFrame]:
+                    label: Optional[str] = None,
+                    byte_range: Optional[tuple] = None
+                    ) -> Iterator[EventFrame]:
     """Stream a CSV trace in bounded chunks, with process/time pushdown
-    applied per row before the columns are built."""
+    applied per row before the columns are built.  ``byte_range=(lo, hi)``
+    restricts the read to data lines starting inside the span (parallel
+    work units); the header is always parsed.  Caveat: extra-column
+    num/cat type decisions are then made per span — ambiguous columns that
+    the whole-file read types over all rows should use serial streaming."""
+    if byte_range is not None:
+        from .jsonl import iter_lines_range
+        # strict decoding, like the serial text-mode open: invalid UTF-8
+        # must fail identically in both modes, not diverge silently.
+        # Decoding per complete line is split-safe — multi-byte characters
+        # never straddle a line boundary.
+        with open(path, "rb") as f:
+            header = f.readline().decode("utf-8")
+            if not header.strip():
+                return
+            headers, scales = _parse_header(header)
+            # a span's rows cannot type columns (value inference over a
+            # slice can disagree with the whole-file read — e.g. a span
+            # whose Name values all look numeric); pin every canonical
+            # column by NAME instead, which is what the unit planner's
+            # canonical-only guard guarantees is possible
+            fixed = [("cat" if h in (ET, NAME) else "num")
+                     for h in headers]
+            lo = max(int(byte_range[0]), f.tell())
+            src = (ln.decode("utf-8")
+                   for ln in iter_lines_range(f, lo, int(byte_range[1])))
+            yield from _iter_csv_lines(src, headers, scales, hints,
+                                       chunk_rows, fixed_decisions=fixed)
+        return
     with open(path) as f:
         header = f.readline()
         if not header.strip():
             return
         headers, scales = _parse_header(header)
-        try:
-            p_i = headers.index(PROC)
-        except ValueError:
-            p_i = None
-        try:
-            t_i = headers.index(TS)
-        except ValueError:
-            t_i = None
-        tw = hints.time_window if hints is not None else None
-        check_proc = (hints is not None and p_i is not None
-                      and (hints.procs is not None
-                           or hints.proc_bounds is not None))
-        decisions = None
-        while True:
-            lines = list(itertools.islice(f, chunk_rows))
-            if not lines:
-                break
-            all_rows, rows = [], []
-            for ln in lines:
-                if not ln.strip():
-                    continue
-                parts = [p.strip() for p in ln.split(",")]
-                all_rows.append(parts)
-                if check_proc and len(parts) > p_i:
-                    try:
-                        if not hints.admits_proc(int(float(parts[p_i]))):
-                            continue
-                    except ValueError:
-                        pass
-                if tw is not None and t_i is not None and len(parts) > t_i:
-                    try:
-                        t = float(parts[t_i]) * scales[t_i]
-                        if not (tw[0] <= t <= tw[1]):
-                            continue
-                    except ValueError:
-                        pass
-                rows.append(parts)
-            # type decisions must come from the *unfiltered* rows: the
-            # whole-file read types columns over every row, and pushdown
-            # may drop exactly the rows whose values are non-numeric
-            if all_rows:
-                decisions = _infer_decisions(headers, all_rows, decisions)
-            if rows:
-                ev, _ = _rows_to_frame(headers, scales, rows, decisions)
-                yield optimize_dtypes(ev)
+        yield from _iter_csv_lines(f, headers, scales, hints, chunk_rows)
+
+
+def _iter_csv_lines(f, headers, scales, hints, chunk_rows,
+                    fixed_decisions: Optional[List[str]] = None
+                    ) -> Iterator[EventFrame]:
+    try:
+        p_i = headers.index(PROC)
+    except ValueError:
+        p_i = None
+    try:
+        t_i = headers.index(TS)
+    except ValueError:
+        t_i = None
+    tw = hints.time_window if hints is not None else None
+    check_proc = (hints is not None and p_i is not None
+                  and (hints.procs is not None
+                       or hints.proc_bounds is not None))
+    decisions = None
+    while True:
+        lines = list(itertools.islice(f, chunk_rows))
+        if not lines:
+            break
+        all_rows, rows = [], []
+        for ln in lines:
+            if not ln.strip():
+                continue
+            parts = [p.strip() for p in ln.split(",")]
+            all_rows.append(parts)
+            if check_proc and len(parts) > p_i:
+                try:
+                    if not hints.admits_proc(int(float(parts[p_i]))):
+                        continue
+                except ValueError:
+                    pass
+            if tw is not None and t_i is not None and len(parts) > t_i:
+                try:
+                    t = float(parts[t_i]) * scales[t_i]
+                    if not (tw[0] <= t <= tw[1]):
+                        continue
+                except ValueError:
+                    pass
+            rows.append(parts)
+        # type decisions must come from the *unfiltered* rows: the
+        # whole-file read types columns over every row, and pushdown
+        # may drop exactly the rows whose values are non-numeric.  A
+        # byte-range read pins them by column name instead (see above).
+        if fixed_decisions is not None:
+            decisions = fixed_decisions
+        elif all_rows:
+            decisions = _infer_decisions(headers, all_rows, decisions)
+        if rows:
+            ev, _ = _rows_to_frame(headers, scales, rows, decisions)
+            yield optimize_dtypes(ev)
+
+
+_CANONICAL = (TS, ET, NAME, PROC, THREAD, MSG_SIZE, PARTNER, TAG)
+
+
+@register_units("csv")
+def plan_units_csv(path: str, n_units: int):
+    """Split the data region (past the header line) into ~equal byte
+    spans; the chunked reader aligns spans to line boundaries.
+
+    Only files whose header holds canonical columns are split: canonical
+    columns are typed by *name*, so byte-range workers agree with the
+    whole-file read by construction.  Extra columns are typed by value
+    inference over rows — per-span inference could silently diverge from
+    serial streaming, so such files stay one (serial-semantics) unit.
+
+    Canonical columns holding non-canonical *content* (every Name numeric,
+    a letter in Process, ...) are malformed traces: one mode fails loudly
+    where the other succeeds, but results never diverge silently.
+    """
+    import os
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        header = f.readline().decode("utf-8", errors="replace")
+        start = f.tell()
+    headers, _scales = _parse_header(header)
+    if any(h not in _CANONICAL for h in headers):
+        return None
+    n = max(min(int(n_units), size - start), 1)
+    if n <= 1 or start >= size:
+        return None
+    edges = even_edges(start, size, n)
+    return [ByteSpan(path, lo, hi)
+            for lo, hi in zip(edges[:-1], edges[1:]) if hi > lo]
 
 
 def write_csv(trace_or_events, path: str) -> None:

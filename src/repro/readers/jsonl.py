@@ -23,8 +23,9 @@ import numpy as np
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MSG_SIZE, NAME,
                               PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
-from ..core.registry import (PlanHints, rank_shard_procs, register_chunked,
-                             register_reader)
+from ..core.registry import (ByteSpan, PlanHints, even_edges,
+                             rank_shard_procs, register_chunked,
+                             register_reader, register_units)
 from ..core.trace import Trace
 
 _ET_CODE = {ENTER: 0, LEAVE: 1, INSTANT: 2}
@@ -160,13 +161,49 @@ def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
     return Trace(optimize_dtypes(ev), label=label)
 
 
+def iter_lines_range(f, lo: int, hi: int) -> Iterator[bytes]:
+    """Lines of the binary stream ``f`` whose first byte lies in [lo, hi) —
+    the record-ownership rule :class:`~repro.core.registry.ByteSpan` work
+    units rely on.  Split offsets may land anywhere; every line belongs to
+    exactly one span."""
+    if lo > 0:
+        f.seek(lo - 1)
+        if f.read(1) != b"\n":
+            f.readline()  # skip the tail of the line owned by the span below
+    else:
+        f.seek(0)
+    while True:
+        start = f.tell()
+        if start >= hi:
+            return
+        line = f.readline()
+        if not line:
+            return
+        yield line
+
+
 @register_chunked("jsonl")
 def iter_chunks_jsonl(path: str, chunk_rows: int,
                       hints: Optional[PlanHints] = None,
-                      label: Optional[str] = None) -> Iterator[EventFrame]:
+                      label: Optional[str] = None,
+                      byte_range: Optional[tuple] = None
+                      ) -> Iterator[EventFrame]:
     """Stream ``path`` in EventFrame chunks of at most ``chunk_rows`` events
-    without ever holding the file, applying pushdown while parsing."""
+    without ever holding the file, applying pushdown while parsing.
+    ``byte_range=(lo, hi)`` restricts the read to the lines starting inside
+    that span (parallel work units)."""
     parser = _JsonlParser()
+    if byte_range is not None:
+        with open(path, "rb") as f:
+            src = iter_lines_range(f, int(byte_range[0]), int(byte_range[1]))
+            while True:
+                lines = list(itertools.islice(src, chunk_rows))
+                if not lines:
+                    break
+                ev = parser.parse(lines, hints)
+                if ev is not None:
+                    yield optimize_dtypes(ev)
+        return
     with open(path) as f:
         while True:
             lines = list(itertools.islice(f, chunk_rows))
@@ -175,6 +212,21 @@ def iter_chunks_jsonl(path: str, chunk_rows: int,
             ev = parser.parse(lines, hints)
             if ev is not None:
                 yield optimize_dtypes(ev)
+
+
+@register_units("jsonl")
+def plan_units_jsonl(path: str, n_units: int):
+    """Split one JSONL file into ~equal byte spans; the chunked reader
+    aligns each span to line boundaries, so the spans partition the events
+    exactly."""
+    import os
+    size = os.path.getsize(path)
+    n = max(min(int(n_units), size), 1)
+    if n <= 1:
+        return None
+    edges = even_edges(0, size, n)
+    return [ByteSpan(path, lo, hi)
+            for lo, hi in zip(edges[:-1], edges[1:]) if hi > lo]
 
 
 def write_jsonl(trace_or_events, path: str) -> None:

@@ -29,7 +29,9 @@ import numpy as np
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
                               MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
-from ..core.registry import PlanHints, register_chunked, register_reader
+from ..core.registry import (PlanHints, ProcSpan, even_groups,
+                             register_chunked, register_reader,
+                             register_units)
 from ..core.trace import Trace
 
 _ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
@@ -217,6 +219,27 @@ def iter_chunks_otf2j(path: str, chunk_rows: int,
             sub = ev.take(np.arange(lo, min(lo + chunk_rows, len(ev))))
             if len(sub):
                 yield sub
+
+
+@register_units("otf2j")
+def plan_units_otf2j(path: str, n_units: int):
+    """Per-rank work units for the directory layout: the anchor's location
+    table (cheap to read) maps ranks to per-location stream files, so
+    disjoint rank groups parallelize with file-level pushdown.  Single-file
+    archives decode the whole document per reader call and are not split.
+    """
+    if not os.path.isdir(path):
+        return None
+    try:
+        with open(os.path.join(path, "definitions.json")) as f:
+            defs = json.load(f)
+    except (OSError, ValueError):
+        return None
+    ranks = sorted({int(loc["group"]) for loc in defs.get("locations", [])})
+    n = max(min(int(n_units), len(ranks)), 1)
+    if n <= 1:
+        return None
+    return [ProcSpan(path, procs) for procs in even_groups(ranks, n)]
 
 
 def write_otf2_json(trace_or_events, path: str, split_locations: bool = False) -> None:

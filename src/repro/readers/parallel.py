@@ -15,7 +15,6 @@ before parsing* — predicate pushdown into the reader.
 
 from __future__ import annotations
 
-import multiprocessing as mp
 import os
 from typing import List, Optional, Sequence, Set, Tuple
 
@@ -25,6 +24,11 @@ from ..core.constants import ENTER, ET, INSTANT, LEAVE, NAME, PROC, TS
 from ..core.frame import Categorical, EventFrame, concat
 from ..core.registry import resolve_reader
 from ..core.trace import Trace
+# spawn-safety rules and pool construction live in repro.parallel_util so
+# every parallel driver (this reader, TraceSet preparation, the plan
+# executor) shares one serial-fallback behavior; spawn_pool_ok is
+# re-exported here because it is this module's historical public home
+from ..parallel_util import map_maybe_parallel, spawn_pool_ok
 
 __all__ = ["read_parallel", "open_many", "select_shards",
            "split_jsonl_by_process", "spawn_pool_ok"]
@@ -35,27 +39,6 @@ def _ensure_registered() -> None:
     # the parent (when only this module was imported) and in spawned pool
     # workers, which start from a fresh interpreter.
     from . import chrome, csvreader, hlo, jsonl, otf2j  # noqa: F401
-
-
-def spawn_pool_ok() -> bool:
-    """True when a ``multiprocessing`` spawn pool can start safely.
-
-    Spawned workers re-import ``__main__`` from its ``__file__``.  When
-    Python runs from stdin, ``-c``, or an interactive session, ``__main__``
-    has no (or a nonexistent) ``__file__`` — the re-import then fails with
-    a confusing FileNotFoundError/ModuleNotFoundError deep inside the pool
-    (e.g. trying to load ``/tmp/<stdin>``).  Callers fall back to serial
-    reading instead of crashing.
-    """
-    import sys
-    main = sys.modules.get("__main__")
-    f = getattr(main, "__file__", None)
-    if f is None:
-        return False
-    try:
-        return os.path.exists(f)
-    except (OSError, ValueError):  # pragma: no cover - exotic paths
-        return False
 
 
 def _read_one(args) -> EventFrame:
@@ -120,11 +103,7 @@ def read_parallel(paths: Sequence[str], kind: str = "auto",
         return Trace(empty, label=label or "parallel[0]")
     processes = processes or min(len(sel), os.cpu_count() or 1)
     args = [(kind, p, reader_kwargs) for p in sel]
-    if processes <= 1 or len(sel) == 1 or not spawn_pool_ok():
-        frames = [_read_one(a) for a in args]
-    else:
-        with mp.get_context("spawn").Pool(processes) as pool:
-            frames = pool.map(_read_one, args)
+    frames, _pooled = map_maybe_parallel(_read_one, args, processes)
     ev = concat(frames).sort_by([PROC, TS])
     return Trace(ev, label=label or f"parallel[{len(sel)}]")
 
@@ -157,11 +136,8 @@ def open_many(paths: Sequence, kind: str = "auto",
              [os.fspath(q) for q in p], reader_kwargs) for p in items]
     if not args:
         return []
-    if (processes is None or processes <= 1 or len(args) == 1
-            or not spawn_pool_ok()):
-        return [_open_one(a) for a in args]
-    with mp.get_context("spawn").Pool(min(processes, len(args))) as pool:
-        return pool.map(_open_one, args)
+    traces, _pooled = map_maybe_parallel(_open_one, args, processes)
+    return traces
 
 
 def split_jsonl_by_process(path: str, out_dir: str) -> List[str]:

@@ -41,8 +41,17 @@ for set-scoped comparison ops), and every reader is resolvable through
 Ops marked *streaming: combinable* also run **out of core** — over a
 `Trace.open(path, streaming=True)` handle they execute chunk by chunk with
 mergeable partial aggregates and never materialize the trace (see
-`docs/streaming.md`).  Ops marked *streaming: —* need the whole trace and
-raise `StreamingUnsupported` with the escape hatches spelled out.
+`docs/streaming.md`).  Ops additionally marked *(parallel)* declare a
+cross-worker merge and fan out over a multi-core work-unit pool under
+`Trace.open(..., streaming=True, processes=N)` / `executor="parallel"`.
+Ops marked *streaming: —* need the whole trace and raise
+`StreamingUnsupported` with the escape hatches spelled out.
+
+Terminal-op results are memoized in the plan-result cache
+(`repro.core.plancache`): streaming/scan executions cache by on-disk
+content identity by default (`cache=False` opts out per call or per
+handle), and in-memory traces opt in per call with `cache=True`
+(content-hashed, so mutation always misses).
 
 Register your own the same way the built-ins do:
 
@@ -95,8 +104,12 @@ def render() -> str:
                 continue
             prereqs = [p for p, on in (("structure", spec.needs_structure),
                                        ("messages", spec.needs_messages)) if on]
-            streaming = ("combinable" if spec.streaming is not None
-                         else "—")
+            if spec.streaming is None:
+                streaming = "—"
+            elif spec.parallel_safe:
+                streaming = "combinable (parallel)"
+            else:
+                streaming = "combinable"
             lines.append(f"### `{name}`\n")
             lines.append(f"```python\n{name}{_sig(spec.fn)}\n```\n")
             lines.append(f"*needs: {', '.join(prereqs) if prereqs else 'nothing'}"
@@ -114,10 +127,12 @@ def render() -> str:
         ext = ", ".join(f"`{e}`" for e in spec.extensions) or "*(none)*"
         sniffer = f"`{spec.sniff.__name__}`" if spec.sniff else "*(extension only)*"
         shard = f"`{spec.shard_procs.__name__}`" if spec.shard_procs else "—"
+        units = (f"`{spec.plan_units.__name__}`" if spec.plan_units
+                 else "—")
         lines.append(f"### `{name}`\n")
         lines.append(f"```python\n{name}.read{_sig(spec.read)}\n```\n")
         lines.append(f"*extensions: {ext} · sniffer: {sniffer} · "
-                     f"shard hint: {shard}*\n")
+                     f"shard hint: {shard} · unit planner: {units}*\n")
         lines.append(_doc(spec.read) + "\n")
 
     return "\n".join(lines)
