@@ -1,0 +1,180 @@
+"""Columnar pack store vs text ingest: cache-miss execution speed and
+identical digests (acceptance benchmark of the pipitpack format).
+
+Generates the 10M-event sharded ``tracegen.big_trace`` as JSONL, converts
+the shards to pack once (:meth:`StreamingTrace.save_pack`, structure
+sidecars included — the "convert once" cost is reported), then runs the
+exactly-combinable op suite (the same seven-op digest as bench_parallel)
+twice in separate subprocesses with the plan-result cache off:
+
+* **jsonl** — serial streaming over the text shards: every op re-decodes
+  645 MB of JSON (the cache-miss cost this PR attacks);
+* **pack** — serial streaming over the pack shards: chunk reads are memmap
+  slices (zero parse) and the structure sidecar replaces the per-chunk
+  ``derive_structure`` lexsort.
+
+Digests must match byte for byte; the target is **>= 5x** end-to-end.  A
+pushdown probe also runs on the pack side: a process-restricted plan must
+*skip* footer chunks (index pushdown) and read strictly fewer than a full
+scan.
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_pack [--events N]
+        [--json PATH]
+
+BENCH_PACK_EVENTS overrides the default (CI smoke uses ~1M events).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_EVENTS = int(os.environ.get("BENCH_PACK_EVENTS", 10_000_000))
+NPROCS = 8
+CHUNK_ROWS = 250_000
+SPEEDUP_TARGET = 5.0
+
+
+def _dir_mb(d: str) -> float:
+    return round(sum(os.path.getsize(os.path.join(d, f))
+                     for f in os.listdir(d)) / 1e6, 1)
+
+
+def run_phase(mode: str, shard_dir: str) -> None:
+    """Child process: one format's digest suite, JSON result on stdout."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from benchmarks.bench_parallel import _digest_ops
+    from repro.core.trace import Trace
+    shards = sorted(os.path.join(shard_dir, f) for f in os.listdir(shard_dir))
+    handle = Trace.open(shards, streaming=True, chunk_rows=CHUNK_ROWS,
+                        cache=False)
+    t0 = time.time()
+    digest = _digest_ops(handle)
+    dt = time.time() - t0
+    out = {"mode": mode, "seconds": round(dt, 2), "digest": digest}
+    if mode == "pack":
+        from repro.core import structure
+        from repro.readers import pack as packmod
+        out["derive_calls"] = structure.DERIVE_CALLS  # sidecar ⇒ stays 0
+        # pushdown probes.  Process restriction: per-rank shards are
+        # skipped whole via the footer shard hint.  Time window: each
+        # shard's chunk index is time-ordered, so a narrow within-window
+        # must skip most chunks *inside* the surviving shards.
+        packmod.reset_io_stats()
+        handle.query().restrict_processes([0]).flat_profile(cache=False)
+        restricted = packmod.io_stats()
+        st = handle.stats()
+        t0w = st.ts_min
+        t1w = st.ts_min + (st.ts_max - st.ts_min) * 0.05
+        packmod.reset_io_stats()
+        handle.query().slice_time(t0w, t1w,
+                                  trim="within").flat_profile(cache=False)
+        window = packmod.io_stats()
+        packmod.reset_io_stats()
+        handle.flat_profile(cache=False)
+        full = packmod.io_stats()
+        out["pushdown"] = {
+            "full_chunks": full["chunks_read"],
+            "restricted_chunks": restricted["chunks_read"],
+            "window_chunks": window["chunks_read"],
+            "window_skipped": window["chunks_skipped"],
+        }
+    print(json.dumps(out))
+
+
+def bench(events: int = DEFAULT_EVENTS) -> dict:
+    from repro.core.trace import Trace
+    from repro.tracegen import big_trace
+    out = {"events": events, "chunk_rows": CHUNK_ROWS, "nprocs": NPROCS,
+           "cpu_count": os.cpu_count()}
+    with tempfile.TemporaryDirectory(prefix="bench_pack_") as d:
+        jdir = os.path.join(d, "jsonl")
+        pdir = os.path.join(d, "pack")
+        os.makedirs(pdir)
+        t0 = time.time()
+        shards = big_trace(jdir, nprocs=NPROCS,
+                           events_per_proc=max(events // NPROCS, 1000))
+        out["gen_seconds"] = round(time.time() - t0, 1)
+        out["jsonl_mb"] = _dir_mb(jdir)
+        # convert once (streaming, sidecar on) — the amortized cost.  The
+        # footer index gets >= ~8 chunks per shard at any scale so the
+        # pushdown probe has real skip granularity to exercise.
+        pack_chunk = max(min(CHUNK_ROWS, events // NPROCS // 8), 1000)
+        out["pack_chunk_rows"] = pack_chunk
+        t0 = time.time()
+        for s in shards:
+            dst = os.path.join(
+                pdir, os.path.basename(s).replace(".jsonl", ".pack"))
+            Trace.open(s, streaming=True, chunk_rows=CHUNK_ROWS,
+                       cache=False).save_pack(dst, chunk_rows=pack_chunk)
+        out["convert_seconds"] = round(time.time() - t0, 1)
+        out["pack_mb"] = _dir_mb(pdir)
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO, "src")
+                   + os.pathsep + os.environ.get("PYTHONPATH", ""))
+        for mode, sdir in (("jsonl", jdir), ("pack", pdir)):
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_pack",
+                 "--phase", mode, "--shards", sdir],
+                capture_output=True, text=True, cwd=REPO, env=env,
+                check=True)
+            out[mode] = json.loads(r.stdout.strip().splitlines()[-1])
+    out["identical"] = out["jsonl"]["digest"] == out["pack"]["digest"]
+    out["speedup"] = round(out["jsonl"]["seconds"]
+                           / max(out["pack"]["seconds"], 1e-9), 2)
+    pd = out["pack"]["pushdown"]
+    out["pushdown_effective"] = (
+        pd["restricted_chunks"] < pd["full_chunks"]
+        and pd["window_skipped"] > 0
+        and pd["window_chunks"] < pd["full_chunks"])
+    out["sidecar_skips_derive"] = out["pack"]["derive_calls"] == 0
+    out["target_met"] = out["speedup"] >= SPEEDUP_TARGET
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", type=int, default=DEFAULT_EVENTS)
+    ap.add_argument("--json", dest="json_path",
+                    help="write the result dict to PATH as JSON")
+    ap.add_argument("--phase", choices=["jsonl", "pack"])
+    ap.add_argument("--shards")
+    args = ap.parse_args(argv)
+    if args.phase:
+        run_phase(args.phase, args.shards)
+        return 0
+    res = bench(args.events)
+    print(json.dumps(res, indent=1))
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(res, f, indent=1)
+    ok = True
+    if not res["identical"]:
+        print("FAIL: pack digests differ from jsonl streaming",
+              file=sys.stderr)
+        ok = False
+    if not res["target_met"]:
+        print(f"FAIL: speedup {res['speedup']}x below "
+              f"{SPEEDUP_TARGET}x target", file=sys.stderr)
+        ok = False
+    if not res["pushdown_effective"]:
+        print("FAIL: restricted plan did not skip pack chunks",
+              file=sys.stderr)
+        ok = False
+    if not res["sidecar_skips_derive"]:
+        print("FAIL: pack streaming still called derive_structure",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

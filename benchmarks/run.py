@@ -10,12 +10,18 @@ module name) as one JSON document — CI uploads it as the perf artifact,
 and repo-root ``BENCH_PR<N>.json`` snapshots are taken the same way.
 
 ``--only NAME`` runs a single section (e.g. ``--only bench_parallel``).
+
+``--events N`` scales every trace-generating section down (or up): each
+``bench()`` whose signature accepts an ``events`` parameter gets it passed
+through.  The full suite at the 10M default takes tens of minutes on a
+small container; ``--events 1000000`` is the CI/local smoke preset.
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import pkgutil
 import sys
@@ -34,6 +40,9 @@ def main(argv=None) -> int:
     ap.add_argument("--json", dest="json_path",
                     help="write all section results to PATH as JSON")
     ap.add_argument("--only", help="run a single section by module name")
+    ap.add_argument("--events", type=int, default=None,
+                    help="event-count scale knob forwarded to every "
+                    "bench() that accepts an events parameter")
     args = ap.parse_args(argv)
 
     t0 = time.time()
@@ -54,7 +63,11 @@ def main(argv=None) -> int:
         mod = importlib.import_module(f"benchmarks.{name}")
         title = (mod.__doc__ or name).strip().splitlines()[0].rstrip(".")
         print(f"\n## [{i}/{total}] {name}: {title}")
-        res = mod.bench()
+        kwargs = {}
+        if args.events is not None and "events" in inspect.signature(
+                mod.bench).parameters:
+            kwargs["events"] = args.events
+        res = mod.bench(**kwargs)
         results[name] = res
         print(json.dumps(res, indent=1, default=str))
 

@@ -162,6 +162,14 @@ def _unit_frames(unit, fmt: str, chunk_rows: int,
                                     byte_range=(unit.lo, unit.hi),
                                     **reader_kwargs)
         return
+    if isinstance(unit, registry.RowSpan):
+        # random-access columnar unit (pack): the reader slices rows
+        # directly, no boundary alignment needed
+        spec = registry.resolve_reader(unit.path, fmt)
+        yield from spec.iter_chunks(unit.path, chunk_rows, hints,
+                                    row_range=(unit.lo, unit.hi),
+                                    **reader_kwargs)
+        return
     if isinstance(unit, registry.ProcSpan):
         spec = registry.resolve_reader(unit.path, fmt)
         pset = frozenset(unit.procs)

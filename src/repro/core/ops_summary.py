@@ -12,7 +12,7 @@ for integer-ns traces — see docs/streaming.md).
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -20,6 +20,29 @@ from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, NAME, PROC, TS)
 from .frame import Categorical, EventFrame
 from .registry import register_op, register_streaming
 from .streaming import StreamAgg, StreamingUnsupported, grow_to
+
+
+# ---------------------------------------------------------------------------
+# time_profile backend registry
+# ---------------------------------------------------------------------------
+
+#: registered ``time_profile`` accumulation backends.  A backend maps call
+#: records onto the [bins, functions] overlap matrix:
+#: ``fn(starts, ends, rate, name_codes, edges, nf) -> np.ndarray``
+#: with ``starts``/``ends`` float64 ns, ``rate`` weight/ns, ``name_codes``
+#: int codes < nf, ``edges`` the bin edge array (len num_bins+1).
+TIME_PROFILE_BACKENDS: Dict[str, Callable[..., np.ndarray]] = {}
+
+
+def register_time_profile_backend(name: str) -> Callable:
+    """Decorator registering a ``time_profile(backend=<name>)`` accumulation
+    backend (last registration wins, like the op registry)."""
+
+    def deco(fn: Callable[..., np.ndarray]) -> Callable[..., np.ndarray]:
+        TIME_PROFILE_BACKENDS[name] = fn
+        return fn
+
+    return deco
 
 
 @register_op("flat_profile", needs_structure=True)
@@ -73,7 +96,10 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
         metric: ``time.exc`` (default) or ``time.inc``, in ns.
         normalized: scale each bin's values to fractions of that bin's
             total (rows sum to 1 where any time was recorded).
-        backend: ``"numpy"`` (exact sweep) or ``"pallas"`` (tiled kernel).
+        backend: a backend registered in :data:`TIME_PROFILE_BACKENDS` —
+            built-ins are ``"numpy"`` (exact sweep) and ``"pallas"``
+            (tiled kernel); register your own with
+            :func:`register_time_profile_backend`.
 
     Returns:
         EventFrame with ``bin_start``/``bin_end`` (ns) plus one column per
@@ -101,16 +127,12 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
     cats = ev.cat(NAME).categories
     nf = len(cats)
 
-    if backend == "pallas":
-        from ..kernels.ops import time_profile_matrix
-        # normalize to bin units: f32 kernel arithmetic loses ns-scale
-        # precision at bin boundaries otherwise
-        bw = (t1 - t0) / num_bins
-        prof = np.asarray(time_profile_matrix(
-            (starts - t0) / bw, (ends - t0) / bw, name_codes, rate * bw,
-            n_funcs=nf, n_bins=num_bins, t0=0.0, t1=float(num_bins))).T
-    else:
-        prof = _exact_profile(starts, ends, rate, name_codes, edges, nf)
+    fn = TIME_PROFILE_BACKENDS.get(backend)
+    if fn is None:
+        raise ValueError(
+            f"unknown time_profile backend {backend!r}; registered: "
+            f"{sorted(TIME_PROFILE_BACKENDS)}")
+    prof = fn(starts, ends, rate, name_codes, edges, nf)
 
     # zero-duration calls: all weight in their bin
     zsel = inc <= 0
@@ -129,6 +151,23 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
     return out
 
 
+@register_time_profile_backend("pallas")
+def _pallas_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
+    """The Pallas TPU kernel (repro.kernels.time_bin): scatter-free one-hot
+    matmul accumulation, interpret-mode on CPU.  Values agree with the
+    exact sweep to f32 rounding."""
+    from ..kernels.ops import time_profile_matrix
+    num_bins = len(edges) - 1
+    t0, t1 = float(edges[0]), float(edges[-1])
+    # normalize to bin units: f32 kernel arithmetic loses ns-scale
+    # precision at bin boundaries otherwise
+    bw = (t1 - t0) / num_bins
+    return np.asarray(time_profile_matrix(
+        (starts - t0) / bw, (ends - t0) / bw, name_codes, rate * bw,
+        n_funcs=nf, n_bins=num_bins, t0=0.0, t1=float(num_bins))).T
+
+
+@register_time_profile_backend("numpy")
 def _exact_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
     """C(t) = Σ rate_i·clamp(t−s_i, 0, e_i−s_i) evaluated at edges, per name.
 

@@ -155,6 +155,14 @@ def _steps_token(steps) -> tuple:
 def _stat_token(path: str) -> tuple:
     import os
     st = os.stat(path)
+    # pack files carry a stored content id (SHA-256 over the column +
+    # sidecar bytes): keying by it instead of (size, mtime, inode) means
+    # copies and faithful rewrites of a pack share one cache entry, and a
+    # re-pack with different content can never produce a stale hit
+    from ..readers.pack import content_id
+    cid = content_id(path)
+    if cid is not None:
+        return ("pipitpack", cid)
     return (path, st.st_size, st.st_mtime_ns, st.st_ino)
 
 

@@ -43,7 +43,7 @@ __all__ = [
     "ReaderSpec", "register_reader", "register_chunked", "register_units",
     "get_reader", "list_readers",
     "resolve_reader", "sniff_format", "rank_shard_procs", "PlanHints",
-    "ByteSpan", "ProcSpan", "even_edges", "even_groups",
+    "ByteSpan", "ProcSpan", "RowSpan", "even_edges", "even_groups",
 ]
 
 
@@ -108,6 +108,19 @@ class ByteSpan:
     and stops at the first boundary at or after ``hi``.  Spans planned over
     one file partition its records exactly: every record belongs to the span
     containing its first byte."""
+
+    path: str
+    lo: int
+    hi: int
+
+
+@dataclass(frozen=True)
+class RowSpan:
+    """One row range ``[lo, hi)`` of a random-access columnar trace file — a
+    parallel work unit for formats whose footer index records exact row
+    offsets (pipitpack).  Unlike :class:`ByteSpan` no boundary alignment is
+    needed: the reader slices rows directly, so spans planned over one file
+    partition its rows exactly by construction."""
 
     path: str
     lo: int

@@ -40,7 +40,8 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
 import numpy as np
 
 from . import registry, structure
-from .constants import ENTER, ET, LEAVE, NAME, PROC, THREAD, TS
+from .constants import (DERIVED_COLUMNS, ENTER, ET, EXC, INC, LEAVE, MATCH,
+                        NAME, PARENT, PROC, THREAD, TS)
 from .frame import Categorical, EventFrame, concat
 
 __all__ = ["StreamingTrace", "StreamingUnsupported", "StreamAgg",
@@ -309,7 +310,11 @@ class CallStitcher:
         ts = np.asarray(ev[TS], np.float64)
         self._check_sorted(gkey, ts)
 
-        matching, _depth, parent, inc, exc = structure.derive_structure(ev)
+        pre = self._precomputed(ev)
+        if pre is not None:
+            matching, parent, inc, exc = pre
+        else:
+            matching, _depth, parent, inc, exc = structure.derive_structure(ev)
 
         et = ev.cat(ET)
         is_enter = et.mask_eq(ENTER)
@@ -483,6 +488,22 @@ class CallStitcher:
         return completed
 
     @staticmethod
+    def _precomputed(ev: EventFrame
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray, np.ndarray]]:
+        """Chunk-localized structure attached by the reader (pack sidecar
+        slices: partners/parents outside the chunk are -1, exactly the
+        within-chunk result ``derive_structure`` would produce), or None.
+        Readers must never attach these columns to a row-filtered chunk —
+        ``mask_frames`` strips them before masking for the same reason."""
+        if not (MATCH in ev and PARENT in ev and INC in ev and EXC in ev):
+            return None
+        return (np.asarray(ev.column(MATCH), np.int64),
+                np.asarray(ev.column(PARENT), np.int64),
+                np.asarray(ev.column(INC), np.float64),
+                np.asarray(ev.column(EXC), np.float64))
+
+    @staticmethod
     def _group_key_rows(ev: EventFrame) -> np.ndarray:
         """One stable (process, thread) integer key per row — must be
         identical across every chunk of a stream, since it indexes the
@@ -553,7 +574,16 @@ def mask_frames(frames: Iterator[EventFrame], steps: Sequence,
         for step in steps:
             m = step.mask(t)
             mask = m if mask is None else (mask & m)
-        yield frame.mask(mask)
+        if mask.all():
+            # keep the chunk as-is: precomputed structure columns (pack
+            # sidecar slices) stay valid when no row is dropped
+            yield frame
+        else:
+            # row selection invalidates any row-localized structure the
+            # reader attached — strip before gathering so the stitcher
+            # re-derives on the selected rows (identical to parse-time
+            # pushdown in the text readers)
+            yield frame.drop(*DERIVED_COLUMNS).mask(mask)
 
 
 def _masked_chunks(handle: "StreamingTrace", steps: Sequence
@@ -773,7 +803,10 @@ class StreamingTrace:
         hints = registry.PlanHints(
             procs=frozenset(procs) if procs is not None else None,
             proc_bounds=proc_bounds)
-        frames = list(self._iter_frames(hints))
+        # chunked readers may attach chunk-localized structure columns
+        # (pack sidecar); their indices are meaningless after concat
+        frames = [f.drop(*DERIVED_COLUMNS)
+                  for f in self._iter_frames(hints)]
         ev = concat(frames) if frames else EventFrame()
         return Trace(ev, label=self.label)
 
@@ -781,6 +814,25 @@ class StreamingTrace:
         """Load everything into one in-memory Trace (applies this handle's
         plan steps, if any, via the normal fused-mask path)."""
         return self.query().collect()
+
+    # -- conversion ---------------------------------------------------------
+    def save_pack(self, path: str, chunk_rows: Optional[int] = None,
+                  sidecar: bool = True) -> str:
+        """Convert this handle's stream to the columnar pack format
+        (:mod:`repro.readers.pack`) without ever materializing it.
+
+        The handle's plan steps (if any) apply — what you save is what the
+        handle selects.  ``sidecar=True`` additionally stores the structure
+        sidecar via one memmap-backed pass over the *written* columns (the
+        only whole-trace step; peak memory is the derived arrays, not the
+        event text).  Returns ``path``.
+        """
+        from ..readers.pack import DEFAULT_PACK_CHUNK_ROWS, PackWriter
+        with PackWriter(path, chunk_rows=chunk_rows or
+                        DEFAULT_PACK_CHUNK_ROWS) as w:
+            for frame in self.iter_chunks():
+                w.append(frame.drop(*DERIVED_COLUMNS))
+            return w.finish(sidecar=sidecar)
 
     # -- cheap whole-stream facts ------------------------------------------
     def stats(self) -> StreamStats:

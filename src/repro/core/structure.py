@@ -199,6 +199,13 @@ def compute_inc_exc(events: EventFrame, matching: np.ndarray, parent: np.ndarray
     return inc, exc
 
 
+#: process-local call counter for :func:`derive_structure` — the test hook
+#: proving that reopening a pack with a structure sidecar (or streaming it
+#: chunk by chunk) never re-derives structure.  Monotonic; snapshot before /
+#: compare after.
+DERIVE_CALLS = 0
+
+
 def derive_structure(events: EventFrame) -> Tuple[np.ndarray, np.ndarray,
                                                   np.ndarray, np.ndarray,
                                                   np.ndarray]:
@@ -209,8 +216,11 @@ def derive_structure(events: EventFrame) -> Tuple[np.ndarray, np.ndarray,
     used by ``Trace._ensure_structure`` on whole traces and by the
     streaming engine's :class:`~repro.core.streaming.CallStitcher` on every
     chunk (whose within-chunk pairs it resolves with exactly this kernel,
-    keeping chunked and in-memory results bit-identical).
+    keeping chunked and in-memory results bit-identical).  Every call bumps
+    :data:`DERIVE_CALLS` (pack-sidecar tests assert the skip).
     """
+    global DERIVE_CALLS
+    DERIVE_CALLS += 1
     matching, depth, order = match_events(events)
     parent = compute_parents(events, matching, depth, order)
     inc, exc = compute_inc_exc(events, matching, parent)

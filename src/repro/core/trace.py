@@ -133,6 +133,25 @@ class Trace:
         return resolve_reader(path, format).read(path, **kw)
 
     # ------------------------------------------------------------------
+    # serialization — the columnar binary store
+    # ------------------------------------------------------------------
+    def save_pack(self, path, chunk_rows: Optional[int] = None,
+                  sidecar: bool = True) -> str:
+        """Serialize this trace as a ``pipitpack`` columnar binary file.
+
+        Reopening a pack (``Trace.open(path)``) memmaps each column with
+        zero parsing; with ``sidecar=True`` (default) the derived structure
+        (matching / depth / parent / inc / exc) is stored too, so the
+        reopened trace skips ``derive_structure`` entirely.  Convert once,
+        analyze fast — see docs/pack-format.md.  Returns ``path``.
+        """
+        import os
+        from ..readers.pack import DEFAULT_PACK_CHUNK_ROWS, write_pack
+        return write_pack(self, os.fspath(path),
+                          chunk_rows=chunk_rows or DEFAULT_PACK_CHUNK_ROWS,
+                          sidecar=sidecar)
+
+    # ------------------------------------------------------------------
     # basics
     # ------------------------------------------------------------------
     @property

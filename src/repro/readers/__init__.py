@@ -14,6 +14,10 @@ the format records communication.  Formats:
 ``otf2j``          schema-faithful OTF2 rendering (definitions + per-location
                    event streams; the binary OTF2 C library is unavailable
                    offline, so archives are JSON with OTF2's exact structure)
+``pack``           pipitpack, the native columnar binary store: per-column
+                   mmap arrays + chunk index + optional structure sidecar —
+                   convert once (``trace.save_pack`` / tools/pack.py), then
+                   reopen with zero parsing (docs/pack-format.md)
 ``hlo``            compiled XLA programs (post-SPMD HLO text) → modeled
                    per-device timelines; the bridge that lets Pipit analyze
                    our own TPU framework's planned executions
@@ -27,10 +31,12 @@ from .csvreader import read_csv
 from .hlo import read_hlo, read_hlo_file
 from .jsonl import read_jsonl, write_jsonl
 from .otf2j import read_otf2_json, write_otf2_json
+from .pack import PackWriter, read_pack, write_pack
 from .parallel import open_many, read_parallel, select_shards
 
 __all__ = [
     "read_csv", "read_jsonl", "write_jsonl", "read_chrome", "read_otf2_json",
-    "write_otf2_json", "read_hlo", "read_hlo_file", "read_parallel",
-    "open_many", "select_shards",
+    "write_otf2_json", "read_hlo", "read_hlo_file", "read_pack",
+    "write_pack", "PackWriter", "read_parallel", "open_many",
+    "select_shards",
 ]

@@ -1,0 +1,716 @@
+"""pipitpack — the native columnar binary trace store (parse once, mmap ever
+after).
+
+Every other format we read is *text*: re-opening a 10M-event trace means
+re-decoding hundreds of MB of JSON/CSV before the first vectorized kernel
+runs, and that decode dominates cache-miss execution end to end.  A pack
+file stores the uniform data model (paper Fig. 1) as little-endian
+per-column arrays laid out contiguously for the whole file, so reopening is
+``np.memmap`` per column — zero parse, zero copy — plus a small JSON footer
+holding:
+
+* the **column directory** (key, dtype, byte offset),
+* the interned **name table** (``Name`` is stored as int32 codes),
+* the **chunk index**: fixed-row chunks with each chunk's row range, time
+  range and process set — chunked/streaming reads skip chunks a plan's
+  time-window or process restriction provably cannot need *without touching
+  their bytes* (index pushdown),
+* an optional **structure sidecar**: matching / depth / parent / inc / exc
+  computed once at pack time, so reopening skips ``derive_structure``
+  entirely (eager opens attach the columns; streaming chunks carry
+  row-localized slices the :class:`~repro.core.streaming.CallStitcher`
+  consumes instead of re-deriving per chunk),
+* a **content id** (SHA-256 over all column + sidecar bytes) — the
+  plan-result cache (:mod:`repro.core.plancache`) keys pack sources by it,
+  so copies and rewrites with identical content share cache entries.
+
+File layout::
+
+    #pipitpack 1\\n                      ASCII magic line (sniffable)
+    <column arrays, back to back>       offsets in the footer
+    <sidecar arrays, back to back>      (optional)
+    <footer JSON, utf-8>
+    <footer length, uint64 LE> <b"PIPITPK\\0">   last 16 bytes
+
+Write paths: ``Trace.save_pack(path)`` / ``write_pack`` (in-memory),
+``StreamingTrace.save_pack`` / :class:`PackWriter` (out-of-core append —
+column data spools per column and is stitched at finish), and
+``tools/pack.py`` (the CLI converter for any registered format).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import struct
+import tempfile
+from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
+
+import numpy as np
+
+from ..core import structure
+from ..core.constants import (DEPTH, ENTER, ET, EXC, INC, INSTANT, LEAVE,
+                              MATCH, MATCH_TS, MSG_SIZE, NAME, PARENT,
+                              PARTNER, PROC, TAG, THREAD, TS)
+from ..core.frame import Categorical, EventFrame
+from ..core.registry import (PlanHints, RowSpan, even_groups,
+                             register_chunked, register_reader,
+                             register_units)
+from ..core.trace import Trace
+
+__all__ = ["write_pack", "read_pack", "PackWriter", "read_footer",
+           "content_id", "io_stats", "reset_io_stats",
+           "DEFAULT_PACK_CHUNK_ROWS"]
+
+MAGIC = b"#pipitpack 1\n"
+TAIL_MAGIC = b"PIPITPK\x00"
+VERSION = 1
+DEFAULT_PACK_CHUNK_ROWS = 250_000
+
+_ET_CODE = {ENTER: 0, LEAVE: 1, INSTANT: 2}
+_ET_CATS = np.asarray([ENTER, LEAVE, INSTANT])
+
+#: (footer key, canonical column, on-disk dtype) — event columns in file order
+_EVENT_COLS = (
+    ("ts", TS, "<i8"),
+    ("et", ET, "<i1"),
+    ("name", NAME, "<i4"),
+    ("proc", PROC, "<i4"),
+    ("thread", THREAD, "<i4"),
+    ("size", MSG_SIZE, "<f8"),
+    ("partner", PARTNER, "<i4"),
+    ("tag", TAG, "<i4"),
+)
+#: sidecar arrays (footer key, canonical column, dtype)
+_SIDECAR_COLS = (
+    ("matching", MATCH, "<i8"),
+    ("depth", DEPTH, "<i4"),
+    ("parent", PARENT, "<i8"),
+    ("inc", INC, "<f8"),
+    ("exc", EXC, "<f8"),
+)
+
+
+# ---------------------------------------------------------------------------
+# io accounting (tests / benchmarks assert pushdown actually skips chunks)
+# ---------------------------------------------------------------------------
+
+_IO_STATS = {"chunks_read": 0, "chunks_skipped": 0}
+
+
+def io_stats() -> Dict[str, int]:
+    """Process-local counters of footer-index chunks read vs skipped by
+    pushdown since the last :func:`reset_io_stats` (advisory; parallel pool
+    workers count in their own process)."""
+    return dict(_IO_STATS)
+
+
+def reset_io_stats() -> None:
+    _IO_STATS["chunks_read"] = 0
+    _IO_STATS["chunks_skipped"] = 0
+
+
+# ---------------------------------------------------------------------------
+# footer access
+# ---------------------------------------------------------------------------
+
+_FOOTER_CACHE: Dict[str, Tuple[Tuple[int, int], dict]] = {}
+
+
+def read_footer(path: str) -> dict:
+    """Parse and return the footer of ``path`` (cached per (size, mtime)).
+
+    Raises ValueError when the file is not a pack.
+    """
+    path = os.fspath(path)
+    st = os.stat(path)
+    key = (st.st_size, st.st_mtime_ns)
+    hit = _FOOTER_CACHE.get(path)
+    if hit is not None and hit[0] == key:
+        return hit[1]
+    with open(path, "rb") as f:
+        head = f.read(len(MAGIC))
+        if head != MAGIC:
+            raise ValueError(f"{path!r} is not a pipitpack file")
+        if st.st_size < len(MAGIC) + 16:
+            raise ValueError(f"{path!r}: truncated pack (no footer)")
+        f.seek(-16, os.SEEK_END)
+        flen, tail = struct.unpack("<Q", f.read(8))[0], f.read(8)
+        if tail != TAIL_MAGIC:
+            raise ValueError(f"{path!r}: bad pack trailer (truncated write?)")
+        f.seek(st.st_size - 16 - flen)
+        footer = json.loads(f.read(flen).decode("utf-8"))
+    if footer.get("version") != VERSION:
+        raise ValueError(f"{path!r}: unsupported pack version "
+                         f"{footer.get('version')!r} (this reader supports "
+                         f"{VERSION})")
+    if len(_FOOTER_CACHE) > 256:
+        _FOOTER_CACHE.clear()
+    _FOOTER_CACHE[path] = (key, footer)
+    return footer
+
+
+def is_pack(path: str) -> bool:
+    try:
+        with open(path, "rb") as f:
+            return f.read(len(MAGIC)) == MAGIC
+    except OSError:
+        return False
+
+
+def content_id(path: str) -> Optional[str]:
+    """The pack's stored content id (SHA-256 over column + sidecar bytes),
+    or None when ``path`` is not a readable pack.  Footer-only read — the
+    plan cache calls this per terminal op."""
+    try:
+        if not is_pack(path):
+            return None
+        return read_footer(path).get("content_id")
+    except (OSError, ValueError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+def _int_column(arr: np.ndarray, dtype: str, what: str) -> np.ndarray:
+    out = np.asarray(arr)
+    info = np.iinfo(np.dtype(dtype))
+    if len(out) and (out.min() < info.min or out.max() > info.max):
+        raise ValueError(f"pack {what} column value out of {dtype} range "
+                         f"[{info.min}, {info.max}]")
+    return out.astype(dtype, copy=False)
+
+
+def _et_codes(ev: EventFrame) -> np.ndarray:
+    """Canonical 0/1/2 Enter/Leave/Instant codes; richer instant subtypes
+    (MpiSend/...) render as plain instants, like every on-disk format."""
+    col = ev.column(ET)
+    if isinstance(col, Categorical):
+        remap = np.asarray([_ET_CODE.get(str(c), 2) for c in col.categories],
+                           np.int8)
+        return remap[col.codes]
+    return np.asarray([_ET_CODE.get(str(v), 2) for v in np.asarray(col)],
+                      np.int8)
+
+
+class PackWriter:
+    """Out-of-core pack writer: append EventFrames in stream order, then
+    :meth:`finish`.  Column data spools into per-column temp files (bounded
+    memory) and is stitched into the final single-file layout at finish;
+    the chunk index, name interner and content hash accumulate as chunks
+    arrive.
+
+    Usable as a context manager: leaving the ``with`` block without having
+    called :meth:`finish` (including via an exception) aborts the write and
+    removes the spools — no partial pack ever lands at ``path``.
+
+    Timestamps are stored as integer nanoseconds; float timestamps
+    quantize by truncation, exactly like every text writer in this repo
+    (``write_jsonl``'s ``int(ts)``).  The structure sidecar is always
+    consistent with the *stored* values.
+    """
+
+    def __init__(self, path: str, chunk_rows: int = DEFAULT_PACK_CHUNK_ROWS):
+        self.path = os.fspath(path)
+        self.chunk_rows = int(chunk_rows)
+        if self.chunk_rows <= 0:
+            raise ValueError("chunk_rows must be positive")
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        self._dir = tempfile.mkdtemp(prefix=".pack_", dir=d)
+        self._spool = {k: open(os.path.join(self._dir, k), "wb")
+                       for k, _c, _d in _EVENT_COLS}
+        self._rows = 0
+        self._name_code: Dict[str, int] = {}
+        self._names: List[str] = []
+        self._chunks: List[dict] = []  # finalized chunk records
+        self._cur: Optional[dict] = None  # partial chunk accumulator
+        self._has_thread = False
+        self._has_messages = False
+        self._finished = False
+
+    # -- context manager ---------------------------------------------------
+    def __enter__(self) -> "PackWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if not self._finished:
+            self.abort()
+
+    # -- append ------------------------------------------------------------
+    def append(self, frame_or_trace) -> None:
+        """Append one EventFrame (or Trace) worth of events, in stream
+        order.  Missing optional columns (thread / message triplet) are
+        synthesized; name codes are re-interned into the file-global
+        table."""
+        ev = getattr(frame_or_trace, "events", frame_or_trace)
+        n = len(ev)
+        if n == 0:
+            return
+        ts = _int_column(ev[TS], "<i8", "ts")
+        et = _et_codes(ev)
+        name = self._intern(ev)
+        proc = _int_column(ev[PROC], "<i4", "proc")
+        if THREAD in ev:
+            thread = _int_column(ev[THREAD], "<i4", "thread")
+            self._has_thread = self._has_thread or bool(np.any(thread))
+        else:
+            thread = np.zeros(n, "<i4")
+        if MSG_SIZE in ev:
+            size = np.asarray(ev[MSG_SIZE], np.float64).astype("<f8",
+                                                               copy=False)
+        else:
+            size = np.full(n, np.nan, "<f8")
+        if PARTNER in ev:
+            partner = _int_column(ev[PARTNER], "<i4", "partner")
+        else:
+            partner = np.full(n, -1, "<i4")
+        if TAG in ev:
+            tag = _int_column(ev[TAG], "<i4", "tag")
+        else:
+            tag = np.zeros(n, "<i4")
+        self._has_messages = self._has_messages or bool(
+            np.any(~np.isnan(size)) or np.any(partner >= 0))
+        cols = {"ts": ts, "et": et, "name": name, "proc": proc,
+                "thread": thread, "size": size, "partner": partner,
+                "tag": tag}
+        for k, arr in cols.items():
+            self._spool[k].write(np.ascontiguousarray(arr).tobytes())
+        self._index_rows(ts, proc)
+        self._rows += n
+
+    def _intern(self, ev: EventFrame) -> np.ndarray:
+        cat = ev.cat(NAME)
+        local = np.empty(len(cat.categories), np.int32)
+        for i, c in enumerate(cat.categories):
+            s = str(c)
+            g = self._name_code.get(s)
+            if g is None:
+                g = len(self._names)
+                self._name_code[s] = g
+                self._names.append(s)
+            local[i] = g
+        return local[cat.codes].astype("<i4", copy=False)
+
+    def _index_rows(self, ts: np.ndarray, proc: np.ndarray) -> None:
+        """Fold appended rows into fixed-row chunk index records."""
+        pos = 0
+        n = len(ts)
+        while pos < n:
+            if self._cur is None:
+                self._cur = {"lo": self._rows + pos, "rows": 0,
+                             "ts_min": None, "ts_max": None,
+                             "procs": set()}
+            take = min(n - pos, self.chunk_rows - self._cur["rows"])
+            sl_ts = ts[pos:pos + take]
+            sl_p = proc[pos:pos + take]
+            lo_t, hi_t = int(sl_ts.min()), int(sl_ts.max())
+            c = self._cur
+            c["ts_min"] = lo_t if c["ts_min"] is None else min(c["ts_min"],
+                                                               lo_t)
+            c["ts_max"] = hi_t if c["ts_max"] is None else max(c["ts_max"],
+                                                               hi_t)
+            c["procs"].update(np.unique(sl_p).tolist())
+            c["rows"] += take
+            pos += take
+            if c["rows"] == self.chunk_rows:
+                self._flush_chunk()
+
+    def _flush_chunk(self) -> None:
+        c = self._cur
+        if c is None or c["rows"] == 0:
+            self._cur = None
+            return
+        self._chunks.append({
+            "lo": c["lo"], "hi": c["lo"] + c["rows"],
+            "ts_min": c["ts_min"], "ts_max": c["ts_max"],
+            "procs": sorted(int(p) for p in c["procs"]),
+        })
+        self._cur = None
+
+    # -- finish ------------------------------------------------------------
+    def abort(self) -> None:
+        """Discard spools without writing the pack."""
+        for f in self._spool.values():
+            f.close()
+        shutil.rmtree(self._dir, ignore_errors=True)
+        self._finished = True
+
+    def finish(self, sidecar: Any = "auto",
+               _sidecar_arrays: Optional[dict] = None) -> str:
+        """Stitch spools into the final pack file and write the footer.
+
+        ``sidecar=True`` derives the structure sidecar (matching / depth /
+        parent / inc / exc) from the just-written columns via a memmap
+        pass — this is the only whole-trace step, and it is memmap-backed,
+        so peak memory is the derived arrays, not the event text.
+        ``"auto"`` means True.  ``_sidecar_arrays`` lets ``write_pack``
+        hand in structure a Trace already materialized.
+        """
+        if self._finished:
+            raise RuntimeError("PackWriter already finished")
+        self._flush_chunk()
+        for f in self._spool.values():
+            f.close()
+        want_sidecar = bool(sidecar) or _sidecar_arrays is not None
+        keep = self._store_flags()
+        tmp = os.path.join(self._dir, "final")
+        h = hashlib.sha256()
+        columns = []
+        with open(tmp, "wb") as out:
+            out.write(MAGIC)
+            off = out.tell()
+            for key, _col, dt in _EVENT_COLS:
+                if not keep[key]:
+                    continue
+                nbytes = self._copy_spool(key, out, h)
+                columns.append({"key": key, "dtype": dt, "offset": off})
+                off += nbytes
+            sidecar_meta = None
+            if want_sidecar and self._rows:
+                arrays = _sidecar_arrays
+                if arrays is None:
+                    out.flush()  # the memmap pass reads the written columns
+                    arrays = self._derive_sidecar(tmp, columns, keep)
+                sidecar_meta = []
+                for key, _col, dt in _SIDECAR_COLS:
+                    arr = np.ascontiguousarray(
+                        np.asarray(arrays[key]).astype(dt, copy=False))
+                    if len(arr) != self._rows:
+                        raise ValueError(
+                            f"sidecar {key!r} has {len(arr)} rows, pack has "
+                            f"{self._rows}")
+                    b = arr.tobytes()
+                    h.update(b)
+                    out.write(b)
+                    sidecar_meta.append({"key": key, "dtype": dt,
+                                         "offset": off})
+                    off += len(b)
+            footer = {
+                "version": VERSION,
+                "rows": self._rows,
+                "chunk_rows": self.chunk_rows,
+                "columns": columns,
+                "names": self._names,
+                "has_thread": self._has_thread,
+                "has_messages": self._has_messages,
+                "chunks": self._chunks,
+                "procs": sorted({p for c in self._chunks
+                                 for p in c["procs"]}),
+                "sidecar": sidecar_meta,
+                "content_id": h.hexdigest(),
+            }
+            blob = json.dumps(footer, separators=(",", ":")).encode("utf-8")
+            out.write(blob)
+            out.write(struct.pack("<Q", len(blob)))
+            out.write(TAIL_MAGIC)
+        os.replace(tmp, self.path)
+        shutil.rmtree(self._dir, ignore_errors=True)
+        self._finished = True
+        _FOOTER_CACHE.pop(self.path, None)
+        return self.path
+
+    def _store_flags(self) -> Dict[str, bool]:
+        """Which optional columns earn bytes in the final file."""
+        keep = {k: True for k, _c, _d in _EVENT_COLS}
+        keep["thread"] = self._has_thread
+        if not self._has_messages:
+            keep["size"] = keep["partner"] = keep["tag"] = False
+        return keep
+
+    def _copy_spool(self, key: str, out, h) -> int:
+        total = 0
+        with open(os.path.join(self._dir, key), "rb") as src:
+            while True:
+                b = src.read(1 << 22)
+                if not b:
+                    break
+                h.update(b)
+                out.write(b)
+                total += len(b)
+        return total
+
+    def _derive_sidecar(self, tmp: str, columns: List[dict],
+                        keep: Dict[str, bool]) -> dict:
+        """One structure pass over the just-written columns (memmapped)."""
+        byc = {c["key"]: c for c in columns}
+        ev = EventFrame()
+        for key, col, dt in _EVENT_COLS:
+            if not keep[key]:
+                continue
+            m = np.memmap(tmp, dtype=np.dtype(dt), mode="r",
+                          offset=byc[key]["offset"], shape=(self._rows,))
+            if key == "et":
+                ev[ET] = Categorical(m.astype(np.int32), _ET_CATS)
+            elif key == "name":
+                ev[NAME] = Categorical(
+                    np.asarray(m),
+                    np.asarray(self._names, dtype=object).astype(str))
+            else:
+                ev[col] = m
+        matching, depth, parent, inc, exc = structure.derive_structure(ev)
+        return {"matching": matching, "depth": depth, "parent": parent,
+                "inc": inc, "exc": exc}
+
+
+def write_pack(trace_or_events, path: str,
+               chunk_rows: int = DEFAULT_PACK_CHUNK_ROWS,
+               sidecar: bool = True) -> str:
+    """Serialize an in-memory trace (or EventFrame) as one pack file.
+
+    ``sidecar=True`` (default) stores the structure sidecar: the trace's
+    already-materialized structure columns are reused when present and
+    row-for-row valid; otherwise structure is derived once on the event
+    frame (the same pass reopening would pay — paid here exactly once).
+
+    Float timestamps quantize to integer ns by truncation (the convention
+    every text writer in this repo follows), and the sidecar is derived
+    from the stored values in that case, so reopen-and-derive equivalence
+    always holds.
+    """
+    ev = getattr(trace_or_events, "events", trace_or_events)
+    with PackWriter(path, chunk_rows=chunk_rows) as w:
+        w.append(ev)
+        arrays = None
+        # the sidecar must equal what derive_structure would produce on the
+        # *stored* (integer-ns) columns — already-materialized structure is
+        # only reusable when the source timestamps are integers, so storage
+        # quantization is the identity
+        int_ts = np.asarray(ev[TS]).dtype.kind in "iu" if len(ev) else True
+        if sidecar and len(ev) and int_ts and all(
+                c in ev for c in (MATCH, DEPTH, PARENT, INC, EXC)):
+            arrays = {"matching": np.asarray(ev.column(MATCH), np.int64),
+                      "depth": np.asarray(ev.column(DEPTH), np.int32),
+                      "parent": np.asarray(ev.column(PARENT), np.int64),
+                      "inc": np.asarray(ev.column(INC), np.float64),
+                      "exc": np.asarray(ev.column(EXC), np.float64)}
+        return w.finish(sidecar=sidecar, _sidecar_arrays=arrays)
+
+
+# ---------------------------------------------------------------------------
+# reader
+# ---------------------------------------------------------------------------
+
+def _sniff_pack(path: str, head: str) -> bool:
+    return head.startswith("#pipitpack ")
+
+
+def _shard_procs_pack(path: str) -> Optional[Set[int]]:
+    """Footer-exact shard hint: the process set a pack shard contains (used
+    by shard skipping before any byte of the column data is touched)."""
+    try:
+        return set(read_footer(path).get("procs", ())) or None
+    except (OSError, ValueError):
+        return None
+
+
+def _open_columns(path: str, footer: dict) -> Dict[str, np.ndarray]:
+    rows = footer["rows"]
+    out = {}
+    for c in footer["columns"]:
+        out[c["key"]] = np.memmap(path, dtype=np.dtype(c["dtype"]), mode="r",
+                                  offset=c["offset"], shape=(rows,))
+    return out
+
+
+def _open_sidecar(path: str, footer: dict) -> Optional[Dict[str, np.ndarray]]:
+    meta = footer.get("sidecar")
+    if not meta:
+        return None
+    rows = footer["rows"]
+    return {c["key"]: np.memmap(path, dtype=np.dtype(c["dtype"]), mode="r",
+                                offset=c["offset"], shape=(rows,))
+            for c in meta}
+
+
+def _name_table(footer: dict) -> np.ndarray:
+    return np.asarray(footer["names"], dtype=object).astype(str)
+
+
+def _frame_slice(cols: Dict[str, np.ndarray], names: np.ndarray,
+                 lo: int, hi: int, uniform: bool) -> EventFrame:
+    """EventFrame over rows [lo, hi) — pure memmap slices, no copies except
+    the small int8→int32 Event Type widening.  ``uniform=True`` (chunked
+    reads) synthesizes absent optional columns so chunks concatenate with
+    every other chunked reader's output."""
+    n = hi - lo
+    ev = EventFrame({
+        TS: cols["ts"][lo:hi],
+        ET: Categorical(cols["et"][lo:hi].astype(np.int32), _ET_CATS),
+        NAME: Categorical(np.asarray(cols["name"][lo:hi]), names),
+        PROC: cols["proc"][lo:hi],
+    })
+    if "thread" in cols:
+        ev[THREAD] = cols["thread"][lo:hi]
+    elif uniform:
+        ev[THREAD] = np.zeros(n, np.int32)
+    if "size" in cols:
+        ev[MSG_SIZE] = cols["size"][lo:hi]
+        ev[PARTNER] = cols["partner"][lo:hi]
+        ev[TAG] = cols["tag"][lo:hi]
+    elif uniform:
+        ev[MSG_SIZE] = np.full(n, np.nan)
+        ev[PARTNER] = np.full(n, -1, np.int32)
+        ev[TAG] = np.zeros(n, np.int32)
+    return ev
+
+
+def _localize(side: Dict[str, np.ndarray], ev: EventFrame, lo: int,
+              hi: int) -> None:
+    """Attach the sidecar slice [lo, hi) with row indices re-based to the
+    slice (partners/parents outside it become -1 — exactly the within-chunk
+    structure the streaming stitcher derives, minus the lexsort)."""
+    m = np.asarray(side["matching"][lo:hi], np.int64)
+    p = np.asarray(side["parent"][lo:hi], np.int64)
+    inside_m = (m >= lo) & (m < hi)
+    inside_p = (p >= lo) & (p < hi)
+    ev[MATCH] = np.where(inside_m, m - lo, -1)
+    ev[PARENT] = np.where(inside_p, p - lo, -1)
+    ev[INC] = side["inc"][lo:hi]
+    ev[EXC] = side["exc"][lo:hi]
+
+
+@register_reader("pack", extensions=(".pack",), sniff=_sniff_pack,
+                 shard_procs=_shard_procs_pack, priority=30)
+def read_pack(path: str, label: Optional[str] = None,
+              sidecar: bool = True) -> Trace:
+    """Open a pack whole-file: every event column is a zero-copy memmap.
+
+    With ``sidecar=True`` (default) and a stored sidecar, the derived
+    structure columns (matching / depth / parent / inc / exc plus the
+    matching-timestamp column) attach directly and the returned Trace is
+    already structured — ``derive_structure`` never runs.
+    """
+    path = os.fspath(path)
+    footer = read_footer(path)
+    cols = _open_columns(path, footer)
+    names = _name_table(footer)
+    rows = footer["rows"]
+    ev = _frame_slice(cols, names, 0, rows, uniform=False)
+    t = Trace(ev, label=label or path)
+    side = _open_sidecar(path, footer) if sidecar else None
+    if side is not None:
+        matching = np.asarray(side["matching"], np.int64)
+        ev[MATCH] = matching
+        ev[DEPTH] = side["depth"]
+        ev[PARENT] = side["parent"]
+        ev[INC] = side["inc"]
+        ev[EXC] = side["exc"]
+        ts = np.asarray(ev[TS], np.float64)
+        ev[MATCH_TS] = np.where(matching >= 0, ts[np.maximum(matching, 0)],
+                                np.nan)
+        t._structured = True
+    return t
+
+
+def _admits_chunk(ch: dict, hints: Optional[PlanHints]) -> bool:
+    """False when the footer index proves the chunk cannot contribute."""
+    if hints is None:
+        return True
+    if hints.time_window is not None:
+        t0, t1 = hints.time_window
+        if ch["ts_max"] < t0 or ch["ts_min"] > t1:
+            return False
+    if hints.procs is not None or hints.proc_bounds is not None:
+        if not any(hints.admits_proc(p) for p in ch["procs"]):
+            return False
+    return True
+
+
+def _row_mask(ev: EventFrame, hints: Optional[PlanHints]) -> Optional[np.ndarray]:
+    """Row-level pushdown mask for a surviving chunk, or None when every
+    row is admitted (the common all-or-nothing case keeps the zero-copy
+    slice and its sidecar fast path)."""
+    if hints is None:
+        return None
+    mask = None
+    if hints.procs is not None or hints.proc_bounds is not None:
+        proc = np.asarray(ev[PROC], np.int64)
+        m = np.ones(len(proc), bool)
+        if hints.procs is not None:
+            m &= np.isin(proc, np.fromiter(hints.procs, np.int64,
+                                           len(hints.procs)))
+        if hints.proc_bounds is not None:
+            m &= (proc >= hints.proc_bounds[0]) & (proc <= hints.proc_bounds[1])
+        mask = m
+    if hints.time_window is not None:
+        ts = np.asarray(ev[TS], np.float64)
+        m = (ts >= hints.time_window[0]) & (ts <= hints.time_window[1])
+        mask = m if mask is None else (mask & m)
+    if mask is None or mask.all():
+        return None
+    return mask
+
+
+@register_chunked("pack")
+def iter_chunks_pack(path: str, chunk_rows: int,
+                     hints: Optional[PlanHints] = None,
+                     label: Optional[str] = None,
+                     row_range: Optional[tuple] = None,
+                     sidecar: bool = True) -> Iterator[EventFrame]:
+    """Stream a pack in EventFrame chunks of at most ``chunk_rows`` rows.
+
+    Index pushdown runs first: footer chunks whose time range / process set
+    cannot satisfy ``hints`` are skipped without touching their bytes
+    (counted in :func:`io_stats`).  Surviving contiguous row runs are
+    coalesced and re-sliced to ``chunk_rows``, so the yielded chunk size is
+    independent of the pack's own chunking.  ``row_range=(lo, hi)``
+    restricts the read to those rows (:class:`~repro.core.registry.RowSpan`
+    parallel work units).  With a stored sidecar, unfiltered chunks carry
+    row-localized structure columns the streaming stitcher consumes instead
+    of re-deriving per chunk.
+    """
+    path = os.fspath(path)
+    footer = read_footer(path)
+    cols = _open_columns(path, footer)
+    names = _name_table(footer)
+    side = _open_sidecar(path, footer) if sidecar else None
+    r_lo, r_hi = (0, footer["rows"]) if row_range is None else (
+        int(row_range[0]), int(row_range[1]))
+    # pushdown at footer-chunk granularity, then coalesce surviving runs
+    runs: List[List[int]] = []
+    for ch in footer["chunks"]:
+        lo, hi = max(ch["lo"], r_lo), min(ch["hi"], r_hi)
+        if hi <= lo:
+            continue
+        if not _admits_chunk(ch, hints):
+            _IO_STATS["chunks_skipped"] += 1
+            continue
+        _IO_STATS["chunks_read"] += 1
+        if runs and runs[-1][1] == lo:
+            runs[-1][1] = hi
+        else:
+            runs.append([lo, hi])
+    for lo, hi in runs:
+        for s in range(lo, hi, chunk_rows):
+            e = min(s + chunk_rows, hi)
+            ev = _frame_slice(cols, names, s, e, uniform=True)
+            mask = _row_mask(ev, hints)
+            if mask is None:
+                if side is not None:
+                    _localize(side, ev, s, e)
+                yield ev
+            else:
+                if not np.any(mask):
+                    continue
+                # row filtering invalidates localized structure indices —
+                # the stitcher re-derives on the filtered chunk, exactly
+                # like parse-time pushdown in the text readers
+                yield ev.mask(mask)
+
+
+@register_units("pack")
+def plan_units_pack(path: str, n_units: int) -> Optional[List[RowSpan]]:
+    """Split one pack into up to ``n_units`` RowSpans aligned to footer
+    chunk boundaries — the ideal ByteSpan analogue: rows are random-access,
+    so no line-boundary alignment pass is ever needed and the spans
+    partition the rows exactly by construction."""
+    footer = read_footer(path)
+    chunks = footer["chunks"]
+    if n_units <= 1 or len(chunks) <= 1:
+        return None
+    groups = even_groups(chunks, n_units)
+    return [RowSpan(path, g[0]["lo"], g[-1]["hi"]) for g in groups]

@@ -20,7 +20,8 @@ from typing import List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from ..core.constants import ENTER, ET, INSTANT, LEAVE, NAME, PROC, TS
+from ..core.constants import (DERIVED_COLUMNS, ENTER, ET, INSTANT, LEAVE,
+                              NAME, PROC, TS)
 from ..core.frame import Categorical, EventFrame, concat
 from ..core.registry import resolve_reader
 from ..core.trace import Trace
@@ -44,7 +45,10 @@ def _ensure_registered() -> None:
 def _read_one(args) -> EventFrame:
     kind, path, reader_kwargs = args
     _ensure_registered()
-    return resolve_reader(path, kind).read(path, **(reader_kwargs or {})).events
+    ev = resolve_reader(path, kind).read(path, **(reader_kwargs or {})).events
+    # per-shard derived structure (pack sidecars) indexes the shard's own
+    # rows; the merged sort below invalidates it — strip before concat
+    return ev.drop(*DERIVED_COLUMNS)
 
 
 def select_shards(paths: Sequence[str], kind: str = "auto",

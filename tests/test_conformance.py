@@ -30,13 +30,17 @@ from repro.readers.chrome import write_chrome
 from repro.readers.csvreader import write_csv
 from repro.readers.jsonl import write_jsonl
 from repro.readers.otf2j import write_otf2_json
+from repro.readers.pack import write_pack
 
 WRITERS = {
     "jsonl": ("golden.jsonl", write_jsonl),
     "csv": ("golden.csv", write_csv),
     "chrome": ("golden.json", write_chrome),
     "otf2j": ("golden.otf2.json", write_otf2_json),
+    "pack": ("golden.pack", write_pack),
 }
+
+ALL_FMTS = ["jsonl", "csv", "chrome", "otf2j", "otf2j-dir", "pack"]
 
 
 @pytest.fixture(scope="module")
@@ -108,24 +112,21 @@ def _fmt_name(fmt: str) -> str:
     return "otf2j" if fmt.startswith("otf2j") else fmt
 
 
-@pytest.mark.parametrize("fmt", ["jsonl", "csv", "chrome", "otf2j",
-                                 "otf2j-dir"])
+@pytest.mark.parametrize("fmt", ALL_FMTS)
 def test_reader_roundtrip(fmt, written, golden_canonical):
     spec = get_reader(_fmt_name(fmt))
     got = canonical(spec.read(written[fmt]))
     assert_canonical_equal(golden_canonical, got, f"{fmt} whole-file")
 
 
-@pytest.mark.parametrize("fmt", ["jsonl", "csv", "chrome", "otf2j",
-                                 "otf2j-dir"])
+@pytest.mark.parametrize("fmt", ALL_FMTS)
 def test_auto_sniff_roundtrip(fmt, written, golden_canonical):
     assert sniff_format(written[fmt]) == _fmt_name(fmt)
     got = canonical(Trace.open(written[fmt], format="auto"))
     assert_canonical_equal(golden_canonical, got, f"{fmt} auto")
 
 
-@pytest.mark.parametrize("fmt", ["jsonl", "csv", "chrome", "otf2j",
-                                 "otf2j-dir"])
+@pytest.mark.parametrize("fmt", ALL_FMTS)
 @pytest.mark.parametrize("chunk_rows", [13, 101])
 def test_chunked_roundtrip(fmt, chunk_rows, written, golden_canonical):
     spec = get_reader(_fmt_name(fmt))
@@ -137,8 +138,7 @@ def test_chunked_roundtrip(fmt, chunk_rows, written, golden_canonical):
                            f"{fmt} chunked({chunk_rows})")
 
 
-@pytest.mark.parametrize("fmt", ["jsonl", "csv", "chrome", "otf2j",
-                                 "otf2j-dir"])
+@pytest.mark.parametrize("fmt", ALL_FMTS)
 def test_streaming_handle_matches_memory(fmt, written):
     """Trace.open(streaming=True) over every format: the streamed flat
     profile equals the in-memory one (string-level, values exact)."""
@@ -150,6 +150,26 @@ def test_streaming_handle_matches_memory(fmt, written):
                                   np.asarray(st["time.exc"]))
     np.testing.assert_array_equal(np.asarray(mem["count"]),
                                   np.asarray(st["count"]))
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_parallel_unit_roundtrip(fmt, written, golden_canonical):
+    """Formats with a registered unit planner: the frames of every planned
+    work unit, concatenated in unit order, must partition the golden events
+    exactly (ByteSpan line ownership, pack RowSpans, per-proc ProcSpans)."""
+    from repro.core.constants import DERIVED_COLUMNS
+    from repro.core.executor import _unit_frames
+    name = _fmt_name(fmt)
+    spec = get_reader(name)
+    if spec.plan_units is None:
+        pytest.skip(f"{fmt} has no unit planner")
+    units = spec.plan_units(written[fmt], 3)
+    if not units or len(units) <= 1:
+        pytest.skip(f"{fmt} input too small to split")
+    frames = [f.drop(*DERIVED_COLUMNS) for u in units
+              for f in _unit_frames(u, name, 37, None, {})]
+    got = canonical(concat(frames))
+    assert_canonical_equal(golden_canonical, got, f"{fmt} units")
 
 
 def test_every_registered_reader_covered():

@@ -76,3 +76,43 @@ def test_multirun_scaling_study():
     traces = [tg.tortuga(nprocs=n, iters=3) for n in (4, 8, 16)]
     df = Trace.multirun_analysis(traces, top_n=6)
     assert "computeRhs" in list(df.columns) or "computeRhs" in list(df[df.columns[0]])
+
+
+def test_time_profile_backend_registry():
+    """time_profile backends dispatch through the registered table: unknown
+    names fail loudly listing the options, and user backends register the
+    same way the built-ins do."""
+    from repro.core import ops_summary
+
+    t = tg.gol(nprocs=2, iters=2)
+    with pytest.raises(ValueError, match="numpy.*pallas|pallas.*numpy"):
+        t.time_profile(num_bins=8, backend="nope")
+
+    @ops_summary.register_time_profile_backend("double")
+    def _double(starts, ends, rate, name_codes, edges, nf):
+        return 2 * ops_summary._exact_profile(starts, ends, rate,
+                                              name_codes, edges, nf)
+
+    try:
+        a = t.time_profile(num_bins=8)
+        b = t.time_profile(num_bins=8, backend="double")
+        cols = [c for c in a.columns if c not in ("bin_start", "bin_end")]
+        for c in cols:
+            np.testing.assert_allclose(np.asarray(b[c]),
+                                       2 * np.asarray(a[c]))
+    finally:
+        del ops_summary.TIME_PROFILE_BACKENDS["double"]
+
+
+def test_time_profile_pallas_backend_parity_fast():
+    """Interpret-mode parity of the registered Pallas kernel backend on a
+    small trace — the fast-tier guard that keeps the kernel exercised
+    (the full sweep lives in tests/test_kernels.py, slow tier)."""
+    t = tg.gol(nprocs=2, iters=2, seed=3)
+    a = t.time_profile(num_bins=8)
+    b = t.time_profile(num_bins=8, backend="pallas")
+    cols = [c for c in a.columns if c not in ("bin_start", "bin_end")]
+    assert cols == [c for c in b.columns if c not in ("bin_start", "bin_end")]
+    for c in cols:
+        np.testing.assert_allclose(np.asarray(b[c]), np.asarray(a[c]),
+                                   rtol=1e-5, atol=1e-3)

@@ -1,0 +1,467 @@
+"""pipitpack columnar store: round-trip fidelity, sidecar skip, index
+pushdown, parallel units, plan-cache content identity, conversion paths."""
+
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro import tracegen as tg
+from repro.core import plancache, structure
+from repro.core.constants import (DEPTH, DERIVED_COLUMNS, ET, EXC, INC,
+                                  MATCH, MSG_SIZE, NAME, PARENT, PARTNER,
+                                  PROC, TAG, THREAD, TS)
+from repro.core.frame import EventFrame, concat
+from repro.core.registry import RowSpan, get_reader, sniff_format
+from repro.core.trace import Trace
+from repro.readers import pack as packmod
+from repro.readers.jsonl import write_jsonl
+from repro.readers.pack import (PackWriter, io_stats, plan_units_pack,
+                                read_footer, read_pack, reset_io_stats,
+                                write_pack)
+from repro.testing.hyp import given, settings, st
+
+BASE_COLS = (TS, ET, NAME, PROC, THREAD, MSG_SIZE, PARTNER, TAG)
+
+
+def base_equal(a, b, context=""):
+    """Base event columns of two traces/frames are value-identical.
+
+    Optional columns are normalized before comparing: whole-file reads drop
+    an all-zero Thread / absent message triplet, chunked reads synthesize
+    them — both render the same logical events.
+    """
+    ea = getattr(a, "events", a)
+    eb = getattr(b, "events", b)
+    assert len(ea) == len(eb), f"{context}: {len(ea)} vs {len(eb)} rows"
+    n = len(ea)
+    defaults = {THREAD: np.zeros(n), MSG_SIZE: np.full(n, np.nan),
+                PARTNER: np.full(n, -1.0), TAG: np.zeros(n)}
+    for c in BASE_COLS:
+        va = ea[c] if c in ea else defaults[c]
+        vb = eb[c] if c in eb else defaults[c]
+        if np.asarray(va).dtype.kind in "UO" or np.asarray(vb).dtype.kind in "UO":
+            assert list(map(str, va)) == list(map(str, vb)), f"{context}: {c}"
+        else:
+            np.testing.assert_array_equal(np.asarray(va, np.float64),
+                                          np.asarray(vb, np.float64),
+                                          err_msg=f"{context}: {c}")
+
+
+@pytest.fixture()
+def disk_trace(tmp_path):
+    """A trace that went through disk once (integer-ns timestamps), plus
+    its jsonl path — the canonical on-disk reference."""
+    t = tg.gol(nprocs=3, iters=4, seed=7)
+    j = str(tmp_path / "ref.jsonl")
+    write_jsonl(t, j)
+    return Trace.open(j), j
+
+
+# ---------------------------------------------------------------------------
+# round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen,kw", [
+    (tg.gol, dict(nprocs=3, iters=4, seed=7)),
+    (tg.tortuga, dict(nprocs=4, iters=2, seed=1)),
+    (tg.loimos, dict(nprocs=8, iters=2, seed=3)),
+])
+def test_roundtrip_any_readable_trace(gen, kw, tmp_path):
+    """any readable trace → pack → identical frame AND identical structure
+    arrays to what reopening-and-deriving the text form produces."""
+    j = str(tmp_path / "t.jsonl")
+    write_jsonl(gen(**kw), j)
+    ref = Trace.open(j)
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=64)
+    got = read_pack(p)
+    base_equal(ref, got, "pack roundtrip")
+    # structure: the sidecar must equal a fresh derivation on the reference
+    ref._ensure_structure()
+    assert got._structured
+    for col in (MATCH, DEPTH, PARENT):
+        np.testing.assert_array_equal(
+            np.asarray(ref.events.column(col), np.int64),
+            np.asarray(got.events.column(col), np.int64), err_msg=col)
+    for col in (INC, EXC):
+        np.testing.assert_array_equal(
+            np.asarray(ref.events.column(col), np.float64),
+            np.asarray(got.events.column(col), np.float64), err_msg=col)
+
+
+def test_roundtrip_trace_without_messages(tmp_path):
+    t = tg.kripke_sweep(nprocs=4, iters=2, seed=0)
+    j = str(tmp_path / "k.jsonl")
+    write_jsonl(t, j)
+    ref = Trace.open(j)
+    p = str(tmp_path / "k.pack")
+    ref.save_pack(p)
+    got = read_pack(p)
+    base_equal(ref, got, "no-message roundtrip")
+    # chunked reads still emit the uniform column set
+    ch = next(get_reader("pack").iter_chunks(p, 50, None))
+    for c in (THREAD, MSG_SIZE, PARTNER, TAG):
+        assert c in ch
+
+
+def test_chunked_roundtrip_any_chunk_size(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=50)
+    for rows in (7, 64, 10_000):
+        chunks = list(get_reader("pack").iter_chunks(p, rows, None))
+        assert all(len(c) <= rows for c in chunks)
+        got = concat([c.drop(*DERIVED_COLUMNS) for c in chunks])
+        base_equal(ref, got, f"chunked({rows})")
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk_rows=st.integers(min_value=3, max_value=200),
+       read_rows=st.integers(min_value=3, max_value=200))
+def test_roundtrip_property_chunking_invariance(chunk_rows, read_rows):
+    """Property: footer chunking × read chunking never changes content."""
+    import tempfile
+    t = tg.gol(nprocs=2, iters=3, seed=11)
+    with tempfile.TemporaryDirectory() as d:
+        j = os.path.join(d, "t.jsonl")
+        write_jsonl(t, j)
+        ref = Trace.open(j)
+        p = os.path.join(d, "t.pack")
+        ref.save_pack(p, chunk_rows=chunk_rows)
+        base_equal(ref, read_pack(p), "whole")
+        chunks = list(get_reader("pack").iter_chunks(p, read_rows, None))
+        base_equal(ref, concat([c.drop(*DERIVED_COLUMNS) for c in chunks]),
+                   "chunked")
+
+
+def test_streaming_conversion_equals_eager(disk_trace, tmp_path):
+    ref, j = disk_trace
+    pe = str(tmp_path / "eager.pack")
+    ps = str(tmp_path / "stream.pack")
+    ref.save_pack(pe, chunk_rows=64)
+    Trace.open(j, streaming=True, chunk_rows=39,
+               cache=False).save_pack(ps, chunk_rows=64)
+    # the name tables may intern in different orders (sorted vs first-seen)
+    # — the logical events and the derived analyses must be identical
+    base_equal(read_pack(pe), read_pack(ps), "streaming conversion")
+    np.testing.assert_array_equal(
+        np.asarray(read_pack(pe).flat_profile()["time.exc"]),
+        np.asarray(read_pack(ps).flat_profile()["time.exc"]))
+
+
+def test_multi_append_equals_single(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p1 = str(tmp_path / "one.pack")
+    pn = str(tmp_path / "many.pack")
+    ref.save_pack(p1, chunk_rows=64)
+    w = PackWriter(pn, chunk_rows=64)
+    ev = ref.events
+    for lo in range(0, len(ev), 37):
+        w.append(ev.take(np.arange(lo, min(lo + 37, len(ev)))))
+    w.finish(sidecar=True)
+    assert read_footer(p1)["content_id"] == read_footer(pn)["content_id"]
+
+
+def test_float_timestamps_quantize_consistently(tmp_path):
+    """Float-ns sources (in-memory tracegen, HLO timelines) quantize to
+    integer ns at write time; the sidecar and every reopened analysis must
+    match a fresh derivation on the quantized events — never the float
+    originals."""
+    t = tg.gol(nprocs=2, iters=3, seed=9)  # float timestamps
+    assert np.asarray(t.events[TS]).dtype.kind == "f"
+    p = str(tmp_path / "f.pack")
+    t.save_pack(p)
+    got = read_pack(p)
+    ev = t.events.drop(*DERIVED_COLUMNS)
+    ev[TS] = np.asarray(ev[TS], np.int64)  # the storage quantization
+    want = Trace(ev)
+    np.testing.assert_array_equal(np.asarray(got.events[TS], np.int64),
+                                  np.asarray(want.events[TS], np.int64))
+    np.testing.assert_array_equal(
+        np.asarray(want.flat_profile()["time.exc"]),
+        np.asarray(got.flat_profile()["time.exc"]))
+
+
+def test_packwriter_context_manager_aborts_partial(tmp_path):
+    p = str(tmp_path / "x.pack")
+    with pytest.raises(RuntimeError, match="boom"):
+        with PackWriter(p) as w:
+            w.append(tg.gol(nprocs=2, iters=1).events)
+            raise RuntimeError("boom")
+    assert not os.path.exists(p), "aborted write must not land"
+    assert not any(f.startswith(".pack_") for f in os.listdir(tmp_path)), \
+        "spool dir must be cleaned up"
+
+
+def test_sniff_and_auto_open(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p = str(tmp_path / "weird_name.bin")  # no .pack extension
+    ref.save_pack(p)
+    assert sniff_format(p) == "pack"
+    base_equal(ref, Trace.open(p, format="auto"), "auto")
+
+
+def test_not_a_pack_raises(tmp_path):
+    bad = str(tmp_path / "x.pack")
+    with open(bad, "w") as f:
+        f.write("this is not a pack\n")
+    with pytest.raises(ValueError, match="not a pipitpack"):
+        read_footer(bad)
+    truncated = str(tmp_path / "y.pack")
+    with open(truncated, "wb") as f:
+        f.write(packmod.MAGIC + b"\x01\x02\x03")
+    with pytest.raises(ValueError):
+        read_footer(truncated)
+
+
+def test_int32_overflow_refused(tmp_path):
+    ev = EventFrame({TS: np.asarray([0, 1], np.int64),
+                     ET: np.asarray(["Enter", "Leave"], object),
+                     NAME: np.asarray(["f", "f"], object),
+                     PROC: np.asarray([2 ** 40, 2 ** 40], np.int64)})
+    with pytest.raises(ValueError, match="proc.*range"):
+        write_pack(ev, str(tmp_path / "o.pack"))
+
+
+# ---------------------------------------------------------------------------
+# structure sidecar provably skips derive_structure
+# ---------------------------------------------------------------------------
+
+def test_sidecar_skips_derive_eager(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p)
+    n0 = structure.DERIVE_CALLS
+    t = Trace.open(p)
+    prof = t.flat_profile()
+    assert structure.DERIVE_CALLS == n0, "sidecar reopen must not derive"
+    ref2 = Trace.open(p, sidecar=False)
+    assert not ref2._structured
+    prof2 = ref2.flat_profile()
+    assert structure.DERIVE_CALLS == n0 + 1, "no-sidecar open derives once"
+    np.testing.assert_array_equal(np.asarray(prof["time.exc"]),
+                                  np.asarray(prof2["time.exc"]))
+
+
+def test_sidecar_skips_derive_streaming(disk_trace, tmp_path):
+    ref, j = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=40)
+    n0 = structure.DERIVE_CALLS
+    st = Trace.open(p, streaming=True, chunk_rows=64, cache=False)
+    got = st.flat_profile()
+    assert structure.DERIVE_CALLS == n0, \
+        "pack streaming with sidecar must not derive per chunk"
+    want = Trace.open(j, streaming=True, chunk_rows=64,
+                      cache=False).flat_profile()
+    assert structure.DERIVE_CALLS > n0  # jsonl streaming derives per chunk
+    np.testing.assert_array_equal(np.asarray(want["time.exc"]),
+                                  np.asarray(got["time.exc"]))
+    assert list(map(str, want[NAME])) == list(map(str, got[NAME]))
+
+
+def test_streaming_filtered_parity_strips_stale_structure(disk_trace,
+                                                          tmp_path):
+    """A row-dropping plan invalidates chunk-localized sidecar columns —
+    results must still match jsonl streaming exactly (mask_frames strips,
+    the stitcher re-derives)."""
+    from repro.core.filters import Filter
+    ref, j = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=40)
+    f = Filter(NAME, "not-in", ["exchange_halo()"])
+    got = (Trace.open(p, streaming=True, chunk_rows=64, cache=False)
+           .query().filter(f).flat_profile())
+    want = (Trace.open(j, streaming=True, chunk_rows=64, cache=False)
+            .query().filter(f).flat_profile())
+    np.testing.assert_array_equal(np.asarray(want["time.exc"]),
+                                  np.asarray(got["time.exc"]))
+    assert list(map(str, want[NAME])) == list(map(str, got[NAME]))
+
+
+# ---------------------------------------------------------------------------
+# index pushdown provably skips chunks
+# ---------------------------------------------------------------------------
+
+def test_pushdown_time_window_skips_chunks(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=20)
+    n_chunks = len(read_footer(p)["chunks"])
+    assert n_chunks >= 4
+    st = Trace.open(p, streaming=True, chunk_rows=64, cache=False)
+    ts = np.asarray(ref.events[TS], np.float64)
+    t0 = float(ts.min())
+    t1 = t0 + (float(ts.max()) - t0) * 0.1
+    reset_io_stats()
+    got = st.query().slice_time(t0, t1, trim="within").flat_profile()
+    io = io_stats()
+    assert io["chunks_skipped"] > 0, "narrow window must skip chunks"
+    assert io["chunks_read"] < n_chunks
+    assert io["chunks_read"] + io["chunks_skipped"] == n_chunks
+    want = (ref.query().slice_time(t0, t1, trim="within")
+            .collect().flat_profile())
+    np.testing.assert_array_equal(np.asarray(want["time.exc"]),
+                                  np.asarray(got["time.exc"]))
+
+
+def test_pushdown_process_restriction_skips_chunks(tmp_path):
+    """Per-proc event runs land in different chunks of one pack; a proc
+    restriction skips the chunks whose proc set cannot match."""
+    t = tg.gol(nprocs=3, iters=4, seed=7)
+    j = str(tmp_path / "t.jsonl")
+    write_jsonl(t, j)
+    ref = Trace.open(j)
+    # sort by process so chunks have distinct proc sets
+    ev = ref.events.sort_by([PROC, TS])
+    p = str(tmp_path / "byproc.pack")
+    write_pack(ev, p, chunk_rows=20)
+    n_chunks = len(read_footer(p)["chunks"])
+    st = Trace.open(p, streaming=True, chunk_rows=64, cache=False)
+    reset_io_stats()
+    got = st.query().restrict_processes([0]).flat_profile()
+    io = io_stats()
+    assert io["chunks_skipped"] > 0
+    assert io["chunks_read"] < n_chunks
+    want = (Trace(ev).query().restrict_processes([0]).collect()
+            .flat_profile())
+    np.testing.assert_array_equal(np.asarray(want["time.exc"]),
+                                  np.asarray(got["time.exc"]))
+
+
+def test_shard_hint_from_footer(tmp_path):
+    from repro.readers.parallel import select_shards
+    paths = []
+    for pid in range(3):
+        t = tg.gol(nprocs=3, iters=2, seed=1).filter_processes([pid])
+        pth = str(tmp_path / f"part{pid}.pack")  # name carries no rank hint
+        t.save_pack(pth)
+        paths.append(pth)
+    kept = select_shards(paths, "pack", procs={1})
+    assert kept == [paths[1]]
+
+
+# ---------------------------------------------------------------------------
+# parallel work units
+# ---------------------------------------------------------------------------
+
+def test_plan_units_partition_rows(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=16)
+    rows = read_footer(p)["rows"]
+    units = plan_units_pack(p, 4)
+    assert units and all(isinstance(u, RowSpan) for u in units)
+    assert units[0].lo == 0 and units[-1].hi == rows
+    for a, b in zip(units, units[1:]):
+        assert a.hi == b.lo
+    # unit boundaries align to footer chunks
+    edges = {c["lo"] for c in read_footer(p)["chunks"]} | {rows}
+    for u in units:
+        assert u.lo in edges and u.hi in edges
+    # single chunk / single unit → unsplittable
+    assert plan_units_pack(p, 1) is None
+
+
+def test_parallel_units_byte_identical(disk_trace, tmp_path):
+    from repro.core import executor, registry
+    from repro.core.streaming import StreamingTrace
+    ref, _ = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=16)
+    serial = Trace.open(p, streaming=True, chunk_rows=64,
+                        cache=False).flat_profile()
+    h = StreamingTrace(p, chunk_rows=64, cache=False)
+    spec = registry.get_op("flat_profile")
+    for n_units in (2, 3, 5):
+        r = executor.execute_parallel(h, (), spec, (), {}, spec.streaming(),
+                                      n_units=n_units, use_pool=False)
+        np.testing.assert_array_equal(np.asarray(serial["time.exc"]),
+                                      np.asarray(r["time.exc"]))
+        assert list(map(str, serial[NAME])) == list(map(str, r[NAME]))
+
+
+def test_unit_frames_rowspan_covers_exactly(disk_trace, tmp_path):
+    from repro.core.executor import _unit_frames
+    ref, _ = disk_trace
+    p = str(tmp_path / "t.pack")
+    ref.save_pack(p, chunk_rows=16)
+    units = plan_units_pack(p, 3)
+    frames = [f.drop(*DERIVED_COLUMNS) for u in units
+              for f in _unit_frames(u, "pack", 29, None, {})]
+    base_equal(ref, concat(frames), "rowspan partition")
+
+
+# ---------------------------------------------------------------------------
+# plan-result cache: content identity
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_keys_pack_by_content_id(disk_trace, tmp_path):
+    ref, _ = disk_trace
+    p = str(tmp_path / "a.pack")
+    ref.save_pack(p)
+    plancache.clear()
+    r1 = Trace.open(p, streaming=True, chunk_rows=64).flat_profile()
+    hits0 = plancache.stats()["hits"]
+    # a byte-identical copy at another path/mtime: same content id → hit
+    p2 = str(tmp_path / "b.pack")
+    shutil.copy(p, p2)
+    r2 = Trace.open(p2, streaming=True, chunk_rows=64).flat_profile()
+    assert plancache.stats()["hits"] == hits0 + 1
+    assert r2 is r1
+    # different content at the same path → miss
+    ref.query().restrict_processes([0]).collect().save_pack(p2)
+    r3 = Trace.open(p2, streaming=True, chunk_rows=64).flat_profile()
+    assert plancache.stats()["hits"] == hits0 + 1
+    assert r3 is not r1
+    plancache.clear()
+
+
+def test_content_id_of_non_pack_is_none(tmp_path):
+    j = str(tmp_path / "x.jsonl")
+    with open(j, "w") as f:
+        f.write('{"ts": 1, "et": "Enter", "name": "a", "proc": 0}\n')
+    assert packmod.content_id(j) is None
+
+
+# ---------------------------------------------------------------------------
+# generation / materialization integration
+# ---------------------------------------------------------------------------
+
+def test_big_trace_pack_equals_jsonl(tmp_path):
+    from repro.tracegen import big_trace
+    pj = big_trace(str(tmp_path / "j"), nprocs=2, events_per_proc=2000,
+                   format="jsonl")
+    pp = big_trace(str(tmp_path / "p"), nprocs=2, events_per_proc=2000,
+                   format="pack")
+    sj = Trace.open(pj, streaming=True, cache=False)
+    sp = Trace.open(pp, streaming=True, cache=False)
+    fj, fp = sj.flat_profile(), sp.flat_profile()
+    np.testing.assert_array_equal(np.asarray(fj["time.exc"]),
+                                  np.asarray(fp["time.exc"]))
+    assert list(map(str, fj[NAME])) == list(map(str, fp[NAME]))
+    np.testing.assert_array_equal(sj.comm_matrix(cache=False),
+                                  sp.comm_matrix(cache=False))
+    # pack shards carry sidecars + footers
+    for p in pp:
+        f = read_footer(p)
+        assert f["sidecar"] and f["chunks"]
+
+
+def test_materialize_and_multi_shard_open(tmp_path):
+    """Eager multi-shard pack open strips per-shard sidecars before the
+    merged sort (indices would be garbage) and still analyzes correctly."""
+    from repro.tracegen import big_trace
+    pp = big_trace(str(tmp_path / "p"), nprocs=2, events_per_proc=1500,
+                   format="pack")
+    merged = Trace.open(pp)  # read_parallel path
+    assert MATCH not in merged.events
+    st = Trace.open(pp, streaming=True, cache=False)
+    np.testing.assert_array_equal(
+        np.asarray(merged.flat_profile()["time.exc"]),
+        np.asarray(st.flat_profile()["time.exc"]))
+    mat = st.materialize()
+    assert MATCH not in mat.events or mat._structured
+    assert len(mat) == len(merged)

@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Convert traces of any registered format to pipitpack (convert once,
+analyze fast).
+
+Each input (file, OTF2-style archive directory, or ``rank_*`` shard) is
+converted independently to ``<stem>.pack`` — per-shard packs keep the
+per-location stream layout the parallel driver exploits.  Conversion
+streams chunk by chunk (bounded memory); ``--sidecar`` (default on)
+additionally stores the precomputed structure sidecar so reopening skips
+``derive_structure`` entirely.
+
+Usage::
+
+    PYTHONPATH=src python tools/pack.py TRACE [TRACE ...]
+        [-o OUT]            # output file (single input) or directory
+        [--format auto]     # source format (default: sniff)
+        [--chunk-rows N]    # footer index granularity (default 250k)
+        [--no-sidecar]      # skip the structure sidecar
+        [--verify]          # reopen and compare a flat profile digest
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def _out_path(inp: str, out: str | None, many: bool) -> str:
+    stem = os.path.basename(inp.rstrip(os.sep))
+    for ext in (".jsonl", ".json", ".csv", ".otf2"):
+        if stem.lower().endswith(ext):
+            stem = stem[: -len(ext)]
+            break
+    if out is None:
+        return os.path.join(os.path.dirname(inp) or ".", stem + ".pack")
+    if many or os.path.isdir(out):
+        os.makedirs(out, exist_ok=True)
+        return os.path.join(out, stem + ".pack")
+    return out
+
+
+def _digest(handle) -> str:
+    import numpy as np
+    prof = handle.flat_profile()
+    h = hashlib.sha256()
+    h.update("\x00".join(map(str, prof["Name"])).encode())
+    h.update(np.ascontiguousarray(
+        np.asarray(prof["time.exc"], np.float64)).tobytes())
+    return h.hexdigest()
+
+
+def _digest_source(inp: str, fmt: str) -> str:
+    """Digest of the source with pack storage quantization applied: packs
+    store integer-ns timestamps (truncation, the repo-wide text-writer
+    convention), so float-ns sources — e.g. HLO modeled timelines — must
+    be compared post-quantization or the digest would mismatch by design."""
+    import numpy as np
+    from repro.core.constants import TS
+    from repro.core.trace import Trace
+    t = Trace.open(inp, format=fmt, streaming=True,
+                   cache=False).materialize()
+    ev = t.events
+    ev[TS] = np.asarray(ev[TS], np.int64)
+    return _digest(Trace(ev))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("inputs", nargs="+", help="trace files / archives")
+    ap.add_argument("-o", "--out", help="output .pack file (single input) "
+                    "or directory (several)")
+    ap.add_argument("--format", default="auto",
+                    help="source format (default: sniff per input)")
+    ap.add_argument("--chunk-rows", type=int, default=None,
+                    help="rows per footer-index chunk (default 250000)")
+    ap.add_argument("--no-sidecar", action="store_true",
+                    help="do not store the structure sidecar")
+    ap.add_argument("--verify", action="store_true",
+                    help="reopen each pack and check the flat-profile "
+                    "digest against the source")
+    args = ap.parse_args(argv)
+
+    from repro.core.trace import Trace
+
+    many = len(args.inputs) > 1
+    failures = 0
+    for inp in args.inputs:
+        dst = _out_path(inp, args.out, many)
+        t0 = time.time()
+        src = Trace.open(inp, format=args.format, streaming=True,
+                         cache=False)
+        src.save_pack(dst, chunk_rows=args.chunk_rows,
+                      sidecar=not args.no_sidecar)
+        dt = time.time() - t0
+        src_b = sum(
+            os.path.getsize(os.path.join(r, f))
+            for r, _d, fs in os.walk(inp) for f in fs
+        ) if os.path.isdir(inp) else os.path.getsize(inp)
+        print(f"{inp} -> {dst}  ({src_b / 1e6:.1f} MB -> "
+              f"{os.path.getsize(dst) / 1e6:.1f} MB, {dt:.1f}s)")
+        if args.verify:
+            a = _digest_source(inp, args.format)
+            b = _digest(Trace.open(dst, streaming=True, cache=False))
+            ok = a == b
+            print(f"  verify: {'OK' if ok else 'DIGEST MISMATCH'}")
+            failures += 0 if ok else 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
