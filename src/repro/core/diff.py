@@ -768,10 +768,12 @@ class TraceSet:
                                       processes=processes, **kw)
                        for p in paths]
             # one pool for the whole set whenever members will run parallel
-            # (processes=N, or executor="parallel" passed through **kw)
+            # (processes=N, or executor="parallel" passed through **kw) —
+            # obtained from the shared scheduler, so the set's pool is also
+            # the pool every other same-sized consumer in the process uses
             if members and members[0].wants_parallel():
-                from ..parallel_util import SharedPool
-                shared = SharedPool(processes)
+                from .scheduler import get_scheduler
+                shared = get_scheduler().spawn_pool(processes)
                 for m in members:
                     m._pool = shared
             return cls(members, labels=labels)

@@ -50,7 +50,7 @@ from .streaming import (CallBlock, CallStitcher, Chunk, GlobalNames,
                         StreamAgg, StreamContext, StreamStats,
                         StreamingUnsupported, _steps_hints, fold_frames,
                         iter_chunks_fallback, mask_frames, stats_from_frames)
-from ..parallel_util import SharedPool, resolve_processes, spawn_unsafe_reason
+from ..parallel_util import resolve_processes, spawn_unsafe_reason
 
 __all__ = ["execute_parallel", "plan_units", "ParallelDegraded"]
 
@@ -364,7 +364,8 @@ def parallel_stats(handle, steps: Sequence) -> StreamStats:
     if reason is not None:
         raise ParallelDegraded(reason)
     if handle._pool is None:
-        handle._pool = SharedPool(n)
+        from .scheduler import get_scheduler
+        handle._pool = get_scheduler().spawn_pool(n)
     payloads = [("stats", u, handle.format, handle.chunk_rows,
                  handle.reader_kwargs, tuple(steps), None, (), {}, None,
                  handle.label) for u in units]
@@ -411,7 +412,12 @@ def execute_parallel(handle, steps: Sequence, spec: registry.OpSpec,
         if reason is not None:
             raise ParallelDegraded(reason)
         if handle._pool is None:
-            handle._pool = SharedPool(n)
+            # pool ownership lives in the shared scheduler: every handle
+            # (and every trace-query service session) asking for n workers
+            # fans into the same spawn pool, so worker startup is paid once
+            # per process, not once per handle
+            from .scheduler import get_scheduler
+            handle._pool = get_scheduler().spawn_pool(n)
         try:
             handle._pool.get()
         except RuntimeError as e:  # pragma: no cover - raced __main__ state

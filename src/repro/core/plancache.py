@@ -39,8 +39,9 @@ frame/array in place would be visible to every later hit.  Call with
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -48,54 +49,149 @@ __all__ = ["lookup", "store", "plan_key", "clear", "configure", "stats"]
 
 _MAX_ENTRIES = 128
 _ENABLED = True
+_TENANT_QUOTA: Optional[int] = None  # max entries per tenant; None = no cap
 _CACHE: "OrderedDict[str, Any]" = OrderedDict()
+_OWNER: Dict[str, str] = {}          # key -> tenant (tagged entries only)
+_TENANT_KEYS: Dict[str, "OrderedDict[str, None]"] = {}  # tenant -> key LRU
 _HITS = 0
 _MISSES = 0
+_EVICTIONS = 0
+_TENANT_STATS: Dict[str, Dict[str, int]] = {}
+
+# One process-wide reentrant lock guards every counter and both index maps:
+# the trace-query service looks up / stores from worker threads while the
+# asyncio loop reads stats(), and library calls can race them from the main
+# thread.  All critical sections are tiny (dict ops), so a single lock
+# cannot become the bottleneck next to the plan executions it memoizes.
+_LOCK = threading.RLock()
 
 
 class _Undigestable(Exception):
     """A key component has no exact digest; bypass the cache."""
 
 
+def _tenant_stats(tenant: str) -> Dict[str, int]:
+    st = _TENANT_STATS.get(tenant)
+    if st is None:
+        st = _TENANT_STATS[tenant] = {"entries": 0, "hits": 0, "misses": 0,
+                                      "evictions": 0}
+    return st
+
+
+def _forget(key: str) -> None:
+    """Drop ``key``'s tenant bookkeeping (caller already popped _CACHE)."""
+    tenant = _OWNER.pop(key, None)
+    if tenant is not None:
+        keys = _TENANT_KEYS.get(tenant)
+        if keys is not None:
+            keys.pop(key, None)
+        st = _tenant_stats(tenant)
+        st["entries"] = max(st["entries"] - 1, 0)
+        st["evictions"] += 1
+
+
+def _evict_oldest() -> None:
+    global _EVICTIONS
+    key, _ = _CACHE.popitem(last=False)
+    _forget(key)
+    _EVICTIONS += 1
+
+
 def configure(enabled: Optional[bool] = None,
-              max_entries: Optional[int] = None) -> None:
+              max_entries: Optional[int] = None,
+              tenant_quota: Optional[int] = None) -> None:
     """Adjust the cache globally (``enabled=False`` disables lookups and
-    stores; ``max_entries`` bounds the LRU)."""
-    global _ENABLED, _MAX_ENTRIES
-    if enabled is not None:
-        _ENABLED = bool(enabled)
-    if max_entries is not None:
-        _MAX_ENTRIES = max(int(max_entries), 1)
-        while len(_CACHE) > _MAX_ENTRIES:
-            _CACHE.popitem(last=False)
+    stores; ``max_entries`` bounds the LRU; ``tenant_quota`` caps the
+    entries any one tenant tag may hold — 0/negative removes the cap)."""
+    global _ENABLED, _MAX_ENTRIES, _TENANT_QUOTA
+    with _LOCK:
+        if enabled is not None:
+            _ENABLED = bool(enabled)
+        if max_entries is not None:
+            _MAX_ENTRIES = max(int(max_entries), 1)
+            while len(_CACHE) > _MAX_ENTRIES:
+                _evict_oldest()
+        if tenant_quota is not None:
+            _TENANT_QUOTA = int(tenant_quota) if tenant_quota > 0 else None
+            if _TENANT_QUOTA is not None:
+                for tenant in list(_TENANT_KEYS):
+                    _shrink_tenant(tenant)
+
+
+def _shrink_tenant(tenant: str) -> None:
+    global _EVICTIONS
+    keys = _TENANT_KEYS.get(tenant)
+    if keys is None or _TENANT_QUOTA is None:
+        return
+    while len(keys) > _TENANT_QUOTA:
+        key, _ = keys.popitem(last=False)
+        _CACHE.pop(key, None)
+        _OWNER.pop(key, None)
+        st = _tenant_stats(tenant)
+        st["entries"] = max(st["entries"] - 1, 0)
+        st["evictions"] += 1
+        _EVICTIONS += 1
 
 
 def clear() -> None:
-    """Drop every cached result (explicit invalidation)."""
-    _CACHE.clear()
+    """Drop every cached result (explicit invalidation).  Counters and
+    per-tenant usage tallies survive; only the entries go."""
+    with _LOCK:
+        _CACHE.clear()
+        _OWNER.clear()
+        _TENANT_KEYS.clear()
+        for st in _TENANT_STATS.values():
+            st["entries"] = 0
 
 
 def stats() -> dict:
-    """Cache counters: entries, hits, misses (benchmarks report these)."""
-    return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES}
+    """Cache counters: entries, hits, misses, evictions, limits, and — for
+    entries stored under a tenant tag (the trace-query service does this) —
+    per-tenant usage.  The service exposes this verbatim on ``/stats``."""
+    with _LOCK:
+        return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES,
+                "evictions": _EVICTIONS, "max_entries": _MAX_ENTRIES,
+                "enabled": _ENABLED, "tenant_quota": _TENANT_QUOTA,
+                "tenants": {t: dict(st) for t, st in _TENANT_STATS.items()}}
 
 
-def lookup(key: str) -> Tuple[bool, Any]:
-    """(hit, value) for ``key``; a hit refreshes LRU order."""
+def lookup(key: str, tenant: Optional[str] = None) -> Tuple[bool, Any]:
+    """(hit, value) for ``key``; a hit refreshes LRU order.  ``tenant``
+    attributes the hit/miss to that tenant's usage counters."""
     global _HITS, _MISSES
-    if key in _CACHE:
-        _CACHE.move_to_end(key)
-        _HITS += 1
-        return True, _CACHE[key]
-    _MISSES += 1
-    return False, None
+    with _LOCK:
+        if key in _CACHE:
+            _CACHE.move_to_end(key)
+            if tenant is not None:
+                keys = _TENANT_KEYS.get(tenant)
+                if keys is not None and key in keys:
+                    keys.move_to_end(key)
+                _tenant_stats(tenant)["hits"] += 1
+            _HITS += 1
+            return True, _CACHE[key]
+        _MISSES += 1
+        if tenant is not None:
+            _tenant_stats(tenant)["misses"] += 1
+        return False, None
 
 
-def store(key: str, value: Any) -> None:
-    _CACHE[key] = value
-    _CACHE.move_to_end(key)
-    while len(_CACHE) > _MAX_ENTRIES:
-        _CACHE.popitem(last=False)
+def store(key: str, value: Any, tenant: Optional[str] = None) -> None:
+    """Insert ``key``.  With a ``tenant`` tag the entry counts toward that
+    tenant's quota (oldest tagged entry evicted beyond it); untagged
+    entries (plain library calls) only face the global LRU bound."""
+    with _LOCK:
+        if key in _CACHE:
+            _CACHE[key] = value
+            _CACHE.move_to_end(key)
+            return
+        _CACHE[key] = value
+        if tenant is not None:
+            _OWNER[key] = tenant
+            _TENANT_KEYS.setdefault(tenant, OrderedDict())[key] = None
+            _tenant_stats(tenant)["entries"] += 1
+            _shrink_tenant(tenant)
+        while len(_CACHE) > _MAX_ENTRIES:
+            _evict_oldest()
 
 
 # ---------------------------------------------------------------------------

@@ -172,11 +172,8 @@ def build_compressed_dp_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     partial-manual region; jax 0.8.2) — upstream bug, reproducer kept in
     EXPERIMENTS.md §Perf; the production path remains FSDP-over-(pod,data).
     """
-    try:
-        from jax import shard_map
-    except ImportError:                                  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
     from ..distributed.compression import pairwise_compressed_mean
+    from ..distributed.sharding import shard_map_compat
 
     assert "pod" in mesh.shape and shape.kind == "train"
     n_pods = mesh.shape["pod"]
@@ -227,9 +224,9 @@ def build_compressed_dp_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                     {k: (P("pod") if getattr(v, "ndim", 0) else P())
                      for k, v in batch.items()})
         out_specs = in_specs[:2] + (P(),)
-        return shard_map(per_pod, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False,
-                         axis_names={"pod"})(params, opt_state, batch)
+        return shard_map_compat(per_pod, mesh, in_specs, out_specs,
+                                manual_axes=frozenset({"pod"})
+                                )(params, opt_state, batch)
 
     return Cell(
         name=f"{cfg.name}:{shape.name}:int8dp", fn=train_step,

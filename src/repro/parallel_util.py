@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import multiprocessing as mp
 import os
+import threading
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 __all__ = ["spawn_pool_ok", "spawn_unsafe_reason", "resolve_processes",
@@ -93,17 +94,22 @@ class SharedPool:
     def __init__(self, processes: Optional[int] = None):
         self.processes = resolve_processes(processes)
         self._pool = None
+        self._lock = threading.Lock()
 
     def get(self):
         """The live pool, created on first use.  Raises RuntimeError with
         the spawn-safety reason when a pool cannot start — callers catch it
-        and degrade to serial with that reason in the warning."""
-        if self._pool is None:
-            reason = spawn_unsafe_reason()
-            if reason is not None:
-                raise RuntimeError(reason)
-            self._pool = mp.get_context("spawn").Pool(self.processes)
-        return self._pool
+        and degrade to serial with that reason in the warning.  Safe to
+        call from several threads (the trace-query service's worker lanes
+        share one pool); ``Pool.map`` itself is thread-safe, only the lazy
+        creation needs the lock."""
+        with self._lock:
+            if self._pool is None:
+                reason = spawn_unsafe_reason()
+                if reason is not None:
+                    raise RuntimeError(reason)
+                self._pool = mp.get_context("spawn").Pool(self.processes)
+            return self._pool
 
     def map(self, fn: Callable[[Any], Any], items: Sequence) -> List[Any]:
         return self.get().map(fn, list(items))

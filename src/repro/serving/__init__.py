@@ -1,3 +1,24 @@
-from .engine import Request, ServeEngine
+"""Serving layer: the jax batch engine and the trace-query service.
 
-__all__ = ["Request", "ServeEngine"]
+Attribute access is lazy: ``repro.serving.engine`` needs jax, while the
+trace-query service (:mod:`~repro.serving.tracequery`,
+:mod:`~repro.serving.client`, :mod:`~repro.serving.protocol`) is
+stdlib+numpy only — importing one must not drag in the other's
+dependencies.
+"""
+
+__all__ = ["Request", "ServeEngine", "TraceService", "TraceServer",
+           "ServiceClient"]
+
+
+def __getattr__(name):
+    if name in ("Request", "ServeEngine"):
+        from . import engine
+        return getattr(engine, name)
+    if name in ("TraceService", "TraceServer"):
+        from . import tracequery
+        return getattr(tracequery, name)
+    if name == "ServiceClient":
+        from .client import ServiceClient
+        return ServiceClient
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

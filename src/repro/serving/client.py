@@ -1,0 +1,261 @@
+"""Client for the trace-query service: the library's query API, remote.
+
+A script written against the library —
+
+    trace = Trace.open("run.pipitpack", streaming=True)
+    prof = trace.query().slice_time(t0, t1).flat_profile()
+
+— points at a running :mod:`~repro.serving.tracequery` server with a
+one-line change::
+
+    client = ServiceClient("127.0.0.1", 8731, tenant="alice")
+    trace = client.open("run.pipitpack", streaming=True)
+    prof = trace.query().slice_time(t0, t1).flat_profile()
+
+:class:`RemoteQuery` mirrors the ``TraceQuery`` builder (``filter`` /
+``slice_time`` / ``restrict_processes`` and every registered terminal op,
+resolved through the same :mod:`~repro.core.registry`), but nothing runs
+locally: the plan is serialized with :mod:`~repro.serving.protocol`,
+executed server-side against the pooled handle, and the columnar result
+decoded back into the same ``EventFrame``/ndarray types a library call
+returns.  Per-call ``cache=`` / ``lane=`` / ``digest_only=`` kwargs map
+onto the service's cache, admission lanes, and digest-only responses.
+
+Transport is stdlib ``http.client`` with a persistent keep-alive
+connection; the client is thread-compatible (a lock serializes requests
+on the shared connection).
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core import registry
+from ..core.filters import Filter
+from . import protocol
+
+__all__ = ["RemoteError", "ServiceClient", "RemoteTrace", "RemoteTraceSet",
+           "RemoteQuery"]
+
+
+class RemoteError(RuntimeError):
+    """A non-2xx service response; carries the HTTP status and the
+    service's machine-readable error code."""
+
+    def __init__(self, status: int, code: str, message: str):
+        super().__init__(f"[{status} {code}] {message}")
+        self.status = status
+        self.code = code
+
+
+class ServiceClient:
+    """One connection to a trace-query server (see module docstring)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8731,
+                 tenant: Optional[str] = None, timeout: float = 120.0):
+        self.host = host
+        self.port = int(port)
+        self.tenant = tenant
+        self.timeout = timeout
+        self._lock = threading.Lock()
+        self._conn: Optional[http.client.HTTPConnection] = None
+        #: response metadata of the most recent query (digest, cached,
+        #: coalesced, elapsed_ms) — handy in tests and benchmarks
+        self.last_meta: Dict[str, Any] = {}
+
+    # -- transport ---------------------------------------------------------
+    def _request(self, method: str, path: str,
+                 payload: Optional[dict] = None) -> dict:
+        body = json.dumps(payload).encode() if payload is not None else None
+        with self._lock:
+            for attempt in (0, 1):
+                if self._conn is None:
+                    self._conn = http.client.HTTPConnection(
+                        self.host, self.port, timeout=self.timeout)
+                try:
+                    self._conn.request(
+                        method, path, body=body,
+                        headers={"Content-Type": "application/json"})
+                    resp = self._conn.getresponse()
+                    data = resp.read()
+                    break
+                except (http.client.HTTPException, ConnectionError,
+                        BrokenPipeError, OSError):
+                    # stale keep-alive (server restarted / idle timeout):
+                    # reconnect once, then give up
+                    self._close_locked()
+                    if attempt:
+                        raise
+        try:
+            out = json.loads(data.decode("utf-8"))
+        except ValueError:
+            raise RemoteError(resp.status, "bad_response",
+                              f"non-JSON response ({len(data)} bytes)")
+        if resp.status >= 400 or not out.get("ok", False):
+            err = out.get("error") or {}
+            raise RemoteError(resp.status, err.get("code", "error"),
+                              err.get("message", "request failed"))
+        return out
+
+    def _close_locked(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+            self._conn = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._close_locked()
+
+    def __enter__(self) -> "ServiceClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- service surface ---------------------------------------------------
+    def health(self) -> dict:
+        return self._request("GET", "/health")
+
+    def stats(self) -> dict:
+        return self._request("GET", "/stats")
+
+    def ops(self) -> List[dict]:
+        return self._request("GET", "/ops")["ops"]
+
+    def shutdown(self, grace: Optional[float] = None) -> dict:
+        payload = {} if grace is None else {"grace": grace}
+        return self._request("POST", "/shutdown", payload)
+
+    def open(self, path, format: str = "auto", streaming: bool = False,
+             chunk_rows: Optional[int] = None,
+             processes: Optional[int] = None,
+             executor: str = "auto") -> "RemoteTrace":
+        """A remote handle over ``path`` — the signature of
+        ``Trace.open``, minus reader kwargs.  Nothing opens until the
+        first query; the server pools the actual handle."""
+        paths = ([str(p) for p in path]
+                 if isinstance(path, (list, tuple)) else [str(path)])
+        spec = {"mode": "trace", "paths": paths, "format": format,
+                "streaming": streaming, "chunk_rows": chunk_rows,
+                "processes": processes, "executor": executor}
+        return RemoteTrace(self, spec)
+
+    def open_set(self, paths: Sequence, format: str = "auto",
+                 processes: Optional[int] = None,
+                 labels: Optional[Sequence[str]] = None,
+                 streaming: bool = False,
+                 chunk_rows: Optional[int] = None) -> "RemoteTraceSet":
+        """A remote ``TraceSet`` over per-run paths (for the diff /
+        regression comparison ops)."""
+        spec = {"mode": "set", "paths": [str(p) for p in paths],
+                "format": format, "processes": processes,
+                "labels": list(labels) if labels is not None else None,
+                "streaming": streaming, "chunk_rows": chunk_rows}
+        return RemoteTraceSet(self, spec)
+
+    # -- execution ---------------------------------------------------------
+    def _run(self, open_spec: dict, steps: List[dict], op: str, args,
+             kwargs, *, cache: Optional[bool], lane: Optional[str],
+             digest_only: bool) -> Any:
+        payload = {
+            "open": open_spec,
+            "steps": steps,
+            "op": op,
+            "args": [protocol.encode_value(a) for a in args],
+            "kwargs": {str(k): protocol.encode_value(v)
+                       for k, v in kwargs.items()},
+        }
+        if self.tenant is not None:
+            payload["tenant"] = self.tenant
+        if cache is not None:
+            payload["cache"] = cache
+        if lane is not None:
+            payload["lane"] = lane
+        if digest_only:
+            payload["digest_only"] = True
+        endpoint = "/setquery" if open_spec["mode"] == "set" else "/query"
+        out = self._request("POST", endpoint, payload)
+        self.last_meta = {k: out.get(k) for k in
+                          ("digest", "cached", "coalesced", "elapsed_ms",
+                           "tenant")}
+        if digest_only:
+            return out["digest"]
+        return protocol.decode_value(out["result"])
+
+
+class RemoteQuery:
+    """A lazy plan executed server-side — same builder surface as
+    ``TraceQuery`` (and ``SetQuery`` when built from a remote set)."""
+
+    def __init__(self, client: ServiceClient, open_spec: dict,
+                 steps: Optional[List[dict]] = None):
+        self._client = client
+        self._open = open_spec
+        self._steps: List[dict] = list(steps or [])
+
+    def _with(self, step: dict) -> "RemoteQuery":
+        return RemoteQuery(self._client, self._open, self._steps + [step])
+
+    def filter(self, f: Filter) -> "RemoteQuery":
+        return self._with({"k": "filter", "filter": protocol.encode_filter(f)})
+
+    def slice_time(self, start: float, end: float,
+                   trim: str = "overlap") -> "RemoteQuery":
+        return self._with({"k": "slice_time", "start": float(start),
+                           "end": float(end), "trim": trim})
+
+    def restrict_processes(self, procs: Sequence[int]) -> "RemoteQuery":
+        return self._with({"k": "restrict_processes",
+                           "procs": [int(p) for p in procs]})
+
+    filter_processes = restrict_processes
+
+    def run(self, op_name: str, *args: Any, cache: Optional[bool] = None,
+            lane: Optional[str] = None, digest_only: bool = False,
+            **kwargs: Any) -> Any:
+        """Execute a registered terminal op server-side; returns the
+        decoded result (or its digest with ``digest_only=True``)."""
+        return self._client._run(self._open, self._steps, op_name, args,
+                                 kwargs, cache=cache, lane=lane,
+                                 digest_only=digest_only)
+
+    def __getattr__(self, name: str):
+        return registry.terminal_op(name, self.run, "RemoteQuery")
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"RemoteQuery({self._open['mode']}, "
+                f"{len(self._steps)} step(s))")
+
+
+class RemoteTrace:
+    """Remote stand-in for an opened ``Trace``/``StreamingTrace``."""
+
+    def __init__(self, client: ServiceClient, open_spec: dict):
+        self._client = client
+        self._open = open_spec
+
+    def query(self) -> RemoteQuery:
+        return RemoteQuery(self._client, self._open)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RemoteTrace({self._open['paths']!r})"
+
+
+class RemoteTraceSet:
+    """Remote stand-in for a ``TraceSet`` (comparison/diff ops)."""
+
+    def __init__(self, client: ServiceClient, open_spec: dict):
+        self._client = client
+        self._open = open_spec
+
+    def query(self) -> RemoteQuery:
+        return RemoteQuery(self._client, self._open)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RemoteTraceSet({self._open['paths']!r})"

@@ -1,0 +1,711 @@
+"""Multi-tenant trace-query service: an asyncio server over pack-backed
+trace handles.
+
+The library's scripting model is one process per analyst: every notebook
+re-opens the trace, re-pays reader startup, and keeps its own plan cache.
+This module turns that into a shared service — one long-lived process
+holds a pool of open :class:`~repro.core.trace.Trace` /
+:class:`~repro.core.streaming.StreamingTrace` handles (pack mmaps stay
+warm), executes client-submitted plans against them, and returns columnar
+results over a stdlib-only JSON/HTTP protocol
+(:mod:`repro.serving.protocol`).  Three mechanisms make it multi-tenant
+rather than just remote:
+
+* **handle pool** — handles are keyed by *content identity* (the pack
+  content id where available, ``(path, size, mtime, inode)`` otherwise)
+  plus open parameters, LRU-bounded, and revalidated per request: rewrite
+  a pack on disk and the next query transparently reopens it.  Every
+  session over the same pack shares one mmap and one set of structure
+  sidecars.
+* **single-flight coalescing** — identical in-flight plans (same source
+  identity, steps, op, arguments) are executed **once**; concurrent
+  duplicates await the same future.  The key is the plan-cache digest of
+  the wire request, so coalescing composes with the shared
+  :mod:`~repro.core.plancache`: first request executes, concurrent ones
+  coalesce, later ones hit the cache.
+* **admission control** — a bounded number of requests may be admitted at
+  once, each tenant has a concurrency limit and a plan-cache quota
+  (:func:`repro.core.plancache.configure`), and execution threads come
+  from the shared :class:`~repro.core.scheduler.Scheduler` lanes:
+  interactive (windowed) queries run on reserved threads a bulk full scan
+  can never occupy.  Saturation is an immediate HTTP 429, not an
+  unbounded queue.
+
+The HTTP surface is deliberately tiny (``asyncio.start_server`` + manual
+HTTP/1.1, keep-alive): ``POST /query`` and ``POST /setquery`` execute
+plans, ``GET /stats`` exposes service/cache/scheduler counters, ``GET
+/ops`` lists the registered terminal ops, ``GET /health`` answers
+liveness, and ``POST /shutdown`` drains gracefully (in-flight work
+finishes; new queries get 503).  :mod:`repro.serving.client` wraps the
+protocol in the library's own query-chain API.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import hashlib
+import json
+import threading
+import time
+import traceback
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core import plancache, registry
+from ..core.scheduler import Scheduler, get_scheduler
+from . import protocol
+from .protocol import ProtocolError, canonical_json
+
+__all__ = ["ServiceError", "HandlePool", "TraceService", "TraceServer",
+           "serve"]
+
+_JSON_HEADERS = "Content-Type: application/json\r\n"
+
+
+class ServiceError(Exception):
+    """A request the service refuses; carries the HTTP status and a stable
+    machine-readable code clients can branch on."""
+
+    def __init__(self, status: int, code: str, message: str):
+        super().__init__(message)
+        self.status = status
+        self.code = code
+
+
+# ---------------------------------------------------------------------------
+# handle pool
+# ---------------------------------------------------------------------------
+
+class _Handle:
+    """One open trace source: the handle object plus the bookkeeping the
+    pool and the executor need (identity for staleness checks, a lock for
+    sources whose lazy materialization mutates shared state)."""
+
+    def __init__(self, key: str, kind: str, obj, ident: tuple):
+        self.key = key
+        self.kind = kind            # "trace" | "stream" | "set"
+        self.obj = obj
+        self.ident = ident          # _paths_token at open time
+        self.lock = threading.Lock()
+        self.opened_at = time.time()
+        self.uses = 0
+
+    def query(self):
+        return self.obj.query()
+
+    @property
+    def serialized(self) -> bool:
+        """Whether executions on this handle must hold :attr:`lock`.
+
+        Eager traces materialize derived structure *in place* on first
+        use, and set preparation does the same per member — concurrent
+        runs would race those writes.  Streaming handles only carry
+        idempotent caches (chunk stats, work-unit plans), so concurrent
+        plans over one pack handle are safe — that is what lets the
+        interactive lane make progress while bulk scans hammer the same
+        pack.
+        """
+        return self.kind != "stream"
+
+
+def _normalize_open(spec: Any) -> dict:
+    """Validate and normalize a wire ``open`` spec into canonical form."""
+    if isinstance(spec, str):
+        spec = {"path": spec}
+    if not isinstance(spec, dict):
+        raise ProtocolError(f"open spec must be a path or object, "
+                            f"got {type(spec).__name__}")
+    paths = spec.get("paths")
+    if paths is None:
+        p = spec.get("path")
+        if p is None:
+            raise ProtocolError('open spec needs "path" or "paths"')
+        paths = [p]
+    if (not isinstance(paths, (list, tuple)) or not paths
+            or not all(isinstance(p, str) for p in paths)):
+        raise ProtocolError(f'open spec "paths" must be a non-empty list '
+                            f'of strings, got {paths!r}')
+    mode = spec.get("mode", "trace")
+    if mode not in ("trace", "set"):
+        raise ProtocolError(f'open mode must be "trace" or "set", '
+                            f'got {mode!r}')
+    labels = spec.get("labels")
+    if labels is not None and (not isinstance(labels, (list, tuple))
+                               or len(labels) != len(paths)):
+        raise ProtocolError('"labels" must match "paths" in length')
+    out = {
+        "mode": mode,
+        "paths": [str(p) for p in paths],
+        "format": str(spec.get("format", "auto")),
+        "streaming": bool(spec.get("streaming", False)),
+        "chunk_rows": (int(spec["chunk_rows"])
+                       if spec.get("chunk_rows") is not None else None),
+        "processes": (int(spec["processes"])
+                      if spec.get("processes") is not None else None),
+        "executor": str(spec.get("executor", "auto")),
+        "labels": [str(x) for x in labels] if labels is not None else None,
+    }
+    return out
+
+
+class HandlePool:
+    """LRU pool of open trace handles keyed by open spec + content
+    identity.
+
+    ``get()`` revalidates the stored identity (pack content id / stat
+    token) on every call — a handle whose backing files changed on disk
+    is silently reopened, so long-lived services never serve stale mmaps.
+    Opens run under the pool lock (they mutate the LRU); callers should
+    invoke ``get()`` off the event loop for sources with slow opens.
+    """
+
+    def __init__(self, max_handles: int = 8):
+        self.max_handles = max(int(max_handles), 1)
+        self._lock = threading.Lock()
+        self._handles: "OrderedDict[str, _Handle]" = OrderedDict()
+        self.opens = 0
+        self.reopens = 0
+        self.evictions = 0
+
+    def _ident(self, paths: List[str]) -> tuple:
+        from ..core.plancache import _paths_token
+        return _paths_token(paths)
+
+    def _open(self, spec: dict):
+        from ..core.diff import TraceSet
+        from ..core.trace import Trace
+        if spec["mode"] == "set":
+            return "set", TraceSet.open(
+                spec["paths"], format=spec["format"],
+                processes=spec["processes"], labels=spec["labels"],
+                streaming=spec["streaming"], chunk_rows=spec["chunk_rows"])
+        if spec["streaming"]:
+            src = (spec["paths"][0] if len(spec["paths"]) == 1
+                   else spec["paths"])
+            return "stream", Trace.open(
+                src, format=spec["format"], streaming=True,
+                chunk_rows=spec["chunk_rows"], processes=spec["processes"],
+                executor=spec["executor"])
+        if len(spec["paths"]) > 1:
+            return "trace", Trace.open(spec["paths"],
+                                       format=spec["format"],
+                                       processes=spec["processes"])
+        return "trace", Trace.open(spec["paths"][0], format=spec["format"])
+
+    def get(self, spec: dict) -> _Handle:
+        """The live handle for ``spec`` (opening or reopening as needed)."""
+        key = hashlib.sha256(canonical_json(spec).encode()).hexdigest()
+        try:
+            ident = self._ident(spec["paths"])
+        except OSError as e:
+            raise ServiceError(404, "no_such_trace",
+                               f"cannot stat trace source: {e}") from None
+        with self._lock:
+            h = self._handles.get(key)
+            if h is not None and h.ident == ident:
+                self._handles.move_to_end(key)
+                h.uses += 1
+                return h
+            stale = h is not None
+            try:
+                kind, obj = self._open(spec)
+            except (OSError, ValueError) as e:
+                raise ServiceError(404, "open_failed",
+                                   f"cannot open trace source: {e}") from None
+            h = _Handle(key, kind, obj, ident)
+            h.uses = 1
+            self._handles[key] = h
+            self._handles.move_to_end(key)
+            self.opens += 1
+            if stale:
+                self.reopens += 1
+            while len(self._handles) > self.max_handles:
+                self._handles.popitem(last=False)
+                self.evictions += 1
+            return h
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"open": len(self._handles),
+                    "max_handles": self.max_handles,
+                    "opens": self.opens, "reopens": self.reopens,
+                    "evictions": self.evictions,
+                    "handles": [{"kind": h.kind, "uses": h.uses,
+                                 "key": h.key[:12]}
+                                for h in self._handles.values()]}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._handles.clear()
+
+
+# ---------------------------------------------------------------------------
+# the service (transport-independent core)
+# ---------------------------------------------------------------------------
+
+class _Flight:
+    """One in-flight execution other requests can coalesce onto."""
+
+    def __init__(self, future: "asyncio.Future"):
+        self.future = future
+        self.waiters = 0
+
+
+class TraceService:
+    """Decodes wire requests, admits them, and executes plans over pooled
+    handles.  Transport-independent: :class:`TraceServer` feeds it parsed
+    JSON bodies; tests can call :meth:`query` directly."""
+
+    def __init__(self, *, scheduler: Optional[Scheduler] = None,
+                 max_handles: int = 8, max_active: int = 32,
+                 per_tenant: int = 4, tenant_quota: Optional[int] = None,
+                 cache_entries: Optional[int] = None,
+                 default_tenant: str = "public"):
+        self.scheduler = scheduler or get_scheduler()
+        self.handles = HandlePool(max_handles=max_handles)
+        self.max_active = max(int(max_active), 1)
+        self.per_tenant = max(int(per_tenant), 1)
+        self.default_tenant = default_tenant
+        if tenant_quota is not None or cache_entries is not None:
+            plancache.configure(max_entries=cache_entries,
+                                tenant_quota=tenant_quota)
+        self.draining = False
+        self._active = 0
+        self._idle = asyncio.Event()
+        self._idle.set()
+        self._flights: Dict[str, _Flight] = {}
+        self._tenant_sems: Dict[str, asyncio.Semaphore] = {}
+        self._tenant_waiting: Dict[str, int] = {}
+        self.counters: Dict[str, int] = {
+            "requests": 0, "executed": 0, "coalesced": 0, "cache_hits": 0,
+            "rejected": 0, "errors": 0, "interactive": 0, "bulk": 0}
+        self.tenant_counters: Dict[str, Dict[str, int]] = {}
+
+    # -- bookkeeping -------------------------------------------------------
+    def _tenant(self, payload: dict) -> str:
+        t = payload.get("tenant")
+        if t is not None and not isinstance(t, str):
+            raise ProtocolError(f"tenant must be a string, got {t!r}")
+        return t or self.default_tenant
+
+    def _count(self, tenant: str, field: str) -> None:
+        self.counters[field] = self.counters.get(field, 0) + 1
+        st = self.tenant_counters.setdefault(
+            tenant, {"requests": 0, "executed": 0, "coalesced": 0,
+                     "cache_hits": 0, "rejected": 0, "errors": 0})
+        st[field] = st.get(field, 0) + 1
+
+    def _sem(self, tenant: str) -> asyncio.Semaphore:
+        sem = self._tenant_sems.get(tenant)
+        if sem is None:
+            sem = self._tenant_sems[tenant] = asyncio.Semaphore(
+                self.per_tenant)
+        return sem
+
+    # -- request decoding --------------------------------------------------
+    def _decode(self, payload: dict, set_scope: bool):
+        if not isinstance(payload, dict):
+            raise ProtocolError("request body must be a JSON object")
+        open_spec = _normalize_open(payload.get("open"))
+        if set_scope:
+            open_spec["mode"] = "set"
+        elif open_spec["mode"] == "set":
+            raise ProtocolError('mode "set" plans go to /setquery')
+        op = payload.get("op")
+        if not isinstance(op, str):
+            raise ProtocolError('request needs an "op" name')
+        spec = registry.get_op(op)
+        if spec is None:
+            raise ProtocolError(f"unknown analysis op {op!r}; registered: "
+                                f"{registry.list_ops()}")
+        if spec.scope == "set" and open_spec["mode"] != "set":
+            raise ProtocolError(
+                f"{op!r} is a multi-trace comparison op; submit it to "
+                f"/setquery with a set open spec")
+        steps = protocol.decode_steps(payload.get("steps") or [])
+        args = tuple(protocol.decode_value(x)
+                     for x in (payload.get("args") or []))
+        kwargs_wire = payload.get("kwargs") or {}
+        if not isinstance(kwargs_wire, dict):
+            raise ProtocolError('"kwargs" must be an object')
+        kwargs = {str(k): protocol.decode_value(v)
+                  for k, v in kwargs_wire.items()}
+        cache_flag = payload.get("cache")
+        if cache_flag is not None and not isinstance(cache_flag, bool):
+            raise ProtocolError('"cache" must be true/false/null')
+        lane = payload.get("lane")
+        if lane is None:
+            # heuristic: windowed plans are interactive, full scans bulk
+            lane = ("interactive"
+                    if any(s.get("k") in ("slice_time", "restrict_processes")
+                           for s in steps) else "bulk")
+        if lane not in ("interactive", "bulk"):
+            raise ProtocolError(f'lane must be "interactive" or "bulk", '
+                                f'got {lane!r}')
+        digest_only = bool(payload.get("digest_only", False))
+        return open_spec, op, spec, steps, args, kwargs, cache_flag, \
+            lane, digest_only
+
+    def _wire_key(self, open_spec: dict, steps, op: str, payload: dict,
+                  digest_only: bool) -> Optional[str]:
+        """Single-flight + service-cache key: a digest of the request plus
+        the *content identity* of its sources.  None when the sources
+        cannot be identified (key construction already raised 404 in
+        ``handles.get`` for missing files; this is only for exotic
+        failures) — such requests execute uncoalesced and uncached."""
+        try:
+            ident = self.handles._ident(open_spec["paths"])
+        except OSError:
+            return None
+        body = canonical_json({"open": open_spec, "ident": repr(ident),
+                               "steps": steps, "op": op,
+                               "args": payload.get("args") or [],
+                               "kwargs": payload.get("kwargs") or {},
+                               "digest_only": digest_only})
+        return "serve:" + hashlib.sha256(body.encode()).hexdigest()
+
+    # -- execution ---------------------------------------------------------
+    def _execute(self, handle: _Handle, op: str, steps, args, kwargs,
+                 cache_flag, digest_only: bool) -> dict:
+        """Runs on a scheduler lane thread: build the plan over the pooled
+        handle, execute, encode."""
+        q = protocol.apply_steps(handle.query(), steps)
+        kw = dict(kwargs)
+        if handle.kind != "set" and cache_flag is not None:
+            # forward the client's cache choice to the library-level plan
+            # cache (streaming sources participate by default)
+            kw["cache"] = cache_flag
+        t0 = time.perf_counter()
+        if handle.serialized:
+            with handle.lock:
+                value = q.run(op, *args, **kw)
+        else:
+            value = q.run(op, *args, **kw)
+        elapsed = time.perf_counter() - t0
+        out = {"ok": True, "digest": protocol.result_digest(value),
+               "elapsed_ms": round(elapsed * 1e3, 3)}
+        if not digest_only:
+            out["result"] = protocol.encode_value(value)
+        return out
+
+    async def query(self, payload: dict, set_scope: bool = False) -> dict:
+        """Execute one wire request; returns the JSON-able response body.
+        Raises :class:`ServiceError` for refusals and
+        :class:`ProtocolError` for malformed requests."""
+        tenant = self._tenant(payload if isinstance(payload, dict) else {})
+        self._count(tenant, "requests")
+        if self.draining:
+            self._count(tenant, "rejected")
+            raise ServiceError(503, "draining",
+                               "service is draining; no new queries")
+        (open_spec, op, spec, steps, args, kwargs, cache_flag, lane,
+         digest_only) = self._decode(payload, set_scope)
+        self.counters[lane] += 1
+        key = self._wire_key(open_spec, steps, op, payload, digest_only)
+
+        # 1. shared plan cache (service layer: keyed by content identity)
+        if key is not None and cache_flag is not False:
+            hit, value = plancache.lookup(key, tenant=tenant)
+            if hit:
+                self._count(tenant, "cache_hits")
+                return dict(value, cached=True, tenant=tenant)
+
+        # 2. single-flight: identical in-flight plan → await its future
+        if key is not None:
+            flight = self._flights.get(key)
+            if flight is not None:
+                flight.waiters += 1
+                self._count(tenant, "coalesced")
+                result = await asyncio.shield(flight.future)
+                return dict(result, coalesced=True, tenant=tenant)
+
+        # 3. admission: global bound, then per-tenant concurrency
+        if self._active >= self.max_active:
+            self._count(tenant, "rejected")
+            raise ServiceError(429, "saturated",
+                               f"service at max_active={self.max_active}; "
+                               f"retry later")
+        waiting = self._tenant_waiting.get(tenant, 0)
+        if waiting >= self.per_tenant * 4:
+            self._count(tenant, "rejected")
+            raise ServiceError(429, "tenant_saturated",
+                               f"tenant {tenant!r} has {waiting} queued "
+                               f"requests (limit {self.per_tenant * 4})")
+        self._tenant_waiting[tenant] = waiting + 1
+        try:
+            await self._sem(tenant).acquire()
+        finally:
+            self._tenant_waiting[tenant] -= 1
+
+        # the semaphore may have parked this task: an identical plan could
+        # have taken off in the meantime — re-check before executing
+        if key is not None:
+            flight = self._flights.get(key)
+            if flight is not None:
+                self._sem(tenant).release()
+                flight.waiters += 1
+                self._count(tenant, "coalesced")
+                result = await asyncio.shield(flight.future)
+                return dict(result, coalesced=True, tenant=tenant)
+
+        loop = asyncio.get_running_loop()
+        future: "asyncio.Future" = loop.create_future()
+        if key is not None:
+            self._flights[key] = _Flight(future)
+        self._active += 1
+        self._idle.clear()
+        self._count(tenant, "executed")
+        try:
+            handle = await loop.run_in_executor(
+                self.scheduler.lane(lane), lambda: self.handles.get(
+                    open_spec))
+            result = await loop.run_in_executor(
+                self.scheduler.lane(lane),
+                lambda: self._execute(handle, op, steps, args, kwargs,
+                                      cache_flag, digest_only))
+            if key is not None and cache_flag is not False:
+                plancache.store(key, result, tenant=tenant)
+            future.set_result(result)
+            return dict(result, tenant=tenant)
+        except BaseException as e:
+            self._count(tenant, "errors")
+            if not future.done():
+                future.set_exception(e)
+            # a coalesced waiter consuming the exception keeps it from
+            # being flagged "never retrieved"
+            future.exception()
+            raise
+        finally:
+            if key is not None:
+                self._flights.pop(key, None)
+            self._sem(tenant).release()
+            self._active -= 1
+            if self._active == 0:
+                self._idle.set()
+
+    # -- introspection / lifecycle ----------------------------------------
+    def ops(self) -> dict:
+        out = []
+        for name in registry.list_ops():
+            s = registry.get_op(name)
+            out.append({"name": name, "scope": s.scope,
+                        "streaming": s.streaming is not None,
+                        "needs_structure": bool(s.needs_structure),
+                        "needs_messages": bool(s.needs_messages)})
+        return {"ok": True, "ops": out}
+
+    def stats(self) -> dict:
+        return {"ok": True,
+                "service": dict(self.counters, active=self._active,
+                                draining=self.draining,
+                                max_active=self.max_active,
+                                per_tenant=self.per_tenant,
+                                in_flight_plans=len(self._flights)),
+                "tenants": {t: dict(c)
+                            for t, c in self.tenant_counters.items()},
+                "plancache": plancache.stats(),
+                "scheduler": self.scheduler.stats(),
+                "handles": self.handles.stats()}
+
+    async def drain(self, timeout: Optional[float] = None) -> bool:
+        """Refuse new queries and wait for in-flight ones to finish.
+        Returns True when the service went idle within ``timeout``."""
+        self.draining = True
+        try:
+            await asyncio.wait_for(self._idle.wait(), timeout)
+            return True
+        except asyncio.TimeoutError:
+            return False
+
+
+# ---------------------------------------------------------------------------
+# HTTP transport
+# ---------------------------------------------------------------------------
+
+_MAX_BODY = 64 * 1024 * 1024
+
+
+async def _read_request(reader: asyncio.StreamReader):
+    """(method, path, headers, body) for one HTTP/1.1 request, or None on
+    clean EOF."""
+    try:
+        line = await reader.readline()
+    except (ConnectionError, asyncio.LimitOverrunError):
+        return None
+    if not line:
+        return None
+    try:
+        method, path, _version = line.decode("latin-1").split(None, 2)
+    except ValueError:
+        raise ServiceError(400, "bad_request", "malformed request line")
+    headers: Dict[str, str] = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        if b":" in line:
+            k, v = line.decode("latin-1").split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+    length = int(headers.get("content-length", "0") or "0")
+    if length > _MAX_BODY:
+        raise ServiceError(413, "too_large",
+                           f"body of {length} bytes exceeds {_MAX_BODY}")
+    body = await reader.readexactly(length) if length else b""
+    return method.upper(), path, headers, body
+
+
+def _response(status: int, body: dict) -> bytes:
+    payload = json.dumps(body).encode()
+    reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+              405: "Method Not Allowed", 413: "Payload Too Large",
+              429: "Too Many Requests", 500: "Internal Server Error",
+              503: "Service Unavailable"}.get(status, "Error")
+    head = (f"HTTP/1.1 {status} {reason}\r\n{_JSON_HEADERS}"
+            f"Content-Length: {len(payload)}\r\n"
+            f"Connection: keep-alive\r\n\r\n")
+    return head.encode("latin-1") + payload
+
+
+class TraceServer:
+    """The asyncio HTTP server around a :class:`TraceService`.
+
+    ``await start()`` binds (port 0 picks a free port; see :attr:`port`),
+    ``await shutdown()`` drains gracefully, ``serve_forever()`` blocks
+    until shutdown.  All handler work runs on the event loop except plan
+    execution, which the service pushes onto scheduler lane threads.
+    """
+
+    def __init__(self, service: Optional[TraceService] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 drain_timeout: float = 30.0):
+        self.service = service or TraceService()
+        self.host = host
+        self._port = port
+        self.drain_timeout = drain_timeout
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._stopped = asyncio.Event()
+        self._shutdown_task: Optional["asyncio.Task"] = None
+
+    @property
+    def port(self) -> int:
+        if self._server is not None:
+            return self._server.sockets[0].getsockname()[1]
+        return self._port
+
+    async def start(self) -> "TraceServer":
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.host, self._port)
+        return self
+
+    async def _route(self, method: str, path: str, body: bytes) -> \
+            Tuple[int, dict]:
+        svc = self.service
+        if method == "GET":
+            if path == "/health":
+                return 200, {"ok": True, "draining": svc.draining}
+            if path == "/ops":
+                return 200, svc.ops()
+            if path == "/stats":
+                return 200, svc.stats()
+            return 404, {"ok": False, "error": {"code": "not_found",
+                                                "message": path}}
+        if method != "POST":
+            return 405, {"ok": False, "error": {"code": "method",
+                                                "message": method}}
+        if path == "/shutdown":
+            try:
+                payload = json.loads(body or b"{}")
+            except ValueError:
+                payload = {}
+            self._shutdown_task = asyncio.get_running_loop().create_task(
+                self.shutdown(float(payload.get(
+                    "grace", self.drain_timeout))))
+            return 200, {"ok": True, "draining": True}
+        if path not in ("/query", "/setquery"):
+            return 404, {"ok": False, "error": {"code": "not_found",
+                                                "message": path}}
+        try:
+            payload = json.loads(body.decode("utf-8"))
+        except (ValueError, UnicodeDecodeError) as e:
+            return 400, {"ok": False, "error": {"code": "bad_json",
+                                                "message": str(e)}}
+        try:
+            result = await svc.query(payload, set_scope=(path == "/setquery"))
+            return 200, result
+        except ProtocolError as e:
+            return 400, {"ok": False, "error": {"code": "protocol",
+                                                "message": str(e)}}
+        except ServiceError as e:
+            return e.status, {"ok": False,
+                              "error": {"code": e.code, "message": str(e)}}
+        except Exception as e:  # op raised: report, keep serving
+            return 500, {"ok": False, "error": {
+                "code": "op_failed", "message": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(limit=8)}}
+
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                try:
+                    req = await _read_request(reader)
+                except ServiceError as e:
+                    writer.write(_response(e.status, {
+                        "ok": False,
+                        "error": {"code": e.code, "message": str(e)}}))
+                    await writer.drain()
+                    break
+                except asyncio.IncompleteReadError:
+                    break
+                if req is None:
+                    break
+                method, path, headers, body = req
+                status, out = await self._route(method, path, body)
+                writer.write(_response(status, out))
+                await writer.drain()
+                if headers.get("connection", "").lower() == "close":
+                    break
+        except (ConnectionError, asyncio.CancelledError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def shutdown(self, grace: Optional[float] = None) -> None:
+        """Graceful stop: drain the service (in-flight queries finish; new
+        ones get 503), then close the listener."""
+        await self.service.drain(grace if grace is not None
+                                 else self.drain_timeout)
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        self._stopped.set()
+
+    async def serve_forever(self) -> None:
+        if self._server is None:
+            await self.start()
+        await self._stopped.wait()
+
+
+def serve(host: str = "127.0.0.1", port: int = 0,
+          announce: bool = False, **service_kwargs) -> None:
+    """Blocking entry point: build a service, bind, serve until drained.
+
+    ``announce=True`` prints one ``SERVING {json}`` line with the bound
+    host/port once the socket is live — the benchmark and CI smoke job
+    parse it to find a port-0 server.
+    """
+
+    async def _main():
+        server = TraceServer(TraceService(**service_kwargs),
+                             host=host, port=port)
+        await server.start()
+        if announce:
+            print("SERVING " + json.dumps(
+                {"host": host, "port": server.port}), flush=True)
+        await server.serve_forever()
+
+    asyncio.run(_main())

@@ -121,10 +121,7 @@ SUBPROC_INT8DP = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.distributed.compression import pairwise_compressed_mean
-    try:
-        from jax import shard_map
-    except ImportError:
-        from jax.experimental.shard_map import shard_map
+    from repro.distributed.sharding import shard_map_compat
 
     mesh = jax.make_mesh((2,), ("pod",))
     g0 = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 0.01
@@ -135,8 +132,7 @@ SUBPROC_INT8DP = textwrap.dedent("""
         def per_pod(g):
             out, _ = pairwise_compressed_mean(g[0], "pod", 2)
             return out[None]
-        return shard_map(per_pod, mesh=mesh, in_specs=P("pod"),
-                         out_specs=P("pod"), check_vma=False)(g)
+        return shard_map_compat(per_pod, mesh, P("pod"), P("pod"))(g)
     with mesh:
         out = jax.jit(f, in_shardings=NamedSharding(mesh, P("pod")))(g)
     want = np.asarray((g0 + g1) / 2)

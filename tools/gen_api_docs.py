@@ -51,7 +51,11 @@ Terminal-op results are memoized in the plan-result cache
 (`repro.core.plancache`): streaming/scan executions cache by on-disk
 content identity by default (`cache=False` opts out per call or per
 handle), and in-memory traces opt in per call with `cache=True`
-(content-hashed, so mutation always misses).
+(content-hashed, so mutation always misses).  The cache is thread-safe,
+reports `stats()` (hits/misses/evictions, per-tenant usage), and supports
+per-tenant entry quotas (`configure(tenant_quota=N)`) — the trace-query
+service (`docs/serving.md`) shares it across every client session and
+every registered op here is callable remotely through that service.
 
 Register your own the same way the built-ins do:
 
