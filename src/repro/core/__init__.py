@@ -10,6 +10,8 @@ from .cct import CCT, CCTNode
 from .constants import (ENTER, ET, EXC, INC, INSTANT, LEAVE, MPI_RECV,
                         MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD,
                         TS)
+from .detectors import (DetectorSpec, Findings, get_detector, is_comm_name,
+                        list_detectors, register_detector)
 from .diff import SetQuery, TraceSet
 from .filters import Filter, time_window_filter
 from .frame import Categorical, EventFrame, concat
@@ -27,6 +29,8 @@ __all__ = [
     "time_window_filter", "CCT",
     "CCTNode", "mass", "matrix_profile", "register_op", "register_reader",
     "register_streaming", "register_chunked", "PlanHints",
+    "register_detector", "get_detector", "list_detectors", "DetectorSpec",
+    "Findings", "is_comm_name",
     "StreamingTrace", "StreamingUnsupported",
     "list_ops", "list_readers",
     "TS", "ET", "NAME", "PROC", "THREAD", "ENTER", "LEAVE", "INSTANT",

@@ -22,7 +22,7 @@ import numpy as np
 # ops_comm/ops_logical/ops_patterns/diff are load-bearing imports even where
 # unreferenced below: importing them runs their @register_op decorators,
 # which populate the registry every TraceQuery terminal op resolves through
-from . import diff, ops_comm, ops_logical, ops_patterns, ops_summary, structure  # noqa: F401
+from . import detectors, diff, ops_comm, ops_logical, ops_patterns, ops_summary, structure  # noqa: F401
 from .cct import CCT
 from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, LEAVE, MATCH,
                         MATCH_TS, NAME, PARENT, PROC, TS)
@@ -281,6 +281,32 @@ class Trace:
 
     def critical_path_analysis(self) -> List[EventFrame]:
         return self.query().run("critical_path_analysis")
+
+    # ------------------------------------------------------------------
+    # automated diagnostics (repro.core.detectors)
+    # ------------------------------------------------------------------
+    def diagnose(self, detectors: Optional[Sequence[str]] = None) -> EventFrame:
+        """Run every registered detector (or a named subset) and return one
+        severity-ranked Findings frame — see ``docs/diagnostics.md``."""
+        return self.query().run("diagnose", detectors=detectors)
+
+    def efficiency_metrics(self, num_windows: int = 16) -> EventFrame:
+        return self.query().run("efficiency_metrics", num_windows=num_windows)
+
+    def late_sender(self, **kw) -> EventFrame:
+        return self.query().run("late_sender", **kw)
+
+    def stragglers(self, **kw) -> EventFrame:
+        return self.query().run("stragglers", **kw)
+
+    def serialization(self, **kw) -> EventFrame:
+        return self.query().run("serialization", **kw)
+
+    def imbalance_root_cause(self, **kw) -> EventFrame:
+        return self.query().run("imbalance_root_cause", **kw)
+
+    def pop_efficiency(self, **kw) -> EventFrame:
+        return self.query().run("pop_efficiency", **kw)
 
     @staticmethod
     def multirun_analysis(traces: Sequence["Trace"], metric: str = EXC,

@@ -243,6 +243,26 @@ class RemoteTrace:
     def query(self) -> RemoteQuery:
         return RemoteQuery(self._client, self._open)
 
+    def diagnose(self, detectors: Optional[Sequence[str]] = None,
+                 cache: Optional[bool] = None) -> Any:
+        """Run the automated diagnostics suite server-side via the
+        dedicated ``/diagnose`` endpoint; returns the decoded, ranked
+        Findings frame (identical to ``query().diagnose(...)``, which
+        routes through ``/query`` — both coalesce and cache as one plan).
+        """
+        payload: Dict[str, Any] = {"open": self._open, "steps": []}
+        if detectors is not None:
+            payload["detectors"] = [str(d) for d in detectors]
+        if self._client.tenant is not None:
+            payload["tenant"] = self._client.tenant
+        if cache is not None:
+            payload["cache"] = cache
+        out = self._client._request("POST", "/diagnose", payload)
+        self._client.last_meta = {k: out.get(k) for k in
+                                  ("digest", "cached", "coalesced",
+                                   "elapsed_ms", "tenant")}
+        return protocol.decode_value(out["result"])
+
     def __repr__(self) -> str:  # pragma: no cover
         return f"RemoteTrace({self._open['paths']!r})"
 

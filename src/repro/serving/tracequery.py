@@ -621,7 +621,7 @@ class TraceServer:
                 self.shutdown(float(payload.get(
                     "grace", self.drain_timeout))))
             return 200, {"ok": True, "draining": True}
-        if path not in ("/query", "/setquery"):
+        if path not in ("/query", "/setquery", "/diagnose"):
             return 404, {"ok": False, "error": {"code": "not_found",
                                                 "message": path}}
         try:
@@ -629,6 +629,18 @@ class TraceServer:
         except (ValueError, UnicodeDecodeError) as e:
             return 400, {"ok": False, "error": {"code": "bad_json",
                                                 "message": str(e)}}
+        if path == "/diagnose":
+            # sugar over /query: force the diagnose terminal so clients can
+            # POST just {"paths": ..., "detectors": [...]}.  The request
+            # funnels through svc.query, so it participates in single-flight
+            # coalescing and the plan cache like any other plan.
+            payload = dict(payload)
+            payload["op"] = "diagnose"
+            detectors = payload.pop("detectors", None)
+            if detectors is not None:
+                kwargs = dict(payload.get("kwargs") or {})
+                kwargs["detectors"] = detectors
+                payload["kwargs"] = kwargs
         try:
             result = await svc.query(payload, set_scope=(path == "/setquery"))
             return 200, result

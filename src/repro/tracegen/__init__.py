@@ -26,8 +26,11 @@ from .builder import TraceBuilder
 from .apps import (amg_vcycle, axonn_training, gol, kripke_sweep, loimos,
                    regression_pair, stencil3d, tortuga)
 from .big import big_trace
+from .pathologies import (GroundTruth, PATHOLOGIES, baseline, inject,
+                          pathology_trace)
 
 __all__ = [
     "TraceBuilder", "gol", "stencil3d", "amg_vcycle", "kripke_sweep",
     "tortuga", "loimos", "axonn_training", "regression_pair", "big_trace",
+    "GroundTruth", "PATHOLOGIES", "baseline", "inject", "pathology_trace",
 ]

@@ -183,3 +183,58 @@ def test_every_registered_reader_covered():
         assert name in covered, (
             f"reader {name!r} registered but not in the conformance suite; "
             f"add a writer + WRITERS entry")
+
+
+# ---------------------------------------------------------------------------
+# diagnostics conformance: detector output is byte-identical whichever
+# format the pathology-bearing trace was serialized in, and whichever
+# execution path (whole-file eager / chunked streaming) ran it
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pathology_written(tmp_path_factory):
+    """A straggler-injected golden trace in every writable format."""
+    from repro.tracegen import pathology_trace
+    tr, gt = pathology_trace("straggler", nprocs=3, iters=12,
+                             magnitude=2.0, seed=7)
+    d = tmp_path_factory.mktemp("patho_conformance")
+    paths = {}
+    for fmt, (fname, writer) in WRITERS.items():
+        p = str(d / fname)
+        writer(tr, p)
+        paths[fmt] = p
+    arch = str(d / "patho_archive")
+    os.makedirs(arch, exist_ok=True)
+    write_otf2_json(tr, arch, split_locations=True)
+    paths["otf2j-dir"] = arch
+    return tr, gt, paths
+
+
+@pytest.mark.parametrize("fmt", ALL_FMTS)
+def test_detector_identical_across_formats(fmt, pathology_written):
+    """diagnose() digests agree between the in-memory golden and every
+    on-disk format, eager and chunked/streaming alike."""
+    from repro.serving.protocol import result_digest
+    tr, gt, paths = pathology_written
+    want = result_digest(tr.query().run("diagnose", cache=False))
+    eager = Trace.open(paths[fmt], format="auto")
+    assert result_digest(
+        eager.query().run("diagnose", cache=False)) == want, (
+        f"{fmt} eager diagnose diverges")
+    for chunk_rows in (47, 301):
+        st = Trace.open(paths[fmt], format="auto", streaming=True,
+                        chunk_rows=chunk_rows)
+        assert result_digest(
+            st.query().run("diagnose", cache=False)) == want, (
+            f"{fmt} streaming({chunk_rows}) diagnose diverges")
+
+
+def test_detector_recovers_pathology_from_any_format(pathology_written):
+    """The injected culprit survives serialization: top-1 recovery holds
+    when the detector reads the trace back from disk."""
+    tr, gt, paths = pathology_written
+    for fmt in ALL_FMTS:
+        f = Trace.open(paths[fmt], format="auto").query().run(
+            "stragglers", cache=False)
+        assert len(f) >= 1, fmt
+        assert int(f["process"][0]) == gt.process, fmt

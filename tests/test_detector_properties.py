@@ -1,0 +1,128 @@
+"""Property-based invariants of the diagnostics suite.
+
+Three properties detectors must satisfy regardless of what trace they are
+pointed at:
+
+* **shuffle invariance** — findings are a function of the *event set*,
+  not of row order: shuffling rows (timestamps distinct, so the canonical
+  sort is unique) and re-sorting changes nothing, bit for bit;
+* **rank-relabel equivariance** — renaming process ids permutes the
+  ``process`` column of straggler/imbalance findings and changes nothing
+  else (no detector secretly keys on rank numbering);
+* **bounded efficiency** — every POP efficiency metric lies in [0, 1] on
+  arbitrary random call forests.
+
+Runs under real hypothesis when installed, the vendored minihyp fallback
+otherwise (``repro.testing.hyp``).
+"""
+
+import numpy as np
+
+from repro.testing.hyp import given, settings, st
+
+from repro.core.constants import ET, NAME, PARTNER, PROC, TS
+from repro.core.frame import EventFrame
+from repro.core.trace import Trace
+from repro.serving.protocol import result_digest
+from repro.tracegen import baseline, inject
+
+
+@st.composite
+def call_forest(draw):
+    """Random per-process call forest with distinct timestamps (the
+    canonical (process, time) sort is then unique, so shuffle + re-sort is
+    a pure row reordering)."""
+    nprocs = draw(st.integers(1, 3))
+    ts_list, et_list, name_list, proc_list = [], [], [], []
+
+    def gen(proc, t, depth, budget):
+        while budget[0] > 0 and draw(st.booleans()):
+            budget[0] -= 1
+            name = draw(st.sampled_from(
+                ["work", "solve", "MPI_Wait", "MPI_Send"]))
+            ts_list.append(t)
+            et_list.append("Enter")
+            name_list.append(name)
+            proc_list.append(proc)
+            t += draw(st.integers(1, 4))
+            if depth < 3:
+                t = gen(proc, t, depth + 1, budget)
+            ts_list.append(t)
+            et_list.append("Leave")
+            name_list.append(name)
+            proc_list.append(proc)
+            t += draw(st.integers(1, 4))
+        return t
+
+    for p in range(nprocs):
+        gen(p, draw(st.integers(0, 5)), 0, [draw(st.integers(1, 12))])
+    if not ts_list:
+        ts_list, et_list = [0, 1], ["Enter", "Leave"]
+        name_list, proc_list = ["work", "work"], [0, 0]
+    return EventFrame({
+        TS: np.asarray(ts_list, np.float64),
+        ET: np.asarray(et_list),
+        NAME: np.asarray(name_list),
+        PROC: np.asarray(proc_list, np.int64),
+    }).sort_by([PROC, TS])
+
+
+@given(ev=call_forest(), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_shuffle_invariance(ev, seed):
+    want = result_digest(Trace(ev.copy()).diagnose())
+    rng = np.random.default_rng(seed)
+    shuffled = ev.take(rng.permutation(len(ev))).sort_by([PROC, TS])
+    assert result_digest(Trace(shuffled).diagnose()) == want
+
+
+@given(seed=st.integers(0, 2 ** 16), magnitude=st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_rank_relabel_equivariance(seed, magnitude):
+    """Relabeling ranks by a permutation permutes straggler/imbalance
+    findings' ``process`` and leaves severities untouched."""
+    ev, _ = inject(baseline(nprocs=4, iters=8), "straggler",
+                   magnitude=float(magnitude), seed=seed)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(4)
+    rel = ev.copy()
+    rel[PROC] = perm[np.asarray(ev[PROC], np.int64)]
+    if PARTNER in rel:
+        partner = np.asarray(ev[PARTNER], np.int64)
+        rel[PARTNER] = np.where(partner >= 0, perm[np.maximum(partner, 0)],
+                                partner)
+    for det in ("stragglers", "imbalance_root_cause"):
+        base = Trace(ev.copy()).query().run(det, cache=False)
+        moved = Trace(rel.copy()).query().run(det, cache=False)
+        want = sorted((int(perm[p]), round(float(s), 9), str(f))
+                      for p, s, f in zip(base["process"], base["severity"],
+                                         base["function"]))
+        got = sorted((int(p), round(float(s), 9), str(f))
+                     for p, s, f in zip(moved["process"], moved["severity"],
+                                        moved["function"]))
+        assert got == want, det
+
+
+@given(ev=call_forest(), windows=st.integers(1, 24))
+@settings(max_examples=40, deadline=None)
+def test_efficiency_metrics_bounded(ev, windows):
+    m = Trace(ev).efficiency_metrics(num_windows=windows)
+    for col in ("parallel_eff", "load_balance_eff", "comm_eff"):
+        v = np.asarray(m[col], np.float64)
+        assert ((v >= 0.0) & (v <= 1.0)).all(), col
+    # parallel efficiency is the product of its factors
+    np.testing.assert_allclose(
+        np.asarray(m["parallel_eff"]),
+        np.asarray(m["load_balance_eff"]) * np.asarray(m["comm_eff"]),
+        rtol=1e-12)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_findings_severity_always_ranked(seed):
+    """Whatever the trace, diagnose output is sorted by severity desc."""
+    ev, _ = inject(baseline(nprocs=3, iters=8), "straggler",
+                   magnitude=2.5, seed=seed)
+    f = Trace(ev).diagnose()
+    sev = np.asarray(f["severity"], np.float64)
+    assert (np.diff(sev) <= 0).all()

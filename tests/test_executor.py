@@ -92,6 +92,14 @@ PARALLEL_OPS = {
     "message_histogram": ((), {"bins": 7}, HIST_EQ),
     "comm_over_time": ((), {"num_bins": 16}, HIST_EQ),
     "time_profile": ((), {"num_bins": 24}, FRAME_TOL),
+    # diagnostics suite: Findings / efficiency frames, exact accumulation
+    "late_sender": ((), {"threshold": 0.0}, FRAME_EQ),
+    "stragglers": ((), {"threshold": 0.0}, FRAME_EQ),
+    "serialization": ((), {"threshold": 0.0}, FRAME_EQ),
+    "imbalance_root_cause": ((), {"threshold": 0.0}, FRAME_EQ),
+    "pop_efficiency": ((), {"threshold": 0.0}, FRAME_EQ),
+    "efficiency_metrics": ((), {"num_windows": 12}, FRAME_EQ),
+    "diagnose": ((), {}, FRAME_EQ),
 }
 
 

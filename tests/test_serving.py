@@ -501,3 +501,106 @@ def test_http_setquery_roundtrip(pack_paths, fresh_cache):
 
     got = run(main())
     assert result_digest(got) == result_digest(local)
+
+
+# ---------------------------------------------------------------------------
+# /diagnose: the diagnostics suite through the service
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pathology_pack(tmp_path_factory):
+    from repro.readers.pack import write_pack
+    from repro.tracegen import pathology_trace
+    tr, gt = pathology_trace("straggler", nprocs=3, iters=12,
+                             magnitude=2.0, seed=4)
+    p = str(tmp_path_factory.mktemp("diag_serve") / "patho.pack")
+    write_pack(tr, p)
+    return p, gt
+
+
+def test_diagnose_endpoint_digest_equals_library(pathology_pack,
+                                                 fresh_cache):
+    path, gt = pathology_pack
+    local = Trace.open(path).query().run("diagnose", cache=False)
+
+    async def main():
+        server = await TraceServer(TraceService(), port=0).start()
+
+        def client_work():
+            with ServiceClient("127.0.0.1", server.port, tenant="t") as c:
+                trace = c.open(path)
+                via_endpoint = trace.diagnose()
+                via_query = trace.query().diagnose()
+                subset = trace.diagnose(detectors=["stragglers"])
+                return via_endpoint, via_query, subset
+
+        result = await asyncio.to_thread(client_work)
+        await server.shutdown(grace=5)
+        return result
+
+    via_endpoint, via_query, subset = run(main())
+    assert result_digest(via_endpoint) == result_digest(local)
+    assert result_digest(via_query) == result_digest(local)
+    assert result_digest(subset) == result_digest(
+        Trace.open(path).query().run("diagnose",
+                                     detectors=["stragglers"], cache=False))
+    # the served frame still names the injected culprit at top-1
+    assert str(via_endpoint["detector"][0]) != ""
+    f = subset
+    assert int(f["process"][0]) == gt.process
+
+
+def test_diagnose_requests_coalesce_and_cache(pathology_pack, fresh_cache):
+    path, _ = pathology_pack
+
+    async def main():
+        service = TraceService()
+        body = payload([path], "diagnose")
+        results = await asyncio.gather(
+            *[one(service, dict(body)) for _ in range(5)])
+        again = await one(service, dict(body))
+        return service, results, again
+
+    service, results, again = run(main())
+    # 5 identical in-flight diagnose plans -> 1 execution
+    assert service.counters["executed"] == 1
+    assert service.counters["coalesced"] == 4
+    assert len({r["digest"] for r in results}) == 1
+    # and a later identical request is a plan-cache hit
+    assert again.get("cached")
+    assert again["digest"] == results[0]["digest"]
+
+
+def test_detector_ops_directly_callable(pathology_pack, fresh_cache):
+    """Individual detectors are ordinary registered ops on the service."""
+    path, gt = pathology_pack
+
+    async def main():
+        service = TraceService()
+        return await one(service, payload(
+            [path], "stragglers", kwargs={"threshold": 0.1}))
+
+    resp = run(main())
+    want = Trace.open(path).query().run("stragglers", threshold=0.1)
+    assert resp["digest"] == result_digest(want)
+
+
+def test_patterns_ops_through_plan_and_service(pack_paths, fresh_cache):
+    """activity_series / detect_pattern are registered ops: callable as
+    lazy-plan terminals and remotely through the service, with identical
+    digests."""
+    for op, kwargs in (("activity_series", {"num_bins": 64}),
+                       ("detect_pattern", {"num_bins": 32,
+                                           "max_patterns": 4})):
+        assert registry.get_op(op) is not None, op
+        local = Trace.open(pack_paths).query().run(op, **kwargs)
+
+        async def main():
+            service = TraceService()
+            return await one(service, payload(pack_paths, op,
+                                              kwargs=dict(kwargs)))
+
+        resp = run(main())
+        assert resp["digest"] == result_digest(local), op
+        wire = protocol.decode_value(json.loads(json.dumps(resp["result"])))
+        assert result_digest(wire) == result_digest(local), op

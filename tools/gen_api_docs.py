@@ -57,6 +57,11 @@ per-tenant entry quotas (`configure(tenant_quota=N)`) — the trace-query
 service (`docs/serving.md`) shares it across every client session and
 every registered op here is callable remotely through that service.
 
+Ops carrying a *detector* annotation are part of the automated
+diagnostics suite (`docs/diagnostics.md`): each returns a ranked Findings
+frame and participates in the combined `diagnose` terminal; the annotation
+shows the detector's category and default severity threshold.
+
 Register your own the same way the built-ins do:
 
 ```python
@@ -86,6 +91,7 @@ def render() -> str:
     # are load-bearing imports of repro.core.trace)
     import repro.readers  # noqa: F401
     from repro.core import trace as _trace  # noqa: F401
+    from repro.core import detectors as _detectors
     from repro.core import registry
 
     lines = [HEADER]
@@ -116,9 +122,12 @@ def render() -> str:
                 streaming = "combinable"
             lines.append(f"### `{name}`\n")
             lines.append(f"```python\n{name}{_sig(spec.fn)}\n```\n")
+            det = _detectors.get_detector(name)
+            detector = (f" · detector: {det.category} "
+                        f"(threshold {det.threshold:g})" if det else "")
             lines.append(f"*needs: {', '.join(prereqs) if prereqs else 'nothing'}"
                          f" · scope: {spec.scope}"
-                         f" · streaming: {streaming}*\n")
+                         f" · streaming: {streaming}{detector}*\n")
             lines.append(_doc(spec.fn) + "\n")
 
     lines.append("\n## Registered trace readers\n\n"
