@@ -75,7 +75,7 @@ def main(argv=None) -> int:
         from . import roofline
         print(f"\n## [{total}/{total}] roofline: table from dry-run "
               f"artifacts")
-        roofline.main()
+        roofline.main([])  # explicit argv: don't re-parse run.py's flags
         results["roofline"] = "rendered to stdout (reads dry-run artifacts)"
 
     if args.json_path:

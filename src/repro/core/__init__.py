@@ -18,8 +18,10 @@ from .frame import Categorical, EventFrame, concat
 from .frame import optimize_dtypes
 from .ops_patterns import mass, matrix_profile
 from .query import TraceQuery, scan
-from .registry import (PlanHints, list_ops, list_readers, register_chunked,
-                       register_op, register_reader, register_streaming)
+from .registry import (PlanHints, get_backend, list_backends, list_ops,
+                       list_readers, op_backends, register_backend,
+                       register_chunked, register_op, register_reader,
+                       register_streaming)
 from .streaming import StreamingTrace, StreamingUnsupported
 from .trace import Trace
 
@@ -29,6 +31,7 @@ __all__ = [
     "time_window_filter", "CCT",
     "CCTNode", "mass", "matrix_profile", "register_op", "register_reader",
     "register_streaming", "register_chunked", "PlanHints",
+    "register_backend", "get_backend", "op_backends", "list_backends",
     "register_detector", "get_detector", "list_detectors", "DetectorSpec",
     "Findings", "is_comm_name",
     "StreamingTrace", "StreamingUnsupported",

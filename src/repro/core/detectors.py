@@ -56,8 +56,10 @@ import numpy as np
 from .constants import (DEFAULT_COMM_PREFIXES, DEFAULT_IDLE_NAMES, ENTER,
                         ET, EXC, INC, LEAVE, MPI_RECV, MPI_SEND, NAME,
                         PARTNER, PROC, TAG, THREAD, TS)
+from . import accel
 from .frame import EventFrame
-from .registry import register_op, register_streaming
+from .registry import (get_backend, register_backend, register_op,
+                       register_streaming)
 from .streaming import StreamAgg, StreamingUnsupported, grow_to
 
 __all__ = ["DetectorSpec", "register_detector", "get_detector",
@@ -456,7 +458,8 @@ def _straggler_findings(work, t0, t1, nprocs, threshold):
 
 @register_detector("stragglers", category="imbalance", threshold=0.2,
                    needs_structure=True)
-def stragglers(trace, threshold: float = 0.2) -> EventFrame:
+def stragglers(trace, threshold: float = 0.2,
+               backend: str = "numpy") -> EventFrame:
     """Ranks whose useful (non-communication) work is far above the mean.
 
     Sums exclusive time of non-communication calls per rank; a rank whose
@@ -464,10 +467,31 @@ def stragglers(trace, threshold: float = 0.2) -> EventFrame:
     0.2 = 20% above the mean) is reported — the classic straggler every
     collective then waits for.
 
+    Args:
+        threshold: relative excess over the cross-rank mean that flags a
+            rank.
+        backend: ``"numpy"`` (default, exact) or ``"pallas"`` (per-rank
+            busy sums through the seg_sum one-hot matmul kernel, f32
+            rounding; see docs/kernels.md).
+
     Returns:
         Findings frame — ``process`` is the straggler rank, the window is
         that rank's active span.
     """
+    return get_backend("stragglers", backend)(trace, threshold=threshold)
+
+
+def _rank_bounds(proc: np.ndarray, ts: np.ndarray, nprocs: int):
+    """Exact per-rank [first, last] event timestamps (int64 ns)."""
+    t0 = np.full(nprocs, np.iinfo(np.int64).max, np.int64)
+    t1 = np.full(nprocs, np.iinfo(np.int64).min, np.int64)
+    np.minimum.at(t0, proc, ts)
+    np.maximum.at(t1, proc, ts)
+    return t0, t1
+
+
+@register_backend("stragglers", "numpy")
+def _stragglers_numpy(trace, *, threshold: float = 0.2) -> EventFrame:
     ev = trace.events
     nprocs = trace.num_processes
     if len(ev) == 0 or nprocs == 0:
@@ -479,11 +503,31 @@ def stragglers(trace, threshold: float = 0.2) -> EventFrame:
     proc = np.asarray(ev[PROC], np.int64)
     np.add.at(work, proc[sel],
               np.nan_to_num(np.asarray(ev.column(EXC), np.float64)[sel]))
-    ts = np.asarray(ev[TS], np.int64)
-    t0 = np.full(nprocs, np.iinfo(np.int64).max, np.int64)
-    t1 = np.full(nprocs, np.iinfo(np.int64).min, np.int64)
-    np.minimum.at(t0, proc, ts)
-    np.maximum.at(t1, proc, ts)
+    t0, t1 = _rank_bounds(proc, np.asarray(ev[TS], np.int64), nprocs)
+    return _straggler_findings(work, t0, t1, nprocs, threshold)
+
+
+@register_backend("stragglers", "pallas")
+def _stragglers_pallas(trace, *, threshold: float = 0.2) -> EventFrame:
+    """Accelerator stragglers: the per-rank busy sum runs through the
+    seg_sum one-hot-matmul kernel over canonically ordered non-comm
+    completed calls (f32 rounding; rank time bounds stay exact int64)."""
+    ev = trace.events
+    nprocs = trace.num_processes
+    if len(ev) == 0 or nprocs == 0:
+        return Findings([])
+    is_enter = ev.cat(ET).mask_eq(ENTER)
+    comm = _comm_cat_mask(ev.cat(NAME).categories)[ev.codes(NAME)]
+    match = np.asarray(ev.column("_matching_event"), np.int64)
+    sel = np.nonzero(is_enter & ~comm & (match >= 0))[0]
+    ts = np.asarray(ev[TS], np.float64)
+    proc = np.asarray(ev[PROC], np.int64)
+    exc = np.nan_to_num(np.asarray(ev.column(EXC), np.float64)[sel])
+    _names, _order, inv = accel.alpha_positions(ev.cat(NAME).categories)
+    acode = inv[ev.codes(NAME)[sel]]
+    o = accel.canonical_order(ts[sel], ts[match[sel]], proc[sel], acode, exc)
+    work = accel.seg_sum(proc[sel][o], exc[o], nprocs)
+    t0, t1 = _rank_bounds(proc, np.asarray(ev[TS], np.int64), nprocs)
     return _straggler_findings(work, t0, t1, nprocs, threshold)
 
 
@@ -495,8 +539,16 @@ class _StragglerAgg(StreamAgg):
     needs_calls = True
     supports_parallel = True
 
-    def __init__(self, threshold: float = 0.2):
+    def __init__(self, threshold: float = 0.2, backend: str = "numpy"):
+        get_backend("stragglers", backend)
+        if backend not in ("numpy", "pallas"):
+            raise StreamingUnsupported(
+                f"streaming stragglers supports backends ('numpy', "
+                f"'pallas'); {backend!r} is trace-level — materialize with "
+                f".collect() to use it")
+        self.backend = backend
         self.threshold = float(threshold)
+        self._recs: List[tuple] = []
         self._work = np.zeros(0)
         self._t0 = np.full(0, np.iinfo(np.int64).max, np.int64)
         self._t1 = np.full(0, np.iinfo(np.int64).min, np.int64)
@@ -522,11 +574,21 @@ class _StragglerAgg(StreamAgg):
         keep = ~comm
         if not keep.any():
             return
+        if self.backend != "numpy":
+            self._recs.append((calls.name[keep].copy(),
+                               calls.proc[keep].copy(),
+                               calls.start[keep].copy(),
+                               calls.end[keep].copy(),
+                               np.nan_to_num(calls.exc[keep])))
+            return
         np_ = int(calls.proc[keep].max()) + 1
         self._work = grow_to(self._work, (np_,))
         np.add.at(self._work, calls.proc[keep], calls.exc[keep])
 
     def merge_from(self, other, code_map) -> None:
+        if self.backend != "numpy":
+            for name, proc, start, end, exc in other._recs:
+                self._recs.append((code_map[name], proc, start, end, exc))
         np_ = max(len(self._work), len(other._work),
                   len(self._t0), len(other._t0))
         self._work = grow_to(self._work, (np_,))
@@ -542,8 +604,23 @@ class _StragglerAgg(StreamAgg):
         nprocs = ctx.num_processes
         if nprocs <= 0:
             return Findings([])
-        work = np.zeros(nprocs)
-        work[:min(nprocs, len(self._work))] = self._work[:nprocs]
+        if self.backend != "numpy":
+            if self._recs:
+                name = np.concatenate([r[0] for r in self._recs])
+                proc = np.concatenate([r[1] for r in self._recs])
+                start = np.concatenate([r[2] for r in self._recs])
+                end = np.concatenate([r[3] for r in self._recs])
+                exc = np.concatenate([r[4] for r in self._recs])
+            else:
+                name = proc = np.zeros(0, np.int64)
+                start = end = exc = np.zeros(0)
+            _names, _order, inv = accel.alpha_positions(
+                ctx.names.names[: len(ctx.names)])
+            o = accel.canonical_order(start, end, proc, inv[name], exc)
+            work = accel.seg_sum(proc[o], exc[o], nprocs)
+        else:
+            work = np.zeros(nprocs)
+            work[:min(nprocs, len(self._work))] = self._work[:nprocs]
         t0 = np.full(nprocs, np.iinfo(np.int64).max, np.int64)
         t1 = np.full(nprocs, np.iinfo(np.int64).min, np.int64)
         t0[:min(nprocs, len(self._t0))] = self._t0[:nprocs]

@@ -6,12 +6,14 @@ from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from . import accel
 from .constants import (DEFAULT_COMM_PREFIXES, ENTER, ET, INC, LEAVE, MPI_RECV,
                         MPI_SEND, MSG_SIZE, NAME, PARTNER, PROC, TS)
 from .frame import EventFrame
 from .intervals import merge_intervals
-from .registry import register_op, register_streaming
-from .streaming import StreamAgg, grow_to
+from .registry import (get_backend, register_backend, register_op,
+                       register_streaming)
+from .streaming import StreamAgg, StreamingUnsupported, grow_to
 
 __all__ = [
     "comm_matrix", "message_histogram", "comm_by_process", "comm_over_time",
@@ -27,7 +29,8 @@ def _sends(trace) -> EventFrame:
 
 
 @register_op("comm_matrix", needs_messages=True)
-def comm_matrix(trace, output: str = "size") -> np.ndarray:
+def comm_matrix(trace, output: str = "size",
+                backend: str = "numpy") -> np.ndarray:
     """Process-to-process communication matrix (§IV-C, Fig. 3).
 
     Aggregates every send instant by (sender, receiver).
@@ -35,12 +38,20 @@ def comm_matrix(trace, output: str = "size") -> np.ndarray:
     Args:
         output: ``"size"`` (default) sums message bytes; ``"count"`` (any
             other value) counts messages.
+        backend: ``"numpy"`` (default, exact) or ``"pallas"`` (pair_sum
+            one-hot matmul kernel, f32 rounding; see docs/kernels.md).
 
     Returns:
         ``(nprocs, nprocs)`` float array; ``M[i, j]`` is the bytes (or
         number of messages) process i sent to process j.  All zeros when
         the trace records no messages.
     """
+    return get_backend("comm_matrix", backend)(trace, output=output)
+
+
+@register_backend("comm_matrix", "numpy")
+def _comm_matrix_numpy(trace, *, output: str = "size") -> np.ndarray:
+    """The exact reference: one scatter-add over the send instants."""
     s = _sends(trace)
     n = trace.num_processes
     mat = np.zeros((n, n))
@@ -53,22 +64,87 @@ def comm_matrix(trace, output: str = "size") -> np.ndarray:
     return mat
 
 
+def _wrap_partners(src, dst, n: int, op: str):
+    """Negative partner ids wrap like numpy fancy indexing (``-1`` is the
+    last process); out-of-range ids raise the same IndexError the
+    ``np.add.at`` reference raises instead of silently dropping."""
+    if len(dst) and (int(src.max()) >= n or int(dst.max()) >= n
+                     or int(src.min()) < 0 or int(dst.min()) < -n):
+        raise IndexError(
+            f"{op}: message endpoints outside the selected trace's "
+            f"0..{n - 1} process range (same selection fails on "
+            f"backend='numpy' too)")
+    return np.where(dst < 0, dst + n, dst)
+
+
+@register_backend("comm_matrix", "pallas")
+def _comm_matrix_pallas(trace, *, output: str = "size") -> np.ndarray:
+    """Accelerator comm matrix: canonical-ordered send records through the
+    pair_sum one-hot-matmul kernel (f32 rounding; counts exact)."""
+    s = _sends(trace)
+    n = trace.num_processes
+    if len(s) == 0 or n == 0:
+        return np.zeros((n, n))
+    src = np.asarray(s[PROC], np.int64)
+    dst = np.asarray(s[PARTNER], np.int64)
+    w = np.nan_to_num(np.asarray(s[MSG_SIZE], np.float64)) \
+        if output == "size" else np.ones(len(s))
+    dst = _wrap_partners(src, dst, n, "comm_matrix backend='pallas'")
+    ts = np.asarray(s[TS], np.float64)
+    o = accel.canonical_order(ts, ts, src, dst, w)
+    return accel.pair_sum(src[o], dst[o], w[o], n, n)
+
+
 @register_op("message_histogram")
-def message_histogram(trace, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+def message_histogram(trace, bins: int = 10,
+                      backend: str = "numpy") -> Tuple[np.ndarray, np.ndarray]:
     """Distribution of message sizes (§IV-C, Fig. 4).
 
     Args:
         bins: number of equal-width size bins over [min, max] bytes.
+        backend: ``"numpy"`` (default) or ``"pallas"`` (one-hot matmul
+            binning kernel).  Bin indices are computed host-side with exact
+            ``np.histogram`` semantics, so both backends return *identical*
+            counts (see docs/kernels.md).
 
     Returns:
         ``(counts, edges)`` à la ``np.histogram``: ``counts`` has ``bins``
         message counts, ``edges`` has ``bins + 1`` byte boundaries.
     """
+    return get_backend("message_histogram", backend)(trace, bins=bins)
+
+
+@register_backend("message_histogram", "numpy")
+def _message_histogram_numpy(trace, *, bins: int = 10
+                             ) -> Tuple[np.ndarray, np.ndarray]:
     s = _sends(trace)
     if len(s) == 0:
         return np.zeros(bins, np.int64), np.linspace(0, 1, bins + 1)
     sizes = np.nan_to_num(np.asarray(s[MSG_SIZE], np.float64))
     return np.histogram(sizes, bins=bins)
+
+
+def _hist_indices(sizes: np.ndarray, edges: np.ndarray,
+                  bins: int) -> np.ndarray:
+    """Exact ``np.histogram`` bin assignment: half-open bins with the last
+    bin closed — ``searchsorted(side="right") - 1`` over the edge array,
+    clipped so the top edge lands in the final bin."""
+    return np.clip(np.searchsorted(edges, sizes, side="right") - 1,
+                   0, bins - 1)
+
+
+@register_backend("message_histogram", "pallas")
+def _message_histogram_pallas(trace, *, bins: int = 10
+                              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Accelerator size histogram: exact host-side bin indices go through
+    the hist_bin one-hot counting kernel — counts match numpy bit for
+    bit (integer counts are exact in f32 below 2²⁴ per bin)."""
+    s = _sends(trace)
+    if len(s) == 0:
+        return np.zeros(bins, np.int64), np.linspace(0, 1, bins + 1)
+    sizes = np.nan_to_num(np.asarray(s[MSG_SIZE], np.float64))
+    edges = np.histogram_bin_edges(sizes, bins=bins)
+    return accel.hist_counts(_hist_indices(sizes, edges, bins), bins), edges
 
 
 @register_op("comm_by_process")
@@ -162,12 +238,22 @@ def _check_partner_range(extent: int, n: int, op: str) -> None:
 
 @register_streaming("comm_matrix")
 class _CommMatrixAgg(StreamAgg):
-    """Combinable comm matrix: per-chunk (sender, receiver) partial sums."""
+    """Combinable comm matrix: per-chunk (sender, receiver) partial sums.
+    ``backend="pallas"`` buffers the send records and runs the pair_sum
+    kernel once at finalize, exactly like the eager pallas backend."""
 
     supports_parallel = True
 
-    def __init__(self, output: str = "size"):
+    def __init__(self, output: str = "size", backend: str = "numpy"):
+        get_backend("comm_matrix", backend)
+        if backend not in ("numpy", "pallas"):
+            raise StreamingUnsupported(
+                f"streaming comm_matrix supports backends ('numpy', "
+                f"'pallas'); {backend!r} is trace-level — materialize with "
+                f".collect() to use it")
+        self.backend = backend
         self.output = output
+        self._recs: list = []
         self._mat = np.zeros((0, 0))
         self._neg = np.zeros(0)  # sends with partner -1, keyed by sender
         self._extent = 0
@@ -176,8 +262,14 @@ class _CommMatrixAgg(StreamAgg):
         s = _chunk_sends(chunk)
         if s is None:
             return
-        src, dst, size, _ts = s
+        src, dst, size, ts = s
         w = size if self.output == "size" else np.ones(len(src))
+        if self.backend != "numpy":
+            pos = dst >= 0
+            self._extent = max(self._extent, int(src.max()) + 1,
+                               int(dst[pos].max()) + 1 if pos.any() else 0)
+            self._recs.append((src, dst, w, ts))
+            return
         neg = dst < 0
         if np.any(neg):
             # the in-memory op's np.add.at wraps dst=-1 into the LAST
@@ -196,16 +288,29 @@ class _CommMatrixAgg(StreamAgg):
 
     def merge_from(self, other, code_map) -> None:
         # everything is keyed by global process ids — no name remap at all
+        self._extent = max(self._extent, other._extent)
+        if self.backend != "numpy":
+            self._recs.extend(other._recs)
+            return
         self._mat = grow_to(self._mat, other._mat.shape)
         a, b = other._mat.shape
         self._mat[:a, :b] += other._mat
         self._neg = grow_to(self._neg, other._neg.shape)
         self._neg[: len(other._neg)] += other._neg
-        self._extent = max(self._extent, other._extent)
 
     def result(self, ctx) -> np.ndarray:
         n = ctx.num_processes
         _check_partner_range(self._extent, n, "comm_matrix")
+        if self.backend != "numpy":
+            if not self._recs or n == 0:
+                return np.zeros((n, n))
+            src = np.concatenate([r[0] for r in self._recs])
+            dst = np.concatenate([r[1] for r in self._recs])
+            w = np.concatenate([r[2] for r in self._recs])
+            ts = np.concatenate([r[3] for r in self._recs])
+            dst = _wrap_partners(src, dst, n, "streaming comm_matrix")
+            o = accel.canonical_order(ts, ts, src, dst, w)
+            return accel.pair_sum(src[o], dst[o], w[o], n, n)
         out = np.zeros((max(n, 0), max(n, 0)))
         sub = self._mat[:n, :n]
         out[: sub.shape[0], : sub.shape[1]] = sub
@@ -278,8 +383,16 @@ class _MessageHistogramAgg(StreamAgg):
     needs_stats = True
     supports_parallel = True
 
-    def __init__(self, bins: int = 10):
+    def __init__(self, bins: int = 10, backend: str = "numpy"):
+        get_backend("message_histogram", backend)
+        if backend not in ("numpy", "pallas"):
+            raise StreamingUnsupported(
+                f"streaming message_histogram supports backends ('numpy', "
+                f"'pallas'); {backend!r} is trace-level — materialize with "
+                f".collect() to use it")
+        self.backend = backend
         self.bins = bins
+        self._sizes: list = []
         self._counts = np.zeros(bins, np.int64)
         self._edges: Optional[np.ndarray] = None
 
@@ -297,17 +410,29 @@ class _MessageHistogramAgg(StreamAgg):
         if s is None:
             return
         _src, _dst, size, _ts = s
+        if self.backend != "numpy":
+            self._sizes.append(size)
+            return
         c, _ = np.histogram(size, bins=self._edges)
         self._counts += c
 
     def merge_from(self, other, code_map) -> None:
         # edges were fixed by the shared stats pre-pass; counts just add
+        if self.backend != "numpy":
+            self._sizes.extend(other._sizes)
+            return
         self._counts += other._counts
 
     def result(self, ctx) -> Tuple[np.ndarray, np.ndarray]:
         if self._edges is None:
             return np.zeros(self.bins, np.int64), np.linspace(0, 1,
                                                               self.bins + 1)
+        if self.backend != "numpy":
+            sizes = (np.concatenate(self._sizes) if self._sizes
+                     else np.zeros(0))
+            return accel.hist_counts(
+                _hist_indices(sizes, self._edges, self.bins),
+                self.bins), self._edges
         return self._counts, self._edges
 
 

@@ -16,38 +16,39 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from . import accel
 from .constants import (DEFAULT_IDLE_NAMES, ENTER, ET, EXC, INC, NAME, PROC, TS)
 from .frame import Categorical, EventFrame
-from .registry import register_op, register_streaming
+from .registry import (get_backend, op_backends, register_backend,
+                       register_op, register_streaming)
 from .streaming import StreamAgg, StreamingUnsupported, grow_to
 
 
 # ---------------------------------------------------------------------------
-# time_profile backend registry
+# time_profile backends (the prototype of the per-op backend registry)
 # ---------------------------------------------------------------------------
 
-#: registered ``time_profile`` accumulation backends.  A backend maps call
+#: the live ``time_profile`` backend table — an alias of
+#: ``registry.op_backends("time_profile")`` kept for backwards
+#: compatibility (mutating it *is* registration).  A backend maps call
 #: records onto the [bins, functions] overlap matrix:
 #: ``fn(starts, ends, rate, name_codes, edges, nf) -> np.ndarray``
 #: with ``starts``/``ends`` float64 ns, ``rate`` weight/ns, ``name_codes``
 #: int codes < nf, ``edges`` the bin edge array (len num_bins+1).
-TIME_PROFILE_BACKENDS: Dict[str, Callable[..., np.ndarray]] = {}
+TIME_PROFILE_BACKENDS: Dict[str, Callable[..., np.ndarray]] = \
+    op_backends("time_profile")
 
 
 def register_time_profile_backend(name: str) -> Callable:
     """Decorator registering a ``time_profile(backend=<name>)`` accumulation
-    backend (last registration wins, like the op registry)."""
-
-    def deco(fn: Callable[..., np.ndarray]) -> Callable[..., np.ndarray]:
-        TIME_PROFILE_BACKENDS[name] = fn
-        return fn
-
-    return deco
+    backend (last registration wins, like the op registry).  Equivalent to
+    ``registry.register_backend("time_profile", name)``."""
+    return register_backend("time_profile", name)
 
 
 @register_op("flat_profile", needs_structure=True)
 def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = NAME,
-                 per_process: bool = False) -> EventFrame:
+                 per_process: bool = False, backend: str = "numpy") -> EventFrame:
     """Total metric per function, aggregated over the whole trace (§IV-B).
 
     Sums each metric over every *matched call* (Enter event) of a function,
@@ -62,12 +63,24 @@ def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = N
             column works, e.g. a custom phase column).
         per_process: additionally group by ``Process`` (one row per
             (function, process) pair).
+        backend: ``"numpy"`` (default, exact) or ``"pallas"`` (one-hot
+            matmul segment-sum kernel, f32 rounding; see docs/kernels.md).
 
     Returns:
         EventFrame with the group key column(s), one summed column per
         metric (ns), and ``count`` (number of calls), sorted by the first
         metric descending.
     """
+    return get_backend("flat_profile", backend)(
+        trace, metrics=metrics, groupby_column=groupby_column,
+        per_process=per_process)
+
+
+@register_backend("flat_profile", "numpy")
+def _flat_profile_numpy(trace, *, metrics: Sequence[str] = (EXC,),
+                        groupby_column: str = NAME,
+                        per_process: bool = False) -> EventFrame:
+    """The exact reference: one groupby over every Enter row."""
     ev = trace.events
     ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
     keys = [groupby_column, PROC] if per_process else [groupby_column]
@@ -78,6 +91,88 @@ def flat_profile(trace, metrics: Sequence[str] = (EXC,), groupby_column: str = N
         prof[m] = np.nan_to_num(prof[m])
     order = np.argsort(-prof[metrics[0]], kind="stable")
     return prof.take(order)
+
+
+def _flat_assemble(names_alpha, counts, sums, metrics, per_process
+                   ) -> EventFrame:
+    """Shared finalization of the record-level flat_profile paths: counts
+    (exact int64) and per-metric sums, both on the alphabetical name axis,
+    become the output frame.  Used by the streaming aggregator and the
+    pallas backend on every path — identical assembly is half of the
+    digest-identity contract."""
+    out = EventFrame()
+    if per_process:
+        f_alpha, p_alpha = np.nonzero(counts)
+        out[NAME] = Categorical(f_alpha.astype(np.int32), names_alpha)
+        out[PROC] = p_alpha.astype(np.int64)
+        out["count"] = counts[f_alpha, p_alpha]
+        for i, m in enumerate(metrics):
+            out[m] = sums[i, f_alpha, p_alpha]
+    else:
+        present = np.nonzero(counts)[0]
+        out[NAME] = Categorical(present.astype(np.int32), names_alpha)
+        out["count"] = counts[present]
+        for i, m in enumerate(metrics):
+            out[m] = sums[i, present]
+    order = np.argsort(-np.asarray(out[metrics[0]]), kind="stable")
+    return out.take(order)
+
+
+@register_backend("flat_profile", "pallas")
+def _flat_profile_pallas(trace, *, metrics: Sequence[str] = (EXC,),
+                         groupby_column: str = NAME,
+                         per_process: bool = False) -> EventFrame:
+    """Accelerator flat profile: canonical-ordered completed-call records
+    through the seg_sum / pair_sum one-hot-matmul kernels.  Counts stay
+    exact (host int64); metric sums agree with numpy to f32 rounding."""
+    if groupby_column != NAME:
+        raise ValueError(
+            f"flat_profile backend='pallas' groups by {NAME!r} only, got "
+            f"groupby_column={groupby_column!r}; use backend='numpy'")
+    metrics = list(metrics)
+    ev = trace.events
+    is_enter = ev.cat(ET).mask_eq(ENTER)
+    match = np.asarray(ev.column("_matching_event"), np.int64)
+    ts = np.asarray(ev[TS], np.float64)
+    codes = ev.codes(NAME)
+    procs = np.asarray(ev[PROC], np.int64)
+    names_alpha, _order, inv = accel.alpha_positions(ev.cat(NAME).categories)
+    nf = len(names_alpha)
+    nprocs = max(trace.num_processes, 1)
+
+    ent = np.nonzero(is_enter)[0]
+    acode_all = inv[codes[ent]]
+    if per_process:
+        counts = np.zeros((nf, nprocs), np.int64)
+        np.add.at(counts, (acode_all, procs[ent]), 1)
+    else:
+        counts = np.bincount(acode_all, minlength=nf).astype(np.int64)
+
+    # kernel records: matched calls only (unmatched enters contribute
+    # exactly 0 to the numpy sums; the NaN-poisoning they cause is applied
+    # per metric below, mirroring nan_to_num-after-groupby)
+    msel = np.nonzero(is_enter & (match >= 0))[0]
+    vals = np.stack([np.nan_to_num(
+        np.asarray(ev.column(m), np.float64)[msel]) for m in metrics],
+        axis=1)
+    acode = inv[codes[msel]]
+    pr = procs[msel]
+    o = accel.canonical_order(ts[msel], ts[match[msel]], pr, acode,
+                              vals[:, 0])
+    if per_process:
+        sums = np.stack([accel.pair_sum(acode[o], pr[o], vals[o, i],
+                                        nf, nprocs)
+                         for i in range(len(metrics))])
+    else:
+        sums = accel.seg_sum(acode[o], vals[o], nf).T
+    for i, m in enumerate(metrics):
+        bad = np.isnan(np.asarray(ev.column(m), np.float64)[ent])
+        if bad.any():
+            if per_process:
+                sums[i][acode_all[bad], procs[ent][bad]] = 0.0
+            else:
+                sums[i][acode_all[bad]] = 0.0
+    return _flat_assemble(names_alpha, counts, sums, metrics, per_process)
 
 
 @register_op("time_profile", needs_structure=True)
@@ -96,10 +191,14 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
         metric: ``time.exc`` (default) or ``time.inc``, in ns.
         normalized: scale each bin's values to fractions of that bin's
             total (rows sum to 1 where any time was recorded).
-        backend: a backend registered in :data:`TIME_PROFILE_BACKENDS` —
+        backend: a backend registered in :data:`TIME_PROFILE_BACKENDS`
+            (the live ``registry.op_backends("time_profile")`` table) —
             built-ins are ``"numpy"`` (exact sweep) and ``"pallas"``
             (tiled kernel); register your own with
-            :func:`register_time_profile_backend`.
+            :func:`register_time_profile_backend`.  Non-numpy backends
+            run on canonically ordered call records, so every execution
+            path (eager, streaming, parallel, pack) produces an
+            identical frame.
 
     Returns:
         EventFrame with ``bin_start``/``bin_end`` (ns) plus one column per
@@ -120,18 +219,23 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
     sel = np.nonzero(is_enter & (match >= 0))[0]
     starts = ts[sel]
     ends = ts[match[sel]]
-    inc = ends - starts
     w = np.nan_to_num(np.asarray(ev.column(metric), np.float64)[sel])
-    rate = np.where(inc > 0, w / np.maximum(inc, 1e-30), 0.0)
     name_codes = ev.codes(NAME)[sel]
     cats = ev.cat(NAME).categories
     nf = len(cats)
 
-    fn = TIME_PROFILE_BACKENDS.get(backend)
-    if fn is None:
-        raise ValueError(
-            f"unknown time_profile backend {backend!r}; registered: "
-            f"{sorted(TIME_PROFILE_BACKENDS)}")
+    fn = get_backend("time_profile", backend)
+    if backend != "numpy":
+        # record-level path shared with the streaming finalizer: canonical
+        # order + alphabetical code space ⇒ identical frames on every path
+        names_alpha, _order, inv = accel.alpha_positions(cats)
+        procs = np.asarray(ev[PROC], np.int64)[sel]
+        return _profile_from_records(starts, ends, w, procs,
+                                     inv[name_codes], names_alpha, edges,
+                                     num_bins, normalized, fn)
+
+    inc = ends - starts
+    rate = np.where(inc > 0, w / np.maximum(inc, 1e-30), 0.0)
     prof = fn(starts, ends, rate, name_codes, edges, nf)
 
     # zero-duration calls: all weight in their bin
@@ -151,6 +255,35 @@ def time_profile(trace, num_bins: int = 32, metric: str = EXC,
     return out
 
 
+def _profile_from_records(starts, ends, w, procs, acodes, names_alpha,
+                          edges, num_bins, normalized, fn) -> EventFrame:
+    """Record-level ``time_profile`` core for non-numpy backends, shared by
+    the eager op and the streaming finalizer: canonical-sort the call
+    records, invoke the backend once, apply the zero-duration fixup and
+    assemble columns in the alphabetical code space.  Both paths hold the
+    same record multiset, so the resulting frames are identical."""
+    o = accel.canonical_order(starts, ends, procs, acodes, w)
+    starts, ends, w, acodes = starts[o], ends[o], w[o], acodes[o]
+    inc = ends - starts
+    rate = np.where(inc > 0, w / np.maximum(inc, 1e-30), 0.0)
+    prof = np.asarray(fn(starts, ends, rate, acodes, edges,
+                         len(names_alpha)), np.float64)
+    zsel = inc <= 0
+    if np.any(zsel & (w > 0)):
+        b = np.clip(np.searchsorted(edges, starts[zsel], side="right") - 1,
+                    0, num_bins - 1)
+        np.add.at(prof, (b, acodes[zsel]), w[zsel])
+    if normalized:
+        denom = prof.sum(axis=1, keepdims=True)
+        prof = prof / np.maximum(denom, 1e-30)
+    out = EventFrame({"bin_start": edges[:-1], "bin_end": edges[1:]})
+    keep = np.nonzero(prof.sum(axis=0) > 0)[0]
+    order = keep[np.argsort(-prof[:, keep].sum(axis=0), kind="stable")]
+    for f in order:
+        out[str(names_alpha[f])] = prof[:, f]
+    return out
+
+
 @register_time_profile_backend("pallas")
 def _pallas_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
     """The Pallas TPU kernel (repro.kernels.time_bin): scatter-free one-hot
@@ -162,9 +295,15 @@ def _pallas_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
     # normalize to bin units: f32 kernel arithmetic loses ns-scale
     # precision at bin boundaries otherwise
     bw = (t1 - t0) / num_bins
+    if not (bw > 0) or not np.isfinite(bw):
+        # degenerate span (all edges equal, e.g. a single-instant trace fed
+        # directly): every overlap is zero — dividing by bw would turn that
+        # into NaN where the numpy backend returns zeros
+        return np.zeros((num_bins, nf))
     return np.asarray(time_profile_matrix(
         (starts - t0) / bw, (ends - t0) / bw, name_codes, rate * bw,
-        n_funcs=nf, n_bins=num_bins, t0=0.0, t1=float(num_bins))).T
+        n_funcs=nf, n_bins=num_bins, t0=0.0, t1=float(num_bins),
+        be=accel.block_size(len(starts)))).T
 
 
 @register_time_profile_backend("numpy")
@@ -194,7 +333,8 @@ def _exact_profile(starts, ends, rate, name_codes, edges, nf) -> np.ndarray:
 
 @register_op("load_imbalance", needs_structure=True)
 def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
-                   top_functions: Optional[int] = None) -> EventFrame:
+                   top_functions: Optional[int] = None,
+                   backend: str = "numpy") -> EventFrame:
     """Per-function load imbalance across processes (§IV-D, Fig. 7).
 
     For each function, sums the metric per process and reports
@@ -207,6 +347,8 @@ def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
             function (does not affect the ratio).
         top_functions: truncate to the N functions with the largest mean
             metric (None = all functions with any time).
+        backend: ``"numpy"`` (default, exact) or ``"pallas"`` (pair_sum
+            one-hot matmul kernel, f32 rounding; see docs/kernels.md).
 
     Returns:
         EventFrame sorted by mean metric descending with ``Name``,
@@ -214,6 +356,41 @@ def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
         (list of the heaviest process ids), ``<metric>.mean`` and
         ``<metric>.max`` (ns).
     """
+    return get_backend("load_imbalance", backend)(
+        trace, metric=metric, num_processes=num_processes,
+        top_functions=top_functions)
+
+
+def _imbalance_assemble(tot, names_alpha, metric, num_processes,
+                        top_functions, nprocs) -> EventFrame:
+    """Shared finalization of load_imbalance: the per-(function, process)
+    totals matrix (name-code-aligned with ``names_alpha``) becomes the
+    ranked imbalance frame — one implementation for the eager backends and
+    the streaming finalizer."""
+    nf = tot.shape[0]
+    active = tot.sum(axis=1) > 0
+    mean = tot.sum(axis=1) / max(nprocs, 1)
+    mx = tot.max(axis=1) if tot.size else np.zeros(nf)
+    imb = np.where(mean > 0, mx / np.maximum(mean, 1e-30), 0.0)
+    topk = np.argsort(-tot, axis=1)[:, :num_processes]
+    sel = np.nonzero(active)[0]
+    order = sel[np.argsort(-mean[sel], kind="stable")]
+    if top_functions:
+        order = order[:top_functions]
+    return EventFrame({
+        NAME: Categorical(order.astype(np.int32), names_alpha),
+        f"{metric}.imbalance": imb[order],
+        "Top processes": np.asarray([list(map(int, topk[i])) for i in order], dtype=object),
+        f"{metric}.mean": mean[order],
+        f"{metric}.max": mx[order],
+    })
+
+
+@register_backend("load_imbalance", "numpy")
+def _load_imbalance_numpy(trace, *, metric: str = EXC,
+                          num_processes: int = 5,
+                          top_functions: Optional[int] = None) -> EventFrame:
+    """The exact reference: one scatter-add over every Enter row."""
     ev = trace.events
     ent = ev.mask(ev.cat(ET).mask_eq(ENTER))
     vals = np.nan_to_num(np.asarray(ent.column(metric), np.float64))
@@ -224,22 +401,34 @@ def load_imbalance(trace, metric: str = EXC, num_processes: int = 5,
     nf = len(cats)
     tot = np.zeros((nf, nprocs))
     np.add.at(tot, (names, procs), vals)
-    active = tot.sum(axis=1) > 0
-    mean = tot.sum(axis=1) / max(nprocs, 1)
-    mx = tot.max(axis=1)
-    imb = np.where(mean > 0, mx / np.maximum(mean, 1e-30), 0.0)
-    topk = np.argsort(-tot, axis=1)[:, :num_processes]
-    sel = np.nonzero(active)[0]
-    order = sel[np.argsort(-mean[sel], kind="stable")]
-    if top_functions:
-        order = order[:top_functions]
-    return EventFrame({
-        NAME: Categorical(order.astype(np.int32), cats),
-        f"{metric}.imbalance": imb[order],
-        "Top processes": np.asarray([list(map(int, topk[i])) for i in order], dtype=object),
-        f"{metric}.mean": mean[order],
-        f"{metric}.max": mx[order],
-    })
+    return _imbalance_assemble(tot, cats, metric, num_processes,
+                               top_functions, nprocs)
+
+
+@register_backend("load_imbalance", "pallas")
+def _load_imbalance_pallas(trace, *, metric: str = EXC,
+                           num_processes: int = 5,
+                           top_functions: Optional[int] = None
+                           ) -> EventFrame:
+    """Accelerator load imbalance: canonical-ordered completed-call records
+    through the pair_sum one-hot-matmul kernel (function × rank totals to
+    f32 rounding; unmatched enters contribute exactly 0 in the reference
+    and are simply dropped here)."""
+    ev = trace.events
+    ts = np.asarray(ev[TS], np.float64)
+    is_enter = ev.cat(ET).mask_eq(ENTER)
+    match = np.asarray(ev.column("_matching_event"), np.int64)
+    sel = np.nonzero(is_enter & (match >= 0))[0]
+    vals = np.nan_to_num(np.asarray(ev.column(metric), np.float64)[sel])
+    names_alpha, _order, inv = accel.alpha_positions(ev.cat(NAME).categories)
+    acode = inv[ev.codes(NAME)[sel]]
+    procs = np.asarray(ev[PROC], np.int64)[sel]
+    nprocs = trace.num_processes
+    o = accel.canonical_order(ts[sel], ts[match[sel]], procs, acode, vals)
+    tot = accel.pair_sum(acode[o], procs[o], vals[o], len(names_alpha),
+                         max(nprocs, 1))
+    return _imbalance_assemble(tot, names_alpha, metric, num_processes,
+                               top_functions, nprocs)
 
 
 @register_op("idle_time", needs_structure=True)
@@ -342,22 +531,36 @@ class _FlatProfileAgg(StreamAgg):
     integer-ns metrics are exact in float64 (< 2⁵³), so merging partials is
     order-independent and the result matches the in-memory op bit for bit.
     A name with an unmatched Enter reproduces the in-memory NaN-poisoning:
-    its group total collapses to 0 (``nan_to_num`` after aggregation)."""
+    its group total collapses to 0 (``nan_to_num`` after aggregation).
+
+    ``backend="pallas"`` buffers the completed-call records instead of
+    accumulating sums, then canonical-sorts and invokes the kernel once at
+    finalize — exactly what the eager pallas backend does, so the two paths
+    produce byte-identical frames (counts stay exact either way)."""
 
     needs_calls = True
     supports_parallel = True
 
     def __init__(self, metrics: Sequence[str] = (EXC,),
-                 groupby_column: str = NAME, per_process: bool = False):
+                 groupby_column: str = NAME, per_process: bool = False,
+                 backend: str = "numpy"):
         if groupby_column != NAME:
             raise StreamingUnsupported(
                 f"streaming flat_profile groups by {NAME!r} only, got "
                 f"groupby_column={groupby_column!r}")
+        get_backend("flat_profile", backend)  # fail fast on unknown names
+        if backend not in ("numpy", "pallas"):
+            raise StreamingUnsupported(
+                f"streaming flat_profile supports backends ('numpy', "
+                f"'pallas'); {backend!r} is trace-level — materialize with "
+                f".collect() to use it")
+        self.backend = backend
         self.metrics = list(metrics)
         for m in self.metrics:
             _check_metric(m, "flat_profile")
         self.per_process = per_process
         nm = len(self.metrics)
+        self._recs: List[tuple] = []
         if per_process:
             self._counts = np.zeros((0, 0), np.int64)
             self._sums = np.zeros((nm, 0, 0))
@@ -372,34 +575,62 @@ class _FlatProfileAgg(StreamAgg):
         calls = chunk.calls
         nf = len(chunk.names)
         metric_vals = {INC: calls.inc, EXC: calls.exc}
+        if self.backend != "numpy":
+            vals = np.stack([np.nan_to_num(metric_vals[m])
+                             for m in self.metrics], axis=1) \
+                if len(calls.name) else np.zeros((0, len(self.metrics)))
+            self._recs.append((calls.name.copy(), calls.proc.copy(),
+                               calls.start.copy(), calls.end.copy(), vals))
         if self.per_process:
             procs = np.asarray(ev[PROC], np.int64)[is_enter]
             np_ = int(max(procs.max() + 1 if len(procs) else 0,
                           calls.proc.max() + 1 if len(calls.proc) else 0))
             self._counts = grow_to(self._counts, (nf, np_))
-            self._sums = grow_to(self._sums, (self._sums.shape[0], nf, np_))
             np.add.at(self._counts, (codes, procs), 1)
-            for i, m in enumerate(self.metrics):
-                np.add.at(self._sums[i], (calls.name, calls.proc),
-                          metric_vals[m])
+            if self.backend == "numpy":
+                self._sums = grow_to(self._sums,
+                                     (self._sums.shape[0], nf, np_))
+                for i, m in enumerate(self.metrics):
+                    np.add.at(self._sums[i], (calls.name, calls.proc),
+                              metric_vals[m])
         else:
             self._counts = grow_to(self._counts, (nf,))
-            self._sums = grow_to(self._sums, (self._sums.shape[0], nf))
             np.add.at(self._counts, codes, 1)
-            for i, m in enumerate(self.metrics):
-                np.add.at(self._sums[i], calls.name, metric_vals[m])
+            if self.backend == "numpy":
+                self._sums = grow_to(self._sums, (self._sums.shape[0], nf))
+                for i, m in enumerate(self.metrics):
+                    np.add.at(self._sums[i], calls.name, metric_vals[m])
 
     def merge_from(self, other, code_map) -> None:
         # counts/sums lead with the name axis in both layouts; procs (when
         # present) are global ids and need no remap
         self._counts = _scatter_names(self._counts, other._counts, code_map,
                                       axis=0)
-        self._sums = _scatter_names(self._sums, other._sums, code_map,
-                                    axis=1)
+        if self.backend == "numpy":
+            self._sums = _scatter_names(self._sums, other._sums, code_map,
+                                        axis=1)
+        else:
+            for name, proc, start, end, vals in other._recs:
+                self._recs.append((code_map[name], proc, start, end, vals))
+
+    def _gather_records(self, inv):
+        """Concatenate the buffered call records into flat arrays with
+        alphabetical name positions — shared by the pallas finalizers."""
+        if self._recs:
+            name = np.concatenate([r[0] for r in self._recs])
+            proc = np.concatenate([r[1] for r in self._recs])
+            start = np.concatenate([r[2] for r in self._recs])
+            end = np.concatenate([r[3] for r in self._recs])
+            vals = np.concatenate([r[4] for r in self._recs])
+        else:
+            name = proc = np.zeros(0, np.int64)
+            start = end = np.zeros(0)
+            vals = np.zeros((0, len(self.metrics)))
+        return inv[name], proc, start, end, vals
 
     def result(self, ctx) -> EventFrame:
         nf = len(ctx.names)
-        if nf == 0 or not np.any(self._counts):
+        if self.backend == "numpy" and (nf == 0 or not np.any(self._counts)):
             out = EventFrame()
             out[NAME] = np.asarray([])
             for m in self.metrics:
@@ -409,31 +640,34 @@ class _FlatProfileAgg(StreamAgg):
         open_names, open_procs = ctx.open_calls
         nm = len(self.metrics)
         if self.per_process:
-            np_ = max(self._counts.shape[1], self._sums.shape[2], 1)
+            np_ = max(self._counts.shape[1], self._sums.shape[2],
+                      ctx.num_processes, 1)
             counts = _pad_to(self._counts, (nf, np_))[order]
-            sums = _pad_to(self._sums, (nm, nf, np_))[:, order]
+            if self.backend == "numpy":
+                sums = _pad_to(self._sums, (nm, nf, np_))[:, order]
+            else:
+                acode, proc, start, end, vals = self._gather_records(inv)
+                o = accel.canonical_order(start, end, proc, acode,
+                                          vals[:, 0] if nm else start)
+                sums = np.stack([accel.pair_sum(acode[o], proc[o],
+                                                vals[o, i], nf, np_)
+                                 for i in range(nm)]) \
+                    if nm else np.zeros((0, nf, np_))
             if len(open_names):
                 sums[:, inv[open_names], open_procs] = 0.0
-            f_alpha, p_alpha = np.nonzero(counts)
-            out = EventFrame()
-            out[NAME] = Categorical(f_alpha.astype(np.int32), names_alpha)
-            out[PROC] = p_alpha.astype(np.int64)
-            out["count"] = counts[f_alpha, p_alpha]
-            for i, m in enumerate(self.metrics):
-                out[m] = sums[i, f_alpha, p_alpha]
         else:
             counts = _pad_to(self._counts, (nf,))[order]
-            sums = _pad_to(self._sums, (nm, nf))[:, order]
+            if self.backend == "numpy":
+                sums = _pad_to(self._sums, (nm, nf))[:, order]
+            else:
+                acode, proc, start, end, vals = self._gather_records(inv)
+                o = accel.canonical_order(start, end, proc, acode,
+                                          vals[:, 0] if nm else start)
+                sums = accel.seg_sum(acode[o], vals[o], nf).T
             if len(open_names):
                 sums[:, inv[open_names]] = 0.0
-            present = np.nonzero(counts)[0]
-            out = EventFrame()
-            out[NAME] = Categorical(present.astype(np.int32), names_alpha)
-            out["count"] = counts[present]
-            for i, m in enumerate(self.metrics):
-                out[m] = sums[i, present]
-        order = np.argsort(-np.asarray(out[self.metrics[0]]), kind="stable")
-        return out.take(order)
+        return _flat_assemble(names_alpha, counts, sums, self.metrics,
+                              self.per_process)
 
 
 @register_streaming("time_profile")
@@ -443,7 +677,12 @@ class _TimeProfileAgg(StreamAgg):
     pre-pass fixes the global [t_min, t_max] bin edges first (the stream is
     read twice; peak memory stays bounded).  Partial-sum order differs from
     the in-memory single pass, so values agree to float64 rounding, not
-    necessarily bit-for-bit."""
+    necessarily bit-for-bit.
+
+    Non-numpy backends (record-level contract) buffer the completed-call
+    records and run :func:`_profile_from_records` at finalize — the same
+    canonical-sort + single-kernel-call core the eager op uses, so e.g.
+    ``backend="pallas"`` yields byte-identical frames on both paths."""
 
     needs_calls = True
     needs_stats = True
@@ -452,13 +691,12 @@ class _TimeProfileAgg(StreamAgg):
     def __init__(self, num_bins: int = 32, metric: str = EXC,
                  normalized: bool = False, backend: str = "numpy"):
         _check_metric(metric, "time_profile")
-        if backend != "numpy":
-            raise StreamingUnsupported(
-                f"streaming time_profile supports backend='numpy' only, "
-                f"got {backend!r}")
+        self._fn = get_backend("time_profile", backend)
+        self.backend = backend
         self.num_bins = num_bins
         self.metric = metric
         self.normalized = normalized
+        self._recs: List[tuple] = []
         self._H = np.zeros((5, num_bins + 2, 0))
         self._Z = np.zeros((num_bins, 0))
         self._edges: Optional[np.ndarray] = None
@@ -474,6 +712,11 @@ class _TimeProfileAgg(StreamAgg):
     def update(self, chunk) -> None:
         calls = chunk.calls
         if calls is None or len(calls.name) == 0:
+            return
+        if self.backend != "numpy":
+            w = np.nan_to_num(calls.inc if self.metric == INC else calls.exc)
+            self._recs.append((calls.name.copy(), calls.proc.copy(),
+                               calls.start.copy(), calls.end.copy(), w))
             return
         nf = len(chunk.names)
         self._H = grow_to(self._H, (5, self.num_bins + 2, nf))
@@ -500,6 +743,10 @@ class _TimeProfileAgg(StreamAgg):
     def merge_from(self, other, code_map) -> None:
         # bin edges come from the shared stats pre-pass, so workers and
         # parent agree on them; only the name axis needs remapping
+        if self.backend != "numpy":
+            for name, proc, start, end, w in other._recs:
+                self._recs.append((code_map[name], proc, start, end, w))
+            return
         self._H = _scatter_names(self._H, other._H, code_map, axis=2)
         self._Z = _scatter_names(self._Z, other._Z, code_map, axis=1)
 
@@ -508,6 +755,21 @@ class _TimeProfileAgg(StreamAgg):
             return EventFrame({"bin_start": np.asarray([]),
                                "bin_end": np.asarray([])})
         nf = len(ctx.names)
+        if self.backend != "numpy":
+            names_alpha, _order, inv = _alpha(ctx, nf)
+            if self._recs:
+                name = np.concatenate([r[0] for r in self._recs])
+                proc = np.concatenate([r[1] for r in self._recs])
+                start = np.concatenate([r[2] for r in self._recs])
+                end = np.concatenate([r[3] for r in self._recs])
+                w = np.concatenate([r[4] for r in self._recs])
+            else:
+                name = proc = np.zeros(0, np.int64)
+                start = end = w = np.zeros(0)
+            return _profile_from_records(start, end, w, proc, inv[name],
+                                         names_alpha, self._edges,
+                                         self.num_bins, self.normalized,
+                                         self._fn)
         H = _pad_to(self._H, (5, self.num_bins + 2, nf))
         Z = _pad_to(self._Z, (self.num_bins, nf))
         cum = np.cumsum(H[:, : self.num_bins + 1, :], axis=1)
@@ -532,55 +794,75 @@ class _TimeProfileAgg(StreamAgg):
 class _LoadImbalanceAgg(StreamAgg):
     """Combinable load imbalance: the per-(function, process) metric totals
     merge exactly across chunks (integer-ns sums); the ratio arithmetic at
-    finalize is identical to the in-memory op."""
+    finalize is identical to the in-memory op.  ``backend="pallas"``
+    buffers records and runs the pair_sum kernel once at finalize, exactly
+    like the eager pallas backend."""
 
     needs_calls = True
     supports_parallel = True
 
     def __init__(self, metric: str = EXC, num_processes: int = 5,
-                 top_functions: Optional[int] = None):
+                 top_functions: Optional[int] = None,
+                 backend: str = "numpy"):
         _check_metric(metric, "load_imbalance")
+        get_backend("load_imbalance", backend)
+        if backend not in ("numpy", "pallas"):
+            raise StreamingUnsupported(
+                f"streaming load_imbalance supports backends ('numpy', "
+                f"'pallas'); {backend!r} is trace-level — materialize with "
+                f".collect() to use it")
+        self.backend = backend
         self.metric = metric
         self.num_processes = num_processes
         self.top_functions = top_functions
+        self._recs: List[tuple] = []
         self._tot = np.zeros((0, 0))
 
     def update(self, chunk) -> None:
         calls = chunk.calls
         if calls is None or len(calls.name) == 0:
             return
+        vals = calls.inc if self.metric == INC else calls.exc
+        if self.backend != "numpy":
+            self._recs.append((calls.name.copy(), calls.proc.copy(),
+                               calls.start.copy(), calls.end.copy(),
+                               np.nan_to_num(vals)))
+            return
         nf = len(chunk.names)
         np_ = int(calls.proc.max()) + 1
         self._tot = grow_to(self._tot, (nf, np_))
-        vals = calls.inc if self.metric == INC else calls.exc
         np.add.at(self._tot, (calls.name, calls.proc), vals)
 
     def merge_from(self, other, code_map) -> None:
+        if self.backend != "numpy":
+            for name, proc, start, end, vals in other._recs:
+                self._recs.append((code_map[name], proc, start, end, vals))
+            return
         self._tot = _scatter_names(self._tot, other._tot, code_map, axis=0)
 
     def result(self, ctx) -> EventFrame:
         nf = len(ctx.names)
         nprocs = ctx.num_processes
-        tot = _pad_to(self._tot, (nf, max(nprocs, 1)))
-        names_alpha, order, _inv = _alpha(ctx, nf)
-        tot = tot[order]
-        active = tot.sum(axis=1) > 0
-        mean = tot.sum(axis=1) / max(nprocs, 1)
-        mx = tot.max(axis=1) if tot.size else np.zeros(nf)
-        imb = np.where(mean > 0, mx / np.maximum(mean, 1e-30), 0.0)
-        topk = np.argsort(-tot, axis=1)[:, : self.num_processes]
-        sel = np.nonzero(active)[0]
-        order = sel[np.argsort(-mean[sel], kind="stable")]
-        if self.top_functions:
-            order = order[: self.top_functions]
-        return EventFrame({
-            NAME: Categorical(order.astype(np.int32), names_alpha),
-            f"{self.metric}.imbalance": imb[order],
-            "Top processes": np.asarray(
-                [list(map(int, topk[i])) for i in order], dtype=object),
-            f"{self.metric}.mean": mean[order],
-            f"{self.metric}.max": mx[order],
-        })
+        names_alpha, order, inv = _alpha(ctx, nf)
+        if self.backend == "numpy":
+            tot = _pad_to(self._tot, (nf, max(nprocs, 1)))[order]
+        else:
+            if self._recs:
+                name = np.concatenate([r[0] for r in self._recs])
+                proc = np.concatenate([r[1] for r in self._recs])
+                start = np.concatenate([r[2] for r in self._recs])
+                end = np.concatenate([r[3] for r in self._recs])
+                vals = np.concatenate([r[4] for r in self._recs])
+            else:
+                name = proc = np.zeros(0, np.int64)
+                start = end = vals = np.zeros(0)
+            acode = inv[name]
+            o = accel.canonical_order(start, end, proc, acode, vals)
+            tot = accel.pair_sum(acode[o], proc[o], vals[o], nf,
+                                 max(nprocs, 1))
+        return _imbalance_assemble(tot, names_alpha, self.metric,
+                                   self.num_processes, self.top_functions,
+                                   nprocs)
 
 
 @register_streaming("idle_time")

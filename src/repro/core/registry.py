@@ -40,6 +40,7 @@ from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
 __all__ = [
     "OpSpec", "register_op", "register_streaming", "get_op", "list_ops",
     "terminal_op",
+    "register_backend", "get_backend", "op_backends", "list_backends",
     "ReaderSpec", "register_reader", "register_chunked", "register_units",
     "get_reader", "list_readers",
     "resolve_reader", "sniff_format", "rank_shard_procs", "PlanHints",
@@ -173,8 +174,78 @@ class OpSpec:
     #: a process pool; others degrade to serial streaming with a warning.
     parallel_safe: bool = False
 
+    @property
+    def backends(self) -> Tuple[str, ...]:
+        """Names of this op's registered execution backends (sorted).
+
+        Empty for ops without a ``backend=`` kwarg; ops that accept one
+        always register at least ``"numpy"`` (the exact reference
+        implementation) and usually ``"pallas"`` (the accelerator kernel,
+        interpret-mode on CPU).  See :func:`register_backend`.
+        """
+        return tuple(list_backends(self.name))
+
 
 _OP_REGISTRY: Dict[str, OpSpec] = {}
+
+#: per-op backend tables: ``_BACKENDS[op][backend_name] -> callable``.  The
+#: callable's contract is op-specific (documented on each op) — what the
+#: registry guarantees is uniform *resolution*: every op with a ``backend=``
+#: kwarg looks its argument up here and fails loudly listing the options.
+_BACKENDS: Dict[str, Dict[str, Callable[..., Any]]] = {}
+
+
+def op_backends(op_name: str) -> Dict[str, Callable[..., Any]]:
+    """The live backend table of ``op_name`` (created on first use).
+
+    Mutating the returned dict *is* the registration mechanism —
+    :func:`register_backend` writes into it, and deleting a key
+    unregisters the backend.  ``ops_summary.TIME_PROFILE_BACKENDS`` is an
+    alias of ``op_backends("time_profile")`` for backwards compatibility.
+    """
+    return _BACKENDS.setdefault(op_name, {})
+
+
+def register_backend(op_name: str, backend: str) -> Callable:
+    """Decorator registering an execution backend for ``op_name``.
+
+    Ops resolve their ``backend=`` kwarg through :func:`get_backend`;
+    last registration wins, like the op registry itself::
+
+        @register_backend("flat_profile", "my_accel")
+        def _my_flat_profile(trace, *, metrics, groupby_column, per_process):
+            ...
+
+    The callable's signature is the op's own contract: trace-level ops
+    take ``(trace, **op_kwargs)``; ``time_profile`` keeps its historical
+    record-level contract ``fn(starts, ends, rate, name_codes, edges, nf)``
+    (see docs/kernels.md).
+    """
+
+    def deco(fn: Callable) -> Callable:
+        op_backends(op_name)[backend] = fn
+        return fn
+
+    return deco
+
+
+def get_backend(op_name: str, backend: str) -> Callable[..., Any]:
+    """Resolve ``backend`` for ``op_name`` or raise ValueError listing the
+    registered names — the one lookup every ``backend=`` kwarg goes
+    through (eager ops, streaming finalizers, and the serving layer)."""
+    table = _BACKENDS.get(op_name)
+    fn = table.get(backend) if table else None
+    if fn is None:
+        raise ValueError(
+            f"unknown {op_name} backend {backend!r}; registered: "
+            f"{sorted(table) if table else []}")
+    return fn
+
+
+def list_backends(op_name: str) -> List[str]:
+    """Sorted backend names registered for ``op_name`` (empty when the op
+    has no backend table)."""
+    return sorted(_BACKENDS.get(op_name, ()))
 
 
 def register_op(name: Optional[str] = None, *, needs_structure: bool = False,

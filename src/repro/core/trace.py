@@ -228,10 +228,12 @@ class Trace:
     # §IV-B summary ops — thin wrappers over one-step query plans
     # ------------------------------------------------------------------
     def flat_profile(self, metrics: Sequence[str] = (EXC,), per_process: bool = False,
-                     groupby_column: str = NAME) -> EventFrame:
+                     groupby_column: str = NAME,
+                     backend: str = "numpy") -> EventFrame:
         return self.query().run("flat_profile", metrics=metrics,
                                 per_process=per_process,
-                                groupby_column=groupby_column)
+                                groupby_column=groupby_column,
+                                backend=backend)
 
     def time_profile(self, num_bins: int = 32, metric: str = EXC,
                      normalized: bool = False, backend: str = "numpy") -> EventFrame:
@@ -241,11 +243,15 @@ class Trace:
     # ------------------------------------------------------------------
     # §IV-C communication ops
     # ------------------------------------------------------------------
-    def comm_matrix(self, output: str = "size") -> np.ndarray:
-        return self.query().run("comm_matrix", output=output)
+    def comm_matrix(self, output: str = "size",
+                    backend: str = "numpy") -> np.ndarray:
+        return self.query().run("comm_matrix", output=output,
+                                backend=backend)
 
-    def message_histogram(self, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
-        return self.query().run("message_histogram", bins=bins)
+    def message_histogram(self, bins: int = 10, backend: str = "numpy"
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        return self.query().run("message_histogram", bins=bins,
+                                backend=backend)
 
     def comm_by_process(self, output: str = "size") -> EventFrame:
         return self.query().run("comm_by_process", output=output)
@@ -261,10 +267,12 @@ class Trace:
     # §IV-D performance-issue ops
     # ------------------------------------------------------------------
     def load_imbalance(self, metric: str = EXC, num_processes: int = 5,
-                       top_functions: Optional[int] = None) -> EventFrame:
+                       top_functions: Optional[int] = None,
+                       backend: str = "numpy") -> EventFrame:
         return self.query().run("load_imbalance", metric=metric,
                                 num_processes=num_processes,
-                                top_functions=top_functions)
+                                top_functions=top_functions,
+                                backend=backend)
 
     def idle_time(self, idle_functions: Sequence[str] = DEFAULT_IDLE_NAMES,
                   k: Optional[int] = None) -> EventFrame:

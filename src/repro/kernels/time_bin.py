@@ -26,7 +26,7 @@ __all__ = ["time_bin"]
 
 
 def _kernel(start_ref, end_ref, func_ref, rate_ref, out_ref, *, n_funcs,
-            n_bins, t0, bin_w, n_blocks):
+            n_bins, t0, bin_w):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -70,7 +70,7 @@ def time_bin(start, end, func, rate=None, *, n_funcs: int, n_bins: int,
     bin_w = (t1 - t0) / n_bins
 
     kern = functools.partial(_kernel, n_funcs=n_funcs, n_bins=n_bins,
-                             t0=t0, bin_w=bin_w, n_blocks=nb_blocks)
+                             t0=t0, bin_w=bin_w)
     return pl.pallas_call(
         kern,
         grid=(nb_blocks,),

@@ -491,7 +491,8 @@ class TraceService:
             out.append({"name": name, "scope": s.scope,
                         "streaming": s.streaming is not None,
                         "needs_structure": bool(s.needs_structure),
-                        "needs_messages": bool(s.needs_messages)})
+                        "needs_messages": bool(s.needs_messages),
+                        "backends": registry.list_backends(name)})
         return {"ok": True, "ops": out}
 
     def stats(self) -> dict:

@@ -47,6 +47,15 @@ cross-worker merge and fan out over a multi-core work-unit pool under
 Ops marked *streaming: —* need the whole trace and raise
 `StreamingUnsupported` with the escape hatches spelled out.
 
+Ops carrying a *backends* annotation accept a `backend=` keyword selecting
+a registered compute backend for the op's core reduction — `numpy` is the
+exact reference, `pallas` runs the reduction as a TPU Pallas kernel
+(interpret mode on CPU) with results reproducible to f32 rounding and
+digest-identical across the eager/streaming/parallel paths (see
+`docs/kernels.md`).  Additional backends register with
+`repro.core.register_backend(op, name)`; the same keyword works over the
+trace-query service wire protocol.
+
 Terminal-op results are memoized in the plan-result cache
 (`repro.core.plancache`): streaming/scan executions cache by on-disk
 content identity by default (`cache=False` opts out per call or per
@@ -125,9 +134,12 @@ def render() -> str:
             det = _detectors.get_detector(name)
             detector = (f" · detector: {det.category} "
                         f"(threshold {det.threshold:g})" if det else "")
+            bk = spec.backends
+            backends = (" · backends: " + ", ".join(f"`{b}`" for b in bk)
+                        if bk else "")
             lines.append(f"*needs: {', '.join(prereqs) if prereqs else 'nothing'}"
                          f" · scope: {spec.scope}"
-                         f" · streaming: {streaming}{detector}*\n")
+                         f" · streaming: {streaming}{backends}{detector}*\n")
             lines.append(_doc(spec.fn) + "\n")
 
     lines.append("\n## Registered trace readers\n\n"
