@@ -62,6 +62,12 @@ def main(argv=None) -> int:
     for i, name in enumerate(names, 1):
         mod = importlib.import_module(f"benchmarks.{name}")
         title = (mod.__doc__ or name).strip().splitlines()[0].rstrip(".")
+        if not callable(getattr(mod, "bench", None)):
+            # standalone drivers (e.g. bench_serve spawns its own server
+            # subprocess) run via python -m, not from this loop
+            print(f"\n## [{i}/{total}] {name}: {title} "
+                  f"(standalone driver, skipped)")
+            continue
         print(f"\n## [{i}/{total}] {name}: {title}")
         kwargs = {}
         if args.events is not None and "events" in inspect.signature(

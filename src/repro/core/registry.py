@@ -504,6 +504,17 @@ def resolve_reader(path, format: str = "auto") -> ReaderSpec:
         return get_reader(format)
     name = sniff_format(path)
     if name is None:
+        try:
+            size = (None if os.path.isdir(path)
+                    else os.path.getsize(os.fspath(path)))
+        except OSError:
+            size = None
+        if size == 0:
+            from .errors import TraceReadError
+            raise TraceReadError(
+                os.fspath(path),
+                f"empty file (0 bytes) — cannot determine trace format. "
+                f"Sniffers tried: {_describe_readers()}")
         raise ValueError(
             f"cannot determine trace format of {path!r}: no registered "
             f"sniffer recognized the content.  Registered formats: "

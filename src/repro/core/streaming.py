@@ -744,6 +744,8 @@ class StreamingTrace:
         self._stats0: Optional[StreamStats] = None  # no-selection stats
         self._pool = None  # SharedPool, possibly shared across a TraceSet
         self._units_cache: dict = {}  # work-unit plans per (paths, workers)
+        from .errors import IngestReport
+        self._ingest = IngestReport()  # filled by tolerant (on_error) reads
 
     def wants_parallel(self) -> bool:
         """True when terminal ops should try the multi-core executor."""
@@ -764,20 +766,36 @@ class StreamingTrace:
         bounds = hints.proc_bounds if hints else None
         paths = select_shards(self.paths, self.format, procs=procs,
                               proc_bounds=bounds)
+        kw = dict(self.reader_kwargs)
+        if "on_error" in kw:
+            # tolerant read: route per-record skip counts into this
+            # handle's persistent report (readers reset their path entry
+            # per pass, so multi-pass plans never double count)
+            kw.setdefault("report", self._ingest)
+        from .cancellation import check_cancelled
         for p in paths:
             spec = registry.resolve_reader(p, self.format)
             if spec.iter_chunks is not None:
-                yield from spec.iter_chunks(p, self.chunk_rows, hints,
-                                            **self.reader_kwargs)
+                frames = spec.iter_chunks(p, self.chunk_rows, hints, **kw)
             else:
-                yield from iter_chunks_fallback(p, self.chunk_rows, hints,
-                                                spec.read,
-                                                **self.reader_kwargs)
+                frames = iter_chunks_fallback(p, self.chunk_rows, hints,
+                                              spec.read, **kw)
+            for frame in frames:
+                # cooperative deadline point: a cancelled request (service
+                # 504) frees its lane thread at the next chunk boundary
+                check_cancelled()
+                yield frame
 
     def iter_chunks(self) -> Iterator[EventFrame]:
         """Raw chunk frames (this handle's plan steps applied, masks
         fused per chunk)."""
         yield from _masked_chunks(self, self._steps)
+
+    def ingest_report(self):
+        """The :class:`~repro.core.errors.IngestReport` accumulated by
+        tolerant (``on_error="skip"``) reads through this handle.  Counts
+        reflect the most recent pass over each source path."""
+        return self._ingest
 
     def with_steps(self, steps: Sequence) -> "StreamingTrace":
         """Shallow copy carrying plan ``steps`` — how a shared TraceSet
@@ -792,6 +810,7 @@ class StreamingTrace:
         clone._steps = tuple(steps)
         clone._pool = self._pool
         clone._units_cache = self._units_cache  # same paths, same plans
+        clone._ingest = self._ingest  # one report per logical handle
         return clone
 
     # -- materialization escape hatch --------------------------------------

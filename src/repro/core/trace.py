@@ -44,6 +44,7 @@ class Trace:
         self._structured = False
         self._cct: Optional[CCT] = None
         self._msg_match: Optional[np.ndarray] = None
+        self._ingest = None  # IngestReport set by readers (see core.errors)
 
     # ------------------------------------------------------------------
     # constructors (delegate to repro.readers; imported lazily to avoid
@@ -154,6 +155,17 @@ class Trace:
     # ------------------------------------------------------------------
     # basics
     # ------------------------------------------------------------------
+    def ingest_report(self):
+        """The :class:`~repro.core.errors.IngestReport` from the read that
+        produced this trace: exact per-path counts of surviving rows,
+        skipped records and lost bytes.  Always clean for strict reads
+        (they raise instead of dropping); a fresh empty report for traces
+        not built by a reader."""
+        from .errors import IngestReport
+        if self._ingest is None:
+            self._ingest = IngestReport()
+        return self._ingest
+
     @property
     def num_processes(self) -> int:
         if len(self.events) == 0:

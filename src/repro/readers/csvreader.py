@@ -8,11 +8,14 @@ columns are kept verbatim (numeric when they parse as floats).
 from __future__ import annotations
 
 import itertools
+import os
 from typing import Iterator, List, Optional
 
 import numpy as np
 
 from ..core.constants import ET, MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS
+from ..core.errors import (IngestReport, TraceReadError, check_on_error,
+                           require_nonempty)
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
 from ..core.registry import (ByteSpan, PlanHints, even_edges,
                              rank_shard_procs, register_chunked,
@@ -54,6 +57,49 @@ def _parse_header(line: str):
         headers.append(name)
         scales.append(scale)
     return headers, scales
+
+
+#: canonical columns whose values must be numeric — a non-numeric value in
+#: one of these is a malformed *row*, never a license to silently retype
+#: the whole column as categorical (the pre-fault-tolerance behavior)
+_NUMERIC_CANON = (TS, PROC, THREAD, MSG_SIZE, PARTNER, TAG)
+
+
+def _row_fault(parts: List[str], num_idx: List[tuple]) -> Optional[str]:
+    """Why this data row is malformed, or None when it is well-formed."""
+    for i, h in num_idx:
+        v = parts[i] if i < len(parts) else ""
+        if not v:
+            continue
+        try:
+            float(v)
+        except ValueError:
+            return f"column {h!r} value {v!r} is not numeric"
+    return None
+
+
+def _validate_rows(numbered_rows, headers: List[str], path: str,
+                   on_error: str, report: Optional[IngestReport],
+                   origin: str = "") -> List[List[str]]:
+    """Filter ``(lineno, parts)`` pairs down to well-formed rows.  Strict
+    raises :class:`TraceReadError` with file:line context at the first bad
+    row; skip drops it and counts it in ``report``.  The decision is per
+    physical row, so eager / chunked / byte-span reads of one damaged file
+    keep identical survivors."""
+    num_idx = [(i, h) for i, h in enumerate(headers) if h in _NUMERIC_CANON]
+    out: List[List[str]] = []
+    for lineno, parts in numbered_rows:
+        fault = _row_fault(parts, num_idx)
+        if fault is None:
+            out.append(parts)
+            continue
+        locus = f"{origin}line {lineno}"
+        if on_error == "strict":
+            raise TraceReadError(path, f"malformed CSV row ({fault})",
+                                 locus=locus)
+        if report is not None:
+            report.skip(path, 1, locus, fault)
+    return out
 
 
 def _rows_to_frame(headers: List[str], scales: List[float],
@@ -142,42 +188,112 @@ def _infer_decisions(headers: List[str], rows: List[List[str]],
 
 @register_reader("csv", extensions=(".csv",), sniff=_sniff_csv,
                  shard_procs=rank_shard_procs)
-def read_csv(path_or_buf, label: Optional[str] = None) -> Trace:
+def read_csv(path_or_buf, label: Optional[str] = None,
+             on_error: str = "strict",
+             report: Optional[IngestReport] = None) -> Trace:
+    check_on_error(on_error, ("strict", "skip"))
+    rpt = report if report is not None else IngestReport()
     if isinstance(path_or_buf, str):
-        with open(path_or_buf) as f:
-            text = f.read()
+        require_nonempty(path_or_buf, os.path.getsize(path_or_buf),
+                         what="csv trace")
+        with open(path_or_buf, "rb") as f:
+            lines = f.read().splitlines()
         label = label or path_or_buf
     else:
-        text = path_or_buf.read()
-    lines = [ln for ln in text.splitlines() if ln.strip()]
-    if not lines:
-        return Trace(EventFrame(), label=label)
-    headers, scales = _parse_header(lines[0])
-    rows = [[p.strip() for p in ln.split(",")] for ln in lines[1:]]
+        lines = path_or_buf.read().splitlines()
+    src = path_or_buf if isinstance(path_or_buf, str) else "<buffer>"
+    rpt.begin(src)
+    numbered = []
+    for i, ln in enumerate(lines):
+        if isinstance(ln, bytes):
+            try:
+                ln = ln.decode("utf-8")
+            except UnicodeDecodeError as e:
+                # the undecodable unit is the physical line — same skip
+                # granularity as a malformed row, so every execution mode
+                # drops the identical line set
+                if on_error == "strict":
+                    raise TraceReadError(
+                        src, f"undecodable bytes — not UTF-8 ({e})",
+                        locus=f"line {i + 1}") from e
+                rpt.skip(src, 1, f"line {i + 1}",
+                         "undecodable bytes (not UTF-8)")
+                continue
+        if ln.strip():
+            numbered.append((i + 1, ln))
+    if not numbered:
+        t = Trace(EventFrame(), label=label)
+        t._ingest = rpt
+        return t
+    headers, scales = _parse_header(numbered[0][1])
+    data = [(no, [p.strip() for p in ln.split(",")])
+            for no, ln in numbered[1:]]
+    rows = _validate_rows(data, headers, src, on_error, rpt)
+    rpt.add_rows(src, len(rows))
     ev, _ = _rows_to_frame(headers, scales, rows)
-    return Trace(optimize_dtypes(ev), label=label)
+    t = Trace(optimize_dtypes(ev), label=label)
+    t._ingest = rpt
+    return t
+
+
+def _decode_header(raw: bytes, path: str) -> str:
+    """The header is the anchor (it types every column): undecodable bytes
+    there are fatal under every policy, with the file named."""
+    try:
+        return raw.decode("utf-8")
+    except UnicodeDecodeError as e:
+        raise TraceReadError(path, f"undecodable bytes in CSV header — "
+                                   f"not UTF-8 ({e})", locus="line 1") from e
+
+
+def _decoded_lines(blines, path: str, on_error: str,
+                   report: Optional[IngestReport], origin: str = "",
+                   first_line: int = 2) -> Iterator[str]:
+    """Per-line UTF-8 decode with the reader's error policy: strict raises
+    with file:line context, skip drops exactly that physical line (counted
+    in ``report``) — the same granularity as a malformed row, so serial,
+    chunked and span-parallel reads keep identical survivors."""
+    n = first_line
+    for bln in blines:
+        try:
+            yield bln.decode("utf-8")
+        except UnicodeDecodeError as e:
+            locus = f"{origin}line {n}"
+            if on_error == "strict":
+                raise TraceReadError(path, f"undecodable bytes — not "
+                                           f"UTF-8 ({e})", locus=locus) from e
+            if report is not None:
+                report.skip(path, 1, locus, "undecodable bytes (not UTF-8)")
+        n += 1
 
 
 @register_chunked("csv")
 def iter_chunks_csv(path: str, chunk_rows: int,
                     hints: Optional[PlanHints] = None,
                     label: Optional[str] = None,
-                    byte_range: Optional[tuple] = None
+                    byte_range: Optional[tuple] = None,
+                    on_error: str = "strict",
+                    report: Optional[IngestReport] = None
                     ) -> Iterator[EventFrame]:
     """Stream a CSV trace in bounded chunks, with process/time pushdown
     applied per row before the columns are built.  ``byte_range=(lo, hi)``
     restricts the read to data lines starting inside the span (parallel
-    work units); the header is always parsed.  Caveat: extra-column
-    num/cat type decisions are then made per span — ambiguous columns that
-    the whole-file read types over all rows should use serial streaming."""
+    work units); the header is always parsed.  ``on_error="skip"`` drops
+    malformed rows (non-numeric values in canonical numeric columns) with
+    exact counts in ``report``.  Caveat: extra-column num/cat type
+    decisions are made per span — ambiguous columns that the whole-file
+    read types over all rows should use serial streaming."""
+    check_on_error(on_error, ("strict", "skip"))
+    require_nonempty(path, os.path.getsize(path), what="csv trace")
+    if report is not None and byte_range is None:
+        report.begin(path)
     if byte_range is not None:
         from .jsonl import iter_lines_range
-        # strict decoding, like the serial text-mode open: invalid UTF-8
-        # must fail identically in both modes, not diverge silently.
         # Decoding per complete line is split-safe — multi-byte characters
-        # never straddle a line boundary.
+        # never straddle a line boundary — and per-line policy keeps the
+        # surviving rows identical across serial / chunked / span reads.
         with open(path, "rb") as f:
-            header = f.readline().decode("utf-8")
+            header = _decode_header(f.readline(), path)
             if not header.strip():
                 return
             headers, scales = _parse_header(header)
@@ -189,22 +305,30 @@ def iter_chunks_csv(path: str, chunk_rows: int,
             fixed = [("cat" if h in (ET, NAME) else "num")
                      for h in headers]
             lo = max(int(byte_range[0]), f.tell())
-            src = (ln.decode("utf-8")
-                   for ln in iter_lines_range(f, lo, int(byte_range[1])))
+            src = _decoded_lines(
+                iter_lines_range(f, lo, int(byte_range[1])), path,
+                on_error, report, origin=f"span@{lo}+")
             yield from _iter_csv_lines(src, headers, scales, hints,
-                                       chunk_rows, fixed_decisions=fixed)
+                                       chunk_rows, fixed_decisions=fixed,
+                                       path=path, on_error=on_error,
+                                       report=report,
+                                       origin=f"span@{lo}+")
         return
-    with open(path) as f:
-        header = f.readline()
+    with open(path, "rb") as f:
+        header = _decode_header(f.readline(), path)
         if not header.strip():
             return
         headers, scales = _parse_header(header)
-        yield from _iter_csv_lines(f, headers, scales, hints, chunk_rows)
+        yield from _iter_csv_lines(
+            _decoded_lines(f, path, on_error, report), headers, scales,
+            hints, chunk_rows, path=path, on_error=on_error, report=report)
 
 
 def _iter_csv_lines(f, headers, scales, hints, chunk_rows,
-                    fixed_decisions: Optional[List[str]] = None
-                    ) -> Iterator[EventFrame]:
+                    fixed_decisions: Optional[List[str]] = None,
+                    path: str = "<buffer>", on_error: str = "strict",
+                    report: Optional[IngestReport] = None,
+                    origin: str = "") -> Iterator[EventFrame]:
     try:
         p_i = headers.index(PROC)
     except ValueError:
@@ -218,16 +342,24 @@ def _iter_csv_lines(f, headers, scales, hints, chunk_rows,
                   and (hints.procs is not None
                        or hints.proc_bounds is not None))
     decisions = None
+    lineno = 1 if not origin else 0  # serial mode: header was line 1
     while True:
         lines = list(itertools.islice(f, chunk_rows))
         if not lines:
             break
-        all_rows, rows = [], []
+        numbered = []
         for ln in lines:
+            lineno += 1
             if not ln.strip():
                 continue
-            parts = [p.strip() for p in ln.split(",")]
-            all_rows.append(parts)
+            numbered.append((lineno, [p.strip() for p in ln.split(",")]))
+        # malformed rows are resolved *first* (strict raises, skip drops)
+        # so type decisions and pushdown only ever see well-formed rows —
+        # identical to the whole-file read's order of operations
+        all_rows = _validate_rows(numbered, headers, path, on_error,
+                                  report, origin)
+        rows = []
+        for parts in all_rows:
             if check_proc and len(parts) > p_i:
                 try:
                     if not hints.admits_proc(int(float(parts[p_i]))):
@@ -242,10 +374,12 @@ def _iter_csv_lines(f, headers, scales, hints, chunk_rows,
                 except ValueError:
                     pass
             rows.append(parts)
-        # type decisions must come from the *unfiltered* rows: the
-        # whole-file read types columns over every row, and pushdown
-        # may drop exactly the rows whose values are non-numeric.  A
-        # byte-range read pins them by column name instead (see above).
+        if report is not None:
+            report.add_rows(path, len(rows))
+        # type decisions must come from the *unfiltered* (but validated)
+        # rows: the whole-file read types columns over every surviving
+        # row, and pushdown may drop exactly the rows whose values are
+        # non-numeric.  A byte-range read pins them by column name.
         if fixed_decisions is not None:
             decisions = fixed_decisions
         elif all_rows:

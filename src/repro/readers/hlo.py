@@ -25,6 +25,7 @@ Timestamps are nanoseconds.
 
 from __future__ import annotations
 
+import os
 import re
 from typing import Dict, List, Optional
 
@@ -34,6 +35,8 @@ from ..analysis.hlostats import DTYPE_BYTES, shape_bytes
 from ..analysis.roofline import HW
 from ..core.constants import (ENTER, ET, LEAVE, MPI_RECV, MPI_SEND, MSG_SIZE,
                               NAME, PARTNER, PROC, TAG, THREAD, TS)
+from ..core.errors import (IngestReport, TraceReadError, check_on_error,
+                           require_nonempty)
 from ..core.frame import EventFrame
 from ..core.registry import register_reader
 from ..core.trace import Trace
@@ -85,10 +88,31 @@ def _sniff_hlo(path: str, head: str) -> bool:
 
 @register_reader("hlo", extensions=(".hlo", ".hlo.txt"), sniff=_sniff_hlo,
                  priority=30)
-def read_hlo_file(path: str, **kw) -> Trace:
-    """Registry entry point: read an HLO text dump from a file path."""
+def read_hlo_file(path: str, on_error: str = "strict",
+                  report: Optional[IngestReport] = None, **kw) -> Trace:
+    """Registry entry point: read an HLO text dump from a file path.
+
+    The HLO parser is line-regex based and inherently lenient — unmatched
+    lines are simply not events — so the only hard fault is a dump with no
+    ``ENTRY`` computation: ``on_error="strict"`` raises, ``"skip"``
+    returns an empty trace with the fault recorded."""
+    check_on_error(on_error, ("strict", "skip"))
+    rpt = report if report is not None else IngestReport()
+    require_nonempty(path, os.path.getsize(path), what="HLO dump")
+    rpt.begin(path)
     with open(path) as f:
-        return read_hlo(f.read(), **kw)
+        text = f.read()
+    try:
+        t = read_hlo(text, **kw)
+    except ValueError as e:
+        if on_error == "strict":
+            raise TraceReadError(path, str(e)) from e
+        rpt.skip(path, 1, "", str(e))
+        t = Trace(EventFrame(), label=kw.get("label") or path)
+    else:
+        rpt.add_rows(path, len(t.events))
+    t._ingest = rpt
+    return t
 
 
 def read_hlo(hlo_text: str, *, n_procs: int = 8, label: Optional[str] = None,
@@ -188,7 +212,8 @@ def read_hlo(hlo_text: str, *, n_procs: int = 8, label: Optional[str] = None,
             t += max(dur, 1.0)
         return t
 
-    assert entry is not None, "no ENTRY computation in HLO"
+    if entry is None:
+        raise ValueError("no ENTRY computation in HLO dump")
     emit(entry, 0.0)
 
     # -- replicate across modeled devices + ring messages --------------------

@@ -16,12 +16,15 @@ from __future__ import annotations
 
 import itertools
 import json
+import os
 from typing import Iterator, Optional
 
 import numpy as np
 
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MSG_SIZE, NAME,
                               PARTNER, PROC, TAG, THREAD, TS)
+from ..core.errors import (IngestReport, TraceReadError, check_on_error,
+                           require_nonempty)
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
 from ..core.registry import (ByteSpan, PlanHints, even_edges,
                              rank_shard_procs, register_chunked,
@@ -55,11 +58,25 @@ def _sniff_jsonl(path: str, head: str) -> bool:
 
 class _JsonlParser:
     """Shared line-batch parser: interns names into a per-file dictionary
-    (codes stay stable across chunks of one file)."""
+    (codes stay stable across chunks of one file).
 
-    def __init__(self):
+    ``on_error="strict"`` raises :class:`TraceReadError` with file:line
+    context on the first malformed line; ``"skip"`` drops malformed lines,
+    counting each in ``report``.  The skip decision is per physical line,
+    so eager, chunked and byte-span-parallel reads of the same damaged
+    file keep exactly the same surviving rows.
+    """
+
+    def __init__(self, path: str = "<buffer>", on_error: str = "strict",
+                 report: Optional[IngestReport] = None,
+                 line_origin: str = ""):
         self._name_code = {}
         self._names = []
+        self.path = path
+        self.on_error = check_on_error(on_error, ("strict", "skip"))
+        self.report = report
+        self._origin = line_origin  # e.g. "span@512+" for byte-span units
+        self._line = 0
 
     def parse(self, lines, hints: Optional[PlanHints] = None
               ) -> Optional[EventFrame]:
@@ -75,34 +92,54 @@ class _JsonlParser:
         sizes, partners, tags = [], [], []
         n = 0
         for line in lines:
+            self._line += 1
             line = line.strip()
             if not line:
                 continue
-            d = json.loads(line)
-            p = int(d.get("proc", 0))
+            try:
+                d = json.loads(line)
+                if not isinstance(d, dict):
+                    raise ValueError("not an event object")
+                p = int(d.get("proc", 0))
+                t = int(d["ts"])
+                thread = int(d.get("thread", 0))
+                s = d.get("size")
+                size = float(s) if s is not None else np.nan
+                pr = d.get("partner")
+                partner = int(pr) if pr is not None else -1
+                g = d.get("tag")
+                tag = int(g) if g is not None else 0
+                etc = _ET_CODE.get(d.get("et", ENTER), 2)
+                nm = d.get("name", "")
+            except (ValueError, KeyError, TypeError) as e:
+                locus = f"{self._origin}line {self._line}"
+                if self.on_error == "strict":
+                    raise TraceReadError(self.path,
+                                         f"malformed event line ({e})",
+                                         locus=locus) from e
+                if self.report is not None:
+                    self.report.skip(self.path, 1, locus, str(e))
+                continue
             if check_proc and not hints.admits_proc(p):
                 continue
-            t = int(d["ts"])
             if tw is not None and not (tw[0] <= t <= tw[1]):
                 continue
-            nm = d.get("name", "")
             c = name_code.get(nm)
             if c is None:
                 c = len(names)
                 name_code[nm] = c
                 names.append(nm)
             ts.append(t)
-            et.append(_ET_CODE.get(d.get("et", ENTER), 2))
+            et.append(etc)
             ncodes.append(c)
             procs.append(p)
-            threads.append(int(d.get("thread", 0)))
-            s = d.get("size")
-            sizes.append(float(s) if s is not None else np.nan)
-            pr = d.get("partner")
-            partners.append(int(pr) if pr is not None else -1)
-            g = d.get("tag")
-            tags.append(int(g) if g is not None else 0)
+            threads.append(thread)
+            sizes.append(size)
+            partners.append(partner)
+            tags.append(tag)
             n += 1
+        if self.report is not None:
+            self.report.add_rows(self.path, n)
         if n == 0:
             return None
         ev = EventFrame({
@@ -136,20 +173,33 @@ def _sorted_names(ev: EventFrame) -> EventFrame:
 
 @register_reader("jsonl", extensions=(".jsonl",), sniff=_sniff_jsonl,
                  shard_procs=rank_shard_procs, priority=10)
-def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
+def read_jsonl(path_or_buf, label: Optional[str] = None,
+               on_error: str = "strict",
+               report: Optional[IngestReport] = None) -> Trace:
+    rpt = report if report is not None else IngestReport()
     if isinstance(path_or_buf, str):
-        f = open(path_or_buf)
+        require_nonempty(path_or_buf, os.path.getsize(path_or_buf),
+                         what="jsonl trace")
+        # binary: json.loads accepts bytes, and a non-UTF-8 garbage line
+        # then fails as a per-line ValueError (strict raises with file:line,
+        # skip drops that line) instead of an unlocated UnicodeDecodeError
+        # escaping the text-mode iterator
+        f = open(path_or_buf, "rb")
         label = label or path_or_buf
         close = True
     else:
         f, close = path_or_buf, False
+    src = path_or_buf if isinstance(path_or_buf, str) else "<buffer>"
+    rpt.begin(src)
     try:
-        ev = _JsonlParser().parse(f)
+        ev = _JsonlParser(src, on_error, rpt).parse(f)
     finally:
         if close:
             f.close()
     if ev is None:
-        return Trace(EventFrame(), label=label)
+        t = Trace(EventFrame(), label=label)
+        t._ingest = rpt
+        return t
     ev = _sorted_names(ev)
     # whole-file reads keep the historical column shape: thread / message
     # columns only when the trace actually has them
@@ -158,7 +208,9 @@ def read_jsonl(path_or_buf, label: Optional[str] = None) -> Trace:
     if not (np.any(~np.isnan(np.asarray(ev[MSG_SIZE], np.float64)))
             or np.any(np.asarray(ev[PARTNER], np.int64) >= 0)):
         ev = ev.drop(MSG_SIZE, PARTNER, TAG)
-    return Trace(optimize_dtypes(ev), label=label)
+    t = Trace(optimize_dtypes(ev), label=label)
+    t._ingest = rpt
+    return t
 
 
 def iter_lines_range(f, lo: int, hi: int) -> Iterator[bytes]:
@@ -186,13 +238,22 @@ def iter_lines_range(f, lo: int, hi: int) -> Iterator[bytes]:
 def iter_chunks_jsonl(path: str, chunk_rows: int,
                       hints: Optional[PlanHints] = None,
                       label: Optional[str] = None,
-                      byte_range: Optional[tuple] = None
+                      byte_range: Optional[tuple] = None,
+                      on_error: str = "strict",
+                      report: Optional[IngestReport] = None
                       ) -> Iterator[EventFrame]:
     """Stream ``path`` in EventFrame chunks of at most ``chunk_rows`` events
     without ever holding the file, applying pushdown while parsing.
     ``byte_range=(lo, hi)`` restricts the read to the lines starting inside
-    that span (parallel work units)."""
-    parser = _JsonlParser()
+    that span (parallel work units).  ``on_error="skip"`` drops malformed
+    lines (counted in ``report``) instead of raising — per physical line,
+    so every execution mode keeps identical surviving rows."""
+    require_nonempty(path, os.path.getsize(path), what="jsonl trace")
+    if report is not None and byte_range is None:
+        report.begin(path)
+    origin = (f"span@{int(byte_range[0])}+" if byte_range is not None
+              else "")
+    parser = _JsonlParser(path, on_error, report, line_origin=origin)
     if byte_range is not None:
         with open(path, "rb") as f:
             src = iter_lines_range(f, int(byte_range[0]), int(byte_range[1]))
@@ -204,7 +265,7 @@ def iter_chunks_jsonl(path: str, chunk_rows: int,
                 if ev is not None:
                     yield optimize_dtypes(ev)
         return
-    with open(path) as f:
+    with open(path, "rb") as f:  # binary for the same reason as read_jsonl
         while True:
             lines = list(itertools.islice(f, chunk_rows))
             if not lines:

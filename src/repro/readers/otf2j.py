@@ -28,6 +28,8 @@ import numpy as np
 
 from ..core.constants import (ENTER, ET, INSTANT, LEAVE, MPI_RECV, MPI_SEND,
                               MSG_SIZE, NAME, PARTNER, PROC, TAG, THREAD, TS)
+from ..core.errors import (IngestReport, TraceReadError, check_on_error,
+                           require_nonempty)
 from ..core.frame import Categorical, EventFrame, optimize_dtypes
 from ..core.registry import (PlanHints, ProcSpan, even_groups,
                              register_chunked, register_reader,
@@ -56,31 +58,39 @@ def _stream_to_columns(loc: dict, events: List[list], strings: List[str],
     is_send = np.zeros(n, bool)
     is_recv = np.zeros(n, bool)
     for i, rec in enumerate(events):
-        ts[i] = rec[0]
-        kind = rec[1]
-        if kind == "E":
-            et[i] = 0
-            name_code[i] = rec[2]
-        elif kind == "L":
-            et[i] = 1
-            name_code[i] = rec[2]
-        elif kind == "S":
-            et[i] = 2
-            name_code[i] = -1
-            is_send[i] = True
-            partners[i] = rec[2]
-            sizes[i] = rec[3]
-            tags[i] = rec[4] if len(rec) > 4 else 0
-        elif kind == "R":
-            et[i] = 2
-            name_code[i] = -1
-            is_recv[i] = True
-            partners[i] = rec[2]
-            sizes[i] = rec[3]
-            tags[i] = rec[4] if len(rec) > 4 else 0
-        else:  # metric/other -> instant named by string ref
-            et[i] = 2
-            name_code[i] = rec[2] if len(rec) > 2 else -1
+        try:
+            ts[i] = rec[0]
+            kind = rec[1]
+            if kind == "E":
+                et[i] = 0
+                if not 0 <= int(rec[2]) < len(regions):
+                    raise ValueError(f"region ref {rec[2]} out of range")
+                name_code[i] = rec[2]
+            elif kind == "L":
+                et[i] = 1
+                if not 0 <= int(rec[2]) < len(regions):
+                    raise ValueError(f"region ref {rec[2]} out of range")
+                name_code[i] = rec[2]
+            elif kind == "S":
+                et[i] = 2
+                name_code[i] = -1
+                is_send[i] = True
+                partners[i] = rec[2]
+                sizes[i] = rec[3]
+                tags[i] = rec[4] if len(rec) > 4 else 0
+            elif kind == "R":
+                et[i] = 2
+                name_code[i] = -1
+                is_recv[i] = True
+                partners[i] = rec[2]
+                sizes[i] = rec[3]
+                tags[i] = rec[4] if len(rec) > 4 else 0
+            else:  # metric/other -> instant named by region ref
+                et[i] = 2
+                name_code[i] = (rec[2] if len(rec) > 2
+                                and 0 <= int(rec[2]) < len(regions) else -1)
+        except (ValueError, TypeError, IndexError, KeyError) as e:
+            raise ValueError(f"record {i}: {e}") from e
     region_names = np.asarray(
         [strings[r["name"]] if isinstance(r, dict) else strings[r] for r in regions]
         + [MPI_SEND, MPI_RECV], dtype=object)
@@ -90,26 +100,53 @@ def _stream_to_columns(loc: dict, events: List[list], strings: List[str],
     return ts, et, names, sizes, partners, tags
 
 
-def _decode_archive(doc: dict, label: Optional[str], locations_subset=None) -> Trace:
-    defs = doc["definitions"]
-    strings = defs["strings"]
-    regions = defs["regions"]
-    locs = defs["locations"]  # [{"id": i, "group": rank, "thread": t}]
-    frames = []
+def _unpack_definitions(doc, path: str = "<doc>"):
+    """The (strings, regions, locations) triple from an archive document.
+    Definitions are the anchor every stream decodes against — a damaged
+    table is never skippable, so structural faults raise regardless of
+    the ``on_error`` policy."""
+    try:
+        defs = doc["definitions"]
+        return defs, defs["strings"], defs["regions"], defs["locations"]
+    except (KeyError, TypeError) as e:
+        raise TraceReadError(
+            path, f"corrupt OTF2 definitions (missing or bad {e})") from e
+
+
+def _decode_archive(doc: dict, label: Optional[str], locations_subset=None,
+                    path: str = "<doc>", on_error: str = "strict",
+                    report: Optional[IngestReport] = None) -> Trace:
+    defs, strings, regions, locs = _unpack_definitions(doc, path)
     all_cols: Dict[str, list] = {k: [] for k in
                                  (TS, ET, NAME, PROC, THREAD, MSG_SIZE, PARTNER, TAG)}
     for loc in locs:
-        lid = str(loc["id"])
+        try:
+            lid = str(loc["id"])
+            rank = int(loc["group"])
+        except (KeyError, TypeError) as e:
+            raise TraceReadError(
+                path, f"corrupt OTF2 location table entry ({e})") from e
         if locations_subset is not None and lid not in locations_subset:
             continue
         stream = doc["events"].get(lid, [])
-        ts, et, names, sizes, partners, tags = _stream_to_columns(
-            loc, stream, strings, regions)
+        try:
+            ts, et, names, sizes, partners, tags = _stream_to_columns(
+                loc, stream, strings, regions)
+        except (ValueError, TypeError, IndexError, KeyError) as e:
+            if on_error == "strict":
+                raise TraceReadError(path, f"malformed event stream ({e})",
+                                     locus=f"location {lid}") from e
+            if report is not None:
+                report.skip(path, 1, f"location {lid}",
+                            f"location dropped ({e})")
+            continue
         n = len(ts)
+        if report is not None:
+            report.add_rows(path, n)
         all_cols[TS].append(ts)
         all_cols[ET].append(et)
         all_cols[NAME].append(names)
-        all_cols[PROC].append(np.full(n, loc["group"], np.int64))
+        all_cols[PROC].append(np.full(n, rank, np.int64))
         all_cols[THREAD].append(np.full(n, loc.get("thread", 0), np.int64))
         all_cols[MSG_SIZE].append(sizes)
         all_cols[PARTNER].append(partners)
@@ -132,27 +169,77 @@ def _decode_archive(doc: dict, label: Optional[str], locations_subset=None) -> T
     return Trace(optimize_dtypes(ev), definitions=defs, label=label)
 
 
+def _load_definitions(anchor: str) -> dict:
+    """Load and parse ``definitions.json`` — always strict (see
+    :func:`_unpack_definitions`)."""
+    if not os.path.exists(anchor):
+        raise TraceReadError(anchor, "missing definitions.json — not an "
+                                     "OTF2-structured archive")
+    require_nonempty(anchor, os.path.getsize(anchor),
+                     what="OTF2 definitions table")
+    try:
+        with open(anchor) as f:
+            return json.load(f)
+    except ValueError as e:
+        locus = (f"line {e.lineno}"
+                 if isinstance(e, json.JSONDecodeError) else None)
+        raise TraceReadError(anchor, f"corrupt definitions JSON ({e})",
+                             locus=locus) from e
+
+
 @register_reader("otf2j", extensions=(".otf2.json",), sniff=_sniff_otf2j,
                  priority=20)
 def read_otf2_json(path: str, label: Optional[str] = None,
-                   locations_subset=None) -> Trace:
+                   locations_subset=None, on_error: str = "strict",
+                   report: Optional[IngestReport] = None) -> Trace:
+    check_on_error(on_error, ("strict", "skip"))
+    rpt = report if report is not None else IngestReport()
     label = label or path
+    rpt.begin(path)
     if os.path.isdir(path):
-        with open(os.path.join(path, "definitions.json")) as f:
-            defs = json.load(f)
+        defs = _load_definitions(os.path.join(path, "definitions.json"))
         events = {}
         locdir = os.path.join(path, "locations")
-        for fn in sorted(os.listdir(locdir)):
+        names = sorted(os.listdir(locdir)) if os.path.isdir(locdir) else []
+        for fn in names:
             lid = os.path.splitext(fn)[0]
             if locations_subset is not None and lid not in locations_subset:
                 continue
-            with open(os.path.join(locdir, fn)) as f:
-                events[lid] = json.load(f)
+            fp = os.path.join(locdir, fn)
+            try:
+                require_nonempty(fp, os.path.getsize(fp),
+                                 what="OTF2 location stream")
+                with open(fp) as f:
+                    events[lid] = json.load(f)
+            except (ValueError, OSError) as e:
+                if on_error == "strict":
+                    if isinstance(e, TraceReadError):
+                        raise
+                    raise TraceReadError(
+                        fp, f"corrupt location stream ({e})") from e
+                rpt.skip(fp, 1, "", f"location stream dropped ({e})")
         doc = {"definitions": defs, "events": events}
     else:
-        with open(path) as f:
-            doc = json.load(f)
-    return _decode_archive(doc, label, locations_subset)
+        require_nonempty(path, os.path.getsize(path),
+                         what="OTF2-structured trace")
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except ValueError as e:
+            if on_error == "strict":
+                locus = (f"line {e.lineno}"
+                         if isinstance(e, json.JSONDecodeError) else None)
+                raise TraceReadError(path, f"corrupt archive JSON ({e})",
+                                     locus=locus) from e
+            rpt.lose_bytes(path, os.path.getsize(path), "",
+                           f"corrupt archive JSON ({e})")
+            t = Trace(EventFrame(), label=label)
+            t._ingest = rpt
+            return t
+    t = _decode_archive(doc, label, locations_subset, path=path,
+                        on_error=on_error, report=rpt)
+    t._ingest = rpt
+    return t
 
 
 def _location_frame(loc: dict, stream: List[list], strings, regions
@@ -176,7 +263,8 @@ def _location_frame(loc: dict, stream: List[list], strings, regions
 def iter_chunks_otf2j(path: str, chunk_rows: int,
                       hints: Optional[PlanHints] = None,
                       label: Optional[str] = None,
-                      locations_subset=None):
+                      locations_subset=None, on_error: str = "strict",
+                      report: Optional[IngestReport] = None):
     """Stream an OTF2-structured archive location by location.
 
     The directory layout (``definitions.json`` + ``locations/<id>.json``) is
@@ -184,34 +272,85 @@ def iter_chunks_otf2j(path: str, chunk_rows: int,
     and locations whose rank the plan excludes are *never opened* (process
     pushdown at file granularity).  A single-file archive is decoded whole
     but still yielded in bounded slices.
+
+    ``on_error="skip"`` drops corrupt location streams (counted per
+    location in ``report``) — the same per-location decision the eager
+    reader makes, so survivors match across execution modes.  A corrupt
+    definitions table always raises.
     """
+    check_on_error(on_error, ("strict", "skip"))
+    if report is not None:
+        report.begin(path)
     is_dir = os.path.isdir(path)
     if is_dir:
-        with open(os.path.join(path, "definitions.json")) as f:
-            defs = json.load(f)
+        defs = _load_definitions(os.path.join(path, "definitions.json"))
+        doc = None
     else:
-        with open(path) as f:
-            doc = json.load(f)
-        defs = doc["definitions"]
-    strings, regions = defs["strings"], defs["regions"]
+        require_nonempty(path, os.path.getsize(path),
+                         what="OTF2-structured trace")
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except ValueError as e:
+            if on_error == "strict":
+                locus = (f"line {e.lineno}"
+                         if isinstance(e, json.JSONDecodeError) else None)
+                raise TraceReadError(path, f"corrupt archive JSON ({e})",
+                                     locus=locus) from e
+            if report is not None:
+                report.lose_bytes(path, os.path.getsize(path), "",
+                                  f"corrupt archive JSON ({e})")
+            return
+    _, strings, regions, locs = _unpack_definitions(
+        {"definitions": defs} if is_dir else doc, path)
     tw = hints.time_window if hints is not None else None
-    for loc in defs["locations"]:
-        lid = str(loc["id"])
+    for loc in locs:
+        try:
+            lid = str(loc["id"])
+            rank = int(loc["group"])
+        except (KeyError, TypeError) as e:
+            raise TraceReadError(
+                path, f"corrupt OTF2 location table entry ({e})") from e
         if locations_subset is not None and lid not in locations_subset:
             continue
-        if hints is not None and not hints.admits_proc(int(loc["group"])):
+        if hints is not None and not hints.admits_proc(rank):
             continue
         if is_dir:
             fn = os.path.join(path, "locations", f"{lid}.json")
             if not os.path.exists(fn):
                 continue
-            with open(fn) as f:
-                stream = json.load(f)
+            try:
+                require_nonempty(fn, os.path.getsize(fn),
+                                 what="OTF2 location stream")
+                with open(fn) as f:
+                    stream = json.load(f)
+            except (ValueError, OSError) as e:
+                if on_error == "strict":
+                    if isinstance(e, TraceReadError):
+                        raise
+                    raise TraceReadError(
+                        fn, f"corrupt location stream ({e})") from e
+                if report is not None:
+                    report.skip(fn, 1, "",
+                                f"location stream dropped ({e})")
+                continue
         else:
             stream = doc["events"].get(lid, [])
         if not stream:
             continue
-        ev = optimize_dtypes(_location_frame(loc, stream, strings, regions))
+        try:
+            ev = optimize_dtypes(
+                _location_frame(loc, stream, strings, regions))
+        except (ValueError, TypeError, IndexError, KeyError) as e:
+            if on_error == "strict":
+                raise TraceReadError(path, f"malformed event stream ({e})",
+                                     locus=f"location {lid}") from e
+            if report is not None:
+                report.skip(path, 1, f"location {lid}",
+                            f"location dropped ({e})")
+            continue
+        if report is not None:
+            report.add_rows(path, len(ev))
         if tw is not None:
             ts = np.asarray(ev[TS], np.float64)
             ev = ev.mask((ts >= tw[0]) & (ts <= tw[1]))
@@ -233,9 +372,12 @@ def plan_units_otf2j(path: str, n_units: int):
     try:
         with open(os.path.join(path, "definitions.json")) as f:
             defs = json.load(f)
-    except (OSError, ValueError):
+        ranks = sorted({int(loc["group"])
+                        for loc in defs.get("locations", [])})
+    except (OSError, ValueError, TypeError, KeyError, AttributeError):
+        # damaged anchor: no parallel plan — the serial path owns the
+        # strict-raise / skip decision
         return None
-    ranks = sorted({int(loc["group"]) for loc in defs.get("locations", [])})
     n = max(min(int(n_units), len(ranks)), 1)
     if n <= 1:
         return None

@@ -1,20 +1,17 @@
 """pipitpack — the native columnar binary trace store (parse once, mmap ever
-after).
+after), with per-chunk integrity and salvage.
 
 Every other format we read is *text*: re-opening a 10M-event trace means
 re-decoding hundreds of MB of JSON/CSV before the first vectorized kernel
 runs, and that decode dominates cache-miss execution end to end.  A pack
 file stores the uniform data model (paper Fig. 1) as little-endian
-per-column arrays laid out contiguously for the whole file, so reopening is
-``np.memmap`` per column — zero parse, zero copy — plus a small JSON footer
-holding:
+per-column arrays plus a small JSON footer holding:
 
-* the **column directory** (key, dtype, byte offset),
-* the interned **name table** (``Name`` is stored as int32 codes),
+* the **name table** (``Name`` is stored as int32 codes),
 * the **chunk index**: fixed-row chunks with each chunk's row range, time
-  range and process set — chunked/streaming reads skip chunks a plan's
-  time-window or process restriction provably cannot need *without touching
-  their bytes* (index pushdown),
+  range, process set, byte span and CRC-32 — chunked/streaming reads skip
+  chunks a plan's time-window or process restriction provably cannot need
+  *without touching their bytes* (index pushdown),
 * an optional **structure sidecar**: matching / depth / parent / inc / exc
   computed once at pack time, so reopening skips ``derive_structure``
   entirely (eager opens attach the columns; streaming chunks carry
@@ -24,28 +21,62 @@ holding:
   plan-result cache (:mod:`repro.core.plancache`) keys pack sources by it,
   so copies and rewrites with identical content share cache entries.
 
-File layout::
+Format version 2 file layout (version 1, whole-file column-major, is still
+fully readable)::
 
-    #pipitpack 1\\n                      ASCII magic line (sniffable)
-    <column arrays, back to back>       offsets in the footer
-    <sidecar arrays, back to back>      (optional)
+    #pipitpack 2\\n                      ASCII magic line (sniffable)
+    <chunk group 0> <chunk group 1> ...  one group per index chunk
+    <sidecar arrays, back to back>       (optional)
     <footer JSON, utf-8>
     <footer length, uint64 LE> <b"PIPITPK\\0">   last 16 bytes
 
+where each **chunk group** is self-describing and individually verifiable::
+
+    <column slices for this chunk's rows, back to back>
+    <trailer JSON>                       seq, row range, ts range, procs,
+                                         column sizes, names first interned
+                                         in this chunk
+    <trailer length, uint32 LE> <CRC-32, uint32 LE> <b"PPKCHNK\\n">
+
+The CRC covers the column slices plus the trailer, so a bit flip anywhere
+in a group is detected; the trailing group magic makes groups discoverable
+by scanning even when the footer itself is lost (a torn write, a crashed
+writer, a truncated copy).  That scan is the salvage path: the name table
+is rebuilt incrementally from each trailer's ``new_names``, so every chunk
+that checksums clean is recovered **byte-identically**.
+
+``on_error`` open policies (``read_pack`` / ``iter_chunks_pack``):
+
+* ``"strict"`` (default) — no checksum pass; structural damage raises
+  :class:`~repro.core.errors.TraceReadError` with the file and byte offset.
+* ``"skip_chunk"`` — footer must be intact; every chunk group is CRC
+  verified and failing groups are dropped (quarantined) with a warning.
+* ``"salvage"`` — like ``skip_chunk``, but a lost/corrupt footer triggers
+  the trailer scan instead of failing.  Recovers every intact chunk from a
+  truncated or bit-flipped pack.
+
+Quarantine counters surface in :func:`io_stats`; ``tools/pack.py --verify
+--repair`` wraps :func:`verify_pack` / :func:`repair_pack`.
+
 Write paths: ``Trace.save_pack(path)`` / ``write_pack`` (in-memory),
 ``StreamingTrace.save_pack`` / :class:`PackWriter` (out-of-core append —
-column data spools per column and is stitched at finish), and
+one chunk group is buffered at a time, then written with its trailer), and
 ``tools/pack.py`` (the CLI converter for any registered format).
+``PackWriter(path, atomic=False)`` writes groups straight to ``path`` so a
+killed writer leaves a salvageable prefix — the crash-consistency mode
+``tracegen.big_trace`` uses.
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
+import mmap
 import os
-import shutil
 import struct
 import tempfile
+import warnings
+import zlib
 from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
@@ -54,6 +85,7 @@ from ..core import structure
 from ..core.constants import (DEPTH, ENTER, ET, EXC, INC, INSTANT, LEAVE,
                               MATCH, MATCH_TS, MSG_SIZE, NAME, PARENT,
                               PARTNER, PROC, TAG, THREAD, TS)
+from ..core.errors import TraceReadError, check_on_error, require_nonempty
 from ..core.frame import Categorical, EventFrame
 from ..core.registry import (PlanHints, RowSpan, even_groups,
                              register_chunked, register_reader,
@@ -61,12 +93,15 @@ from ..core.registry import (PlanHints, RowSpan, even_groups,
 from ..core.trace import Trace
 
 __all__ = ["write_pack", "read_pack", "PackWriter", "read_footer",
-           "content_id", "io_stats", "reset_io_stats",
-           "DEFAULT_PACK_CHUNK_ROWS"]
+           "content_id", "io_stats", "reset_io_stats", "verify_pack",
+           "repair_pack", "scan_chunk_groups", "DEFAULT_PACK_CHUNK_ROWS"]
 
 MAGIC = b"#pipitpack 1\n"
+MAGIC2 = b"#pipitpack 2\n"
+MAGIC_PREFIX = b"#pipitpack "
 TAIL_MAGIC = b"PIPITPK\x00"
-VERSION = 1
+CHUNK_MAGIC = b"PPKCHNK\n"
+VERSION = 2
 DEFAULT_PACK_CHUNK_ROWS = 250_000
 
 _ET_CODE = {ENTER: 0, LEAVE: 1, INSTANT: 2}
@@ -83,6 +118,9 @@ _EVENT_COLS = (
     ("partner", PARTNER, "<i4"),
     ("tag", TAG, "<i4"),
 )
+_COL_DTYPE = {k: d for k, _c, d in _EVENT_COLS}
+#: fill value for an optional column a chunk group did not store
+_COL_FILL = {"thread": 0, "size": np.nan, "partner": -1, "tag": 0}
 #: sidecar arrays (footer key, canonical column, dtype)
 _SIDECAR_COLS = (
     ("matching", MATCH, "<i8"),
@@ -92,24 +130,51 @@ _SIDECAR_COLS = (
     ("exc", EXC, "<f8"),
 )
 
+_ON_ERROR_MODES = ("strict", "skip_chunk", "salvage")
+
 
 # ---------------------------------------------------------------------------
-# io accounting (tests / benchmarks assert pushdown actually skips chunks)
+# io accounting (tests / benchmarks assert pushdown actually skips chunks,
+# and the fault suite asserts salvage quarantines exactly the damaged ones)
 # ---------------------------------------------------------------------------
 
-_IO_STATS = {"chunks_read": 0, "chunks_skipped": 0}
+_IO_STATS = {"chunks_read": 0, "chunks_skipped": 0, "chunks_quarantined": 0,
+             "footers_rebuilt": 0, "sidecars_dropped": 0,
+             "verify_cache_hits": 0}
+
+#: aspects ("chunks", "sidecar") whose CRC sweep passed, keyed by
+#: (abspath, size, mtime_ns, inode) — a verified-clean file needs no
+#: re-sweep until it changes on disk, so steady-state verifying reopens
+#: (service handle revalidation, repeated queries) cost the same as a
+#: strict open.  Failures are never cached: damage is re-diagnosed on
+#: every open.
+_VERIFIED_CLEAN: Dict[tuple, set] = {}
+_VERIFIED_CLEAN_MAX = 256
+
+
+def _verify_key(path: str, st: os.stat_result) -> tuple:
+    return (os.path.abspath(path), st.st_size, st.st_mtime_ns, st.st_ino)
+
+
+def _mark_verified(key: tuple, aspect: str) -> None:
+    if key not in _VERIFIED_CLEAN and \
+            len(_VERIFIED_CLEAN) >= _VERIFIED_CLEAN_MAX:
+        _VERIFIED_CLEAN.clear()
+    _VERIFIED_CLEAN.setdefault(key, set()).add(aspect)
 
 
 def io_stats() -> Dict[str, int]:
-    """Process-local counters of footer-index chunks read vs skipped by
-    pushdown since the last :func:`reset_io_stats` (advisory; parallel pool
-    workers count in their own process)."""
+    """Process-local counters since the last :func:`reset_io_stats`
+    (advisory; parallel pool workers count in their own process):
+    footer-index chunks read vs skipped by pushdown, plus the fault-path
+    counters — chunks quarantined by CRC/scan failure, footers rebuilt by
+    trailer scan, sidecars dropped as corrupt."""
     return dict(_IO_STATS)
 
 
 def reset_io_stats() -> None:
-    _IO_STATS["chunks_read"] = 0
-    _IO_STATS["chunks_skipped"] = 0
+    for k in _IO_STATS:
+        _IO_STATS[k] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -122,30 +187,43 @@ _FOOTER_CACHE: Dict[str, Tuple[Tuple[int, int], dict]] = {}
 def read_footer(path: str) -> dict:
     """Parse and return the footer of ``path`` (cached per (size, mtime)).
 
-    Raises ValueError when the file is not a pack.
+    Raises :class:`TraceReadError` (a ValueError) when the file is not a
+    readable pack, always naming the path and what was wrong.
     """
     path = os.fspath(path)
     st = os.stat(path)
+    if st.st_size == 0:
+        raise TraceReadError(path, "empty file (0 bytes) — not a pack")
     key = (st.st_size, st.st_mtime_ns)
     hit = _FOOTER_CACHE.get(path)
     if hit is not None and hit[0] == key:
         return hit[1]
     with open(path, "rb") as f:
         head = f.read(len(MAGIC))
-        if head != MAGIC:
-            raise ValueError(f"{path!r} is not a pipitpack file")
+        if not head.startswith(MAGIC_PREFIX):
+            raise TraceReadError(path, "not a pipitpack file")
+        if head not in (MAGIC, MAGIC2):
+            raise TraceReadError(
+                path, f"unsupported pack version {head[len(MAGIC_PREFIX):]!r}"
+                      f" (this reader supports 1 and {VERSION})")
         if st.st_size < len(MAGIC) + 16:
-            raise ValueError(f"{path!r}: truncated pack (no footer)")
+            raise TraceReadError(path, "truncated pack (no footer)")
         f.seek(-16, os.SEEK_END)
         flen, tail = struct.unpack("<Q", f.read(8))[0], f.read(8)
         if tail != TAIL_MAGIC:
-            raise ValueError(f"{path!r}: bad pack trailer (truncated write?)")
+            raise TraceReadError(path, "bad pack trailer (truncated write?)")
+        if flen > st.st_size - len(MAGIC) - 16:
+            raise TraceReadError(path, "bad pack trailer (footer length "
+                                       "exceeds file)")
         f.seek(st.st_size - 16 - flen)
-        footer = json.loads(f.read(flen).decode("utf-8"))
-    if footer.get("version") != VERSION:
-        raise ValueError(f"{path!r}: unsupported pack version "
-                         f"{footer.get('version')!r} (this reader supports "
-                         f"{VERSION})")
+        try:
+            footer = json.loads(f.read(flen).decode("utf-8"))
+        except (ValueError, UnicodeDecodeError) as e:
+            raise TraceReadError(path, f"corrupt pack footer ({e})") from e
+    if footer.get("version") not in (1, VERSION):
+        raise TraceReadError(path, f"unsupported pack version "
+                                   f"{footer.get('version')!r} (this reader "
+                                   f"supports 1 and {VERSION})")
     if len(_FOOTER_CACHE) > 256:
         _FOOTER_CACHE.clear()
     _FOOTER_CACHE[path] = (key, footer)
@@ -155,7 +233,7 @@ def read_footer(path: str) -> dict:
 def is_pack(path: str) -> bool:
     try:
         with open(path, "rb") as f:
-            return f.read(len(MAGIC)) == MAGIC
+            return f.read(len(MAGIC_PREFIX)) == MAGIC_PREFIX
     except OSError:
         return False
 
@@ -199,14 +277,21 @@ def _et_codes(ev: EventFrame) -> np.ndarray:
 
 class PackWriter:
     """Out-of-core pack writer: append EventFrames in stream order, then
-    :meth:`finish`.  Column data spools into per-column temp files (bounded
-    memory) and is stitched into the final single-file layout at finish;
-    the chunk index, name interner and content hash accumulate as chunks
-    arrive.
+    :meth:`finish`.  One chunk group (``chunk_rows`` rows) is buffered at a
+    time and written with its CRC'd trailer as soon as it fills, so memory
+    stays bounded and every already-written group is recoverable even if
+    the process dies; the chunk index, name interner and content hash
+    accumulate as groups are flushed.
+
+    ``atomic=True`` (default) stages the file next to ``path`` and
+    ``os.replace``\\ s it at finish — no partial pack ever lands.
+    ``atomic=False`` writes straight to ``path``: a crash mid-write leaves
+    a footer-less prefix that ``on_error="salvage"`` / ``tools/pack.py
+    --repair`` recovers group by group (the live-ingestion / crash
+    -consistency mode).
 
     Usable as a context manager: leaving the ``with`` block without having
-    called :meth:`finish` (including via an exception) aborts the write and
-    removes the spools — no partial pack ever lands at ``path``.
+    called :meth:`finish` (including via an exception) aborts the write.
 
     Timestamps are stored as integer nanoseconds; float timestamps
     quantize by truncation, exactly like every text writer in this repo
@@ -214,22 +299,32 @@ class PackWriter:
     consistent with the *stored* values.
     """
 
-    def __init__(self, path: str, chunk_rows: int = DEFAULT_PACK_CHUNK_ROWS):
+    def __init__(self, path: str, chunk_rows: int = DEFAULT_PACK_CHUNK_ROWS,
+                 atomic: bool = True):
         self.path = os.fspath(path)
         self.chunk_rows = int(chunk_rows)
         if self.chunk_rows <= 0:
             raise ValueError("chunk_rows must be positive")
+        self.atomic = bool(atomic)
         d = os.path.dirname(os.path.abspath(self.path)) or "."
-        self._dir = tempfile.mkdtemp(prefix=".pack_", dir=d)
-        self._spool = {k: open(os.path.join(self._dir, k), "wb")
-                       for k, _c, _d in _EVENT_COLS}
-        self._rows = 0
+        if self.atomic:
+            fd, self._tmp = tempfile.mkstemp(prefix=".pack_tmp_", dir=d)
+            self._out = os.fdopen(fd, "wb")
+        else:
+            self._tmp = self.path
+            self._out = open(self.path, "wb")
+        self._out.write(MAGIC2)
+        self._off = len(MAGIC2)
+        self._buf: List[Dict[str, np.ndarray]] = []
+        self._buf_rows = 0
+        self._flushed = 0  # rows written out in finalized groups
         self._name_code: Dict[str, int] = {}
         self._names: List[str] = []
-        self._chunks: List[dict] = []  # finalized chunk records
-        self._cur: Optional[dict] = None  # partial chunk accumulator
+        self._names_written = 0  # names already recorded by an earlier trailer
+        self._chunks: List[dict] = []  # finalized chunk index records
         self._has_thread = False
         self._has_messages = False
+        self._hash = hashlib.sha256()
         self._finished = False
 
     # -- context manager ---------------------------------------------------
@@ -256,7 +351,6 @@ class PackWriter:
         proc = _int_column(ev[PROC], "<i4", "proc")
         if THREAD in ev:
             thread = _int_column(ev[THREAD], "<i4", "thread")
-            self._has_thread = self._has_thread or bool(np.any(thread))
         else:
             thread = np.zeros(n, "<i4")
         if MSG_SIZE in ev:
@@ -272,15 +366,12 @@ class PackWriter:
             tag = _int_column(ev[TAG], "<i4", "tag")
         else:
             tag = np.zeros(n, "<i4")
-        self._has_messages = self._has_messages or bool(
-            np.any(~np.isnan(size)) or np.any(partner >= 0))
-        cols = {"ts": ts, "et": et, "name": name, "proc": proc,
-                "thread": thread, "size": size, "partner": partner,
-                "tag": tag}
-        for k, arr in cols.items():
-            self._spool[k].write(np.ascontiguousarray(arr).tobytes())
-        self._index_rows(ts, proc)
-        self._rows += n
+        self._buf.append({"ts": ts, "et": et, "name": name, "proc": proc,
+                          "thread": thread, "size": size, "partner": partner,
+                          "tag": tag})
+        self._buf_rows += n
+        while self._buf_rows >= self.chunk_rows:
+            self._flush_group(self.chunk_rows)
 
     def _intern(self, ev: EventFrame) -> np.ndarray:
         cat = ev.cat(NAME)
@@ -295,162 +386,180 @@ class PackWriter:
             local[i] = g
         return local[cat.codes].astype("<i4", copy=False)
 
-    def _index_rows(self, ts: np.ndarray, proc: np.ndarray) -> None:
-        """Fold appended rows into fixed-row chunk index records."""
-        pos = 0
-        n = len(ts)
-        while pos < n:
-            if self._cur is None:
-                self._cur = {"lo": self._rows + pos, "rows": 0,
-                             "ts_min": None, "ts_max": None,
-                             "procs": set()}
-            take = min(n - pos, self.chunk_rows - self._cur["rows"])
-            sl_ts = ts[pos:pos + take]
-            sl_p = proc[pos:pos + take]
-            lo_t, hi_t = int(sl_ts.min()), int(sl_ts.max())
-            c = self._cur
-            c["ts_min"] = lo_t if c["ts_min"] is None else min(c["ts_min"],
-                                                               lo_t)
-            c["ts_max"] = hi_t if c["ts_max"] is None else max(c["ts_max"],
-                                                               hi_t)
-            c["procs"].update(np.unique(sl_p).tolist())
-            c["rows"] += take
-            pos += take
-            if c["rows"] == self.chunk_rows:
-                self._flush_chunk()
+    def _take(self, nrows: int) -> Dict[str, np.ndarray]:
+        """Pop exactly ``nrows`` buffered rows (front of the stream)."""
+        parts: Dict[str, List[np.ndarray]] = {k: [] for k, _c, _d
+                                              in _EVENT_COLS}
+        need = nrows
+        while need:
+            blk = self._buf[0]
+            bn = len(blk["ts"])
+            if bn <= need:
+                for k in parts:
+                    parts[k].append(blk[k])
+                self._buf.pop(0)
+                need -= bn
+            else:
+                for k in parts:
+                    parts[k].append(blk[k][:need])
+                    blk[k] = blk[k][need:]
+                need = 0
+        self._buf_rows -= nrows
+        return {k: (v[0] if len(v) == 1 else np.concatenate(v))
+                for k, v in parts.items()}
 
-    def _flush_chunk(self) -> None:
-        c = self._cur
-        if c is None or c["rows"] == 0:
-            self._cur = None
-            return
+    def _flush_group(self, nrows: int) -> None:
+        """Write one self-describing chunk group: column slices, trailer,
+        (length, CRC-32) and the group magic."""
+        cols = self._take(nrows)
+        n = len(cols["ts"])
+        thread_any = bool(np.any(cols["thread"]))
+        msg_any = bool(np.any(~np.isnan(cols["size"]))
+                       or np.any(cols["partner"] >= 0))
+        keep = {"ts": True, "et": True, "name": True, "proc": True,
+                "thread": thread_any, "size": msg_any, "partner": msg_any,
+                "tag": msg_any}
+        blobs: List[bytes] = []
+        colmeta: List[list] = []
+        for key, _c, dt in _EVENT_COLS:
+            if not keep[key]:
+                continue
+            b = np.ascontiguousarray(
+                cols[key].astype(dt, copy=False)).tobytes()
+            blobs.append(b)
+            colmeta.append([key, dt, len(b)])
+        data = b"".join(blobs)
+        trailer = {
+            "seq": len(self._chunks), "lo": self._flushed, "rows": n,
+            "ts_min": int(cols["ts"].min()), "ts_max": int(cols["ts"].max()),
+            "procs": sorted(int(p) for p in np.unique(cols["proc"]).tolist()),
+            "cols": colmeta, "name_base": self._names_written,
+            "new_names": self._names[self._names_written:],
+        }
+        tblob = json.dumps(trailer, separators=(",", ":")).encode("utf-8")
+        crc = zlib.crc32(tblob, zlib.crc32(data))
+        off = self._off
+        self._out.write(data)
+        self._out.write(tblob)
+        self._out.write(struct.pack("<II", len(tblob), crc))
+        self._out.write(CHUNK_MAGIC)
+        self._hash.update(data)
         self._chunks.append({
-            "lo": c["lo"], "hi": c["lo"] + c["rows"],
-            "ts_min": c["ts_min"], "ts_max": c["ts_max"],
-            "procs": sorted(int(p) for p in c["procs"]),
+            "lo": self._flushed, "hi": self._flushed + n,
+            "ts_min": trailer["ts_min"], "ts_max": trailer["ts_max"],
+            "procs": trailer["procs"], "offset": off, "nbytes": len(data),
+            "tlen": len(tblob), "crc": crc, "cols": colmeta,
         })
-        self._cur = None
+        self._off += len(data) + len(tblob) + 8 + len(CHUNK_MAGIC)
+        self._flushed += n
+        self._names_written = len(self._names)
+        self._has_thread = self._has_thread or thread_any
+        self._has_messages = self._has_messages or msg_any
 
     # -- finish ------------------------------------------------------------
     def abort(self) -> None:
-        """Discard spools without writing the pack."""
-        for f in self._spool.values():
-            f.close()
-        shutil.rmtree(self._dir, ignore_errors=True)
+        """Discard the partial write (atomic staging file, or the in-place
+        partial pack) without finishing."""
+        self._out.close()
+        try:
+            os.unlink(self._tmp)
+        except OSError:
+            pass
         self._finished = True
 
     def finish(self, sidecar: Any = "auto",
                _sidecar_arrays: Optional[dict] = None) -> str:
-        """Stitch spools into the final pack file and write the footer.
+        """Flush the final partial group, write the sidecar + footer, and
+        (in atomic mode) land the file at ``path``.
 
         ``sidecar=True`` derives the structure sidecar (matching / depth /
-        parent / inc / exc) from the just-written columns via a memmap
-        pass — this is the only whole-trace step, and it is memmap-backed,
-        so peak memory is the derived arrays, not the event text.
-        ``"auto"`` means True.  ``_sidecar_arrays`` lets ``write_pack``
-        hand in structure a Trace already materialized.
+        parent / inc / exc) from the just-written groups via a memmap
+        pass — this is the only whole-trace step.  ``"auto"`` means True.
+        ``_sidecar_arrays`` lets ``write_pack`` hand in structure a Trace
+        already materialized.
         """
         if self._finished:
             raise RuntimeError("PackWriter already finished")
-        self._flush_chunk()
-        for f in self._spool.values():
-            f.close()
+        if self._buf_rows:
+            self._flush_group(self._buf_rows)
         want_sidecar = bool(sidecar) or _sidecar_arrays is not None
+        sidecar_meta = None
+        sidecar_crc = None
+        if want_sidecar and self._flushed:
+            arrays = _sidecar_arrays
+            if arrays is None:
+                self._out.flush()  # the memmap pass reads the written groups
+                arrays = self._derive_sidecar()
+            sidecar_meta = []
+            crc = 0
+            for key, _col, dt in _SIDECAR_COLS:
+                arr = np.ascontiguousarray(
+                    np.asarray(arrays[key]).astype(dt, copy=False))
+                if len(arr) != self._flushed:
+                    raise ValueError(
+                        f"sidecar {key!r} has {len(arr)} rows, pack has "
+                        f"{self._flushed}")
+                b = arr.tobytes()
+                self._hash.update(b)
+                crc = zlib.crc32(b, crc)
+                self._out.write(b)
+                sidecar_meta.append({"key": key, "dtype": dt,
+                                     "offset": self._off})
+                self._off += len(b)
+            sidecar_crc = crc
         keep = self._store_flags()
-        tmp = os.path.join(self._dir, "final")
-        h = hashlib.sha256()
-        columns = []
-        with open(tmp, "wb") as out:
-            out.write(MAGIC)
-            off = out.tell()
-            for key, _col, dt in _EVENT_COLS:
-                if not keep[key]:
-                    continue
-                nbytes = self._copy_spool(key, out, h)
-                columns.append({"key": key, "dtype": dt, "offset": off})
-                off += nbytes
-            sidecar_meta = None
-            if want_sidecar and self._rows:
-                arrays = _sidecar_arrays
-                if arrays is None:
-                    out.flush()  # the memmap pass reads the written columns
-                    arrays = self._derive_sidecar(tmp, columns, keep)
-                sidecar_meta = []
-                for key, _col, dt in _SIDECAR_COLS:
-                    arr = np.ascontiguousarray(
-                        np.asarray(arrays[key]).astype(dt, copy=False))
-                    if len(arr) != self._rows:
-                        raise ValueError(
-                            f"sidecar {key!r} has {len(arr)} rows, pack has "
-                            f"{self._rows}")
-                    b = arr.tobytes()
-                    h.update(b)
-                    out.write(b)
-                    sidecar_meta.append({"key": key, "dtype": dt,
-                                         "offset": off})
-                    off += len(b)
-            footer = {
-                "version": VERSION,
-                "rows": self._rows,
-                "chunk_rows": self.chunk_rows,
-                "columns": columns,
-                "names": self._names,
-                "has_thread": self._has_thread,
-                "has_messages": self._has_messages,
-                "chunks": self._chunks,
-                "procs": sorted({p for c in self._chunks
-                                 for p in c["procs"]}),
-                "sidecar": sidecar_meta,
-                "content_id": h.hexdigest(),
-            }
-            blob = json.dumps(footer, separators=(",", ":")).encode("utf-8")
-            out.write(blob)
-            out.write(struct.pack("<Q", len(blob)))
-            out.write(TAIL_MAGIC)
-        os.replace(tmp, self.path)
-        shutil.rmtree(self._dir, ignore_errors=True)
+        footer = {
+            "version": VERSION,
+            "rows": self._flushed,
+            "chunk_rows": self.chunk_rows,
+            "columns": [{"key": k, "dtype": d} for k, _c, d in _EVENT_COLS
+                        if keep[k]],
+            "names": self._names,
+            "has_thread": self._has_thread,
+            "has_messages": self._has_messages,
+            "chunks": self._chunks,
+            "procs": sorted({p for c in self._chunks for p in c["procs"]}),
+            "sidecar": sidecar_meta,
+            "sidecar_crc": sidecar_crc,
+            "content_id": self._hash.hexdigest(),
+        }
+        blob = json.dumps(footer, separators=(",", ":")).encode("utf-8")
+        self._out.write(blob)
+        self._out.write(struct.pack("<Q", len(blob)))
+        self._out.write(TAIL_MAGIC)
+        self._out.close()
+        if self.atomic:
+            os.replace(self._tmp, self.path)
         self._finished = True
         _FOOTER_CACHE.pop(self.path, None)
         return self.path
 
     def _store_flags(self) -> Dict[str, bool]:
-        """Which optional columns earn bytes in the final file."""
+        """Which optional columns any group stored (footer-level view;
+        individual groups record their own column sets)."""
         keep = {k: True for k, _c, _d in _EVENT_COLS}
         keep["thread"] = self._has_thread
         if not self._has_messages:
             keep["size"] = keep["partner"] = keep["tag"] = False
         return keep
 
-    def _copy_spool(self, key: str, out, h) -> int:
-        total = 0
-        with open(os.path.join(self._dir, key), "rb") as src:
-            while True:
-                b = src.read(1 << 22)
-                if not b:
-                    break
-                h.update(b)
-                out.write(b)
-                total += len(b)
-        return total
-
-    def _derive_sidecar(self, tmp: str, columns: List[dict],
-                        keep: Dict[str, bool]) -> dict:
-        """One structure pass over the just-written columns (memmapped)."""
-        byc = {c["key"]: c for c in columns}
+    def _derive_sidecar(self) -> dict:
+        """One structure pass over the just-written groups (memmapped)."""
+        cols = _assemble_columns(self._tmp, self._chunks, self._flushed,
+                                 self._has_thread, self._has_messages)
         ev = EventFrame()
-        for key, col, dt in _EVENT_COLS:
-            if not keep[key]:
-                continue
-            m = np.memmap(tmp, dtype=np.dtype(dt), mode="r",
-                          offset=byc[key]["offset"], shape=(self._rows,))
-            if key == "et":
-                ev[ET] = Categorical(m.astype(np.int32), _ET_CATS)
-            elif key == "name":
-                ev[NAME] = Categorical(
-                    np.asarray(m),
-                    np.asarray(self._names, dtype=object).astype(str))
-            else:
-                ev[col] = m
+        ev[TS] = cols["ts"]
+        ev[ET] = Categorical(cols["et"].astype(np.int32), _ET_CATS)
+        ev[NAME] = Categorical(cols["name"],
+                               np.asarray(self._names,
+                                          dtype=object).astype(str))
+        ev[PROC] = cols["proc"]
+        if self._has_thread:
+            ev[THREAD] = cols["thread"]
+        if self._has_messages:
+            ev[MSG_SIZE] = cols["size"]
+            ev[PARTNER] = cols["partner"]
+            ev[TAG] = cols["tag"]
         matching, depth, parent, inc, exc = structure.derive_structure(ev)
         return {"matching": matching, "depth": depth, "parent": parent,
                 "inc": inc, "exc": exc}
@@ -491,6 +600,236 @@ def write_pack(trace_or_events, path: str,
 
 
 # ---------------------------------------------------------------------------
+# integrity: verification, quarantine, trailer-scan salvage
+# ---------------------------------------------------------------------------
+
+def _group_span_ok(ch: dict, size: int) -> bool:
+    end = ch["offset"] + ch["nbytes"] + ch.get("tlen", 0)
+    return 0 <= ch["offset"] and end + 8 + len(CHUNK_MAGIC) <= size
+
+
+def _verify_chunk(mm, ch: dict, size: int) -> bool:
+    """CRC-check one v2 footer chunk record against the file bytes."""
+    if not _group_span_ok(ch, size):
+        return False
+    end = ch["offset"] + ch["nbytes"] + ch["tlen"]
+    return zlib.crc32(mm[ch["offset"]:end]) == ch["crc"]
+
+
+def _reindex(chunks: List[dict]) -> List[dict]:
+    """Rebase chunk row ranges to the surviving row space (salvaged packs
+    drop rows; the reopened trace is the concatenation of survivors)."""
+    out = []
+    pos = 0
+    for ch in chunks:
+        n = ch["hi"] - ch["lo"]
+        c = dict(ch)
+        c["lo"], c["hi"] = pos, pos + n
+        out.append(c)
+        pos += n
+    return out
+
+
+def scan_chunk_groups(path: str) -> List[dict]:
+    """Discover intact chunk groups by scanning for group trailers —
+    the salvage path when the footer is lost or corrupt.  Returns footer
+    -style chunk records (original row coordinates) plus each trailer's
+    ``name_base`` / ``new_names``, sorted by sequence number; CRC-failing
+    or unparseable candidates are dropped."""
+    path = os.fspath(path)
+    size = os.stat(path).st_size
+    found: Dict[int, dict] = {}
+    if size == 0:
+        return []
+    with open(path, "rb") as f, \
+            mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+        pos = mm.find(CHUNK_MAGIC)
+        while pos != -1:
+            rec = _parse_group_at(mm, pos)
+            if rec is not None and rec["seq"] not in found:
+                found[rec["seq"]] = rec
+            pos = mm.find(CHUNK_MAGIC, pos + 1)
+    return [found[s] for s in sorted(found)]
+
+
+def _parse_group_at(mm, magic_pos: int) -> Optional[dict]:
+    """Validate a candidate group ending at ``magic_pos``; None unless the
+    trailer parses and the CRC over (data + trailer) matches."""
+    if magic_pos < 8:
+        return None
+    tlen, crc = struct.unpack("<II", mm[magic_pos - 8:magic_pos])
+    tstart = magic_pos - 8 - tlen
+    if tstart < 0:
+        return None
+    try:
+        tr = json.loads(mm[tstart:magic_pos - 8].decode("utf-8"))
+        cols = [[str(k), str(d), int(nb)] for k, d, nb in tr["cols"]]
+        nbytes = sum(nb for _k, _d, nb in cols)
+        dstart = tstart - nbytes
+        if dstart < 0:
+            return None
+        if zlib.crc32(mm[dstart:magic_pos - 8]) != crc:
+            return None
+        return {"seq": int(tr["seq"]), "lo": int(tr["lo"]),
+                "hi": int(tr["lo"]) + int(tr["rows"]),
+                "ts_min": tr["ts_min"], "ts_max": tr["ts_max"],
+                "procs": list(tr["procs"]), "offset": dstart,
+                "nbytes": nbytes, "tlen": tlen, "crc": crc, "cols": cols,
+                "name_base": int(tr["name_base"]),
+                "new_names": list(tr["new_names"])}
+    except (ValueError, KeyError, TypeError, UnicodeDecodeError):
+        return None
+
+
+def _salvage_footer(path: str) -> dict:
+    """Rebuild a footer-equivalent (chunk index + name table) from the
+    trailer scan.  The sidecar and content id are unrecoverable without
+    the footer; chunks keep their *original* row coordinates here."""
+    groups = scan_chunk_groups(path)
+    if not groups:
+        raise TraceReadError(
+            path, "salvage found no intact chunk groups (not a v2 pack, or "
+                  "every group is damaged; v1 packs carry no per-chunk "
+                  "recovery records)")
+    names: List[str] = []
+    lost = 0
+    for g in groups:
+        if g["name_base"] > len(names):
+            pad = g["name_base"] - len(names)
+            names.extend(f"<lost-name-{len(names) + i}>" for i in range(pad))
+            lost += pad
+        names.extend(g["new_names"])
+    if lost:
+        warnings.warn(f"{path}: {lost} interned name(s) lost with "
+                      f"quarantined chunks; placeholders substituted",
+                      RuntimeWarning, stacklevel=3)
+    missing = groups[-1]["seq"] + 1 - len(groups)
+    _IO_STATS["chunks_quarantined"] += missing
+    _IO_STATS["footers_rebuilt"] += 1
+    if missing:
+        warnings.warn(f"{path}: {missing} chunk group(s) unrecoverable "
+                      f"(CRC mismatch or lost bytes); salvaging "
+                      f"{len(groups)} intact group(s)",
+                      RuntimeWarning, stacklevel=3)
+    chunks = [{k: g[k] for k in ("lo", "hi", "ts_min", "ts_max", "procs",
+                                 "offset", "nbytes", "tlen", "crc", "cols")}
+              for g in groups]
+    stored = {k for ch in chunks for k, _d, _n in ch["cols"]}
+    return {"version": VERSION, "salvaged": True,
+            "rows": sum(c["hi"] - c["lo"] for c in chunks),
+            "chunk_rows": max(c["hi"] - c["lo"] for c in chunks),
+            "columns": [{"key": k, "dtype": d} for k, _c, d in _EVENT_COLS
+                        if k in stored],
+            "names": names, "has_thread": "thread" in stored,
+            "has_messages": "size" in stored, "chunks": chunks,
+            "procs": sorted({int(p) for c in chunks for p in c["procs"]}),
+            "sidecar": None, "sidecar_crc": None, "content_id": None}
+
+
+def _resolve_chunks(path: str, on_error: str) -> Tuple[dict, List[dict], bool]:
+    """Open policy front door: returns ``(footer, chunks, intact)`` where
+    ``chunks`` are the surviving chunk records rebased to the surviving
+    row space and ``intact`` says whether every original chunk survived
+    (the sidecar is only meaningful then)."""
+    check_on_error(on_error, _ON_ERROR_MODES)
+    # an empty file is total data loss under every policy — salvage must
+    # not dress it up as a successfully-recovered empty trace
+    require_nonempty(path, os.stat(path).st_size, what="pack")
+    try:
+        footer = read_footer(path)
+    except (OSError, ValueError) as e:
+        if on_error == "strict":
+            raise
+        if on_error == "skip_chunk":
+            raise TraceReadError(
+                path, f"footer unreadable ({e}); on_error='skip_chunk' "
+                      f"needs an intact footer — use on_error='salvage'")
+        footer = _salvage_footer(path)
+        return footer, _reindex(footer["chunks"]), False
+    if footer["version"] == 1 or on_error == "strict":
+        return footer, list(footer["chunks"]), True
+    # v2 + verifying mode: CRC every chunk, quarantine failures.  A file
+    # that already passed a full sweep is not re-swept until it changes.
+    st = os.stat(path)
+    key = _verify_key(path, st)
+    if "chunks" in _VERIFIED_CLEAN.get(key, ()):
+        _IO_STATS["verify_cache_hits"] += 1
+        return footer, list(footer["chunks"]), True
+    size = st.st_size
+    good: List[dict] = []
+    bad = 0
+    with open(path, "rb") as f, \
+            mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+        for ch in footer["chunks"]:
+            if _verify_chunk(mm, ch, size):
+                good.append(ch)
+            else:
+                bad += 1
+    if bad:
+        _IO_STATS["chunks_quarantined"] += bad
+        warnings.warn(f"{path}: quarantined {bad} chunk group(s) failing "
+                      f"CRC; {len(good)} intact group(s) kept",
+                      RuntimeWarning, stacklevel=3)
+        return footer, _reindex(good), False
+    _mark_verified(key, "chunks")
+    return footer, good, True
+
+
+def verify_pack(path: str) -> dict:
+    """Full integrity report for a pack: per-chunk CRC verdicts plus the
+    sidecar checksum (v2), or a structural-only check (v1).  Never raises
+    on damage — damage lands in the report; raises only when ``path`` has
+    no readable footer at all (then ``--repair`` / salvage is the tool)."""
+    path = os.fspath(path)
+    footer = read_footer(path)
+    size = os.stat(path).st_size
+    rep = {"path": path, "version": footer["version"],
+           "rows": footer["rows"], "chunks_total": len(footer["chunks"]),
+           "chunks_bad": [], "sidecar_ok": None, "ok": True}
+    if footer["version"] == 1:
+        # v1 stores no checksums: verify byte coverage only
+        last = max((c["offset"] for c in footer.get("columns", [])),
+                   default=0)
+        rep["note"] = "v1 pack: no per-chunk CRCs (structural check only)"
+        rep["ok"] = last < size
+        return rep
+    with open(path, "rb") as f, \
+            mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+        for i, ch in enumerate(footer["chunks"]):
+            if not _verify_chunk(mm, ch, size):
+                rep["chunks_bad"].append(
+                    {"index": i, "rows": [ch["lo"], ch["hi"]],
+                     "offset": ch["offset"]})
+        meta = footer.get("sidecar")
+        if meta and footer.get("sidecar_crc") is not None:
+            lo = meta[0]["offset"]
+            hi = (meta[-1]["offset"]
+                  + footer["rows"] * np.dtype(meta[-1]["dtype"]).itemsize)
+            rep["sidecar_ok"] = (hi <= size and
+                                 zlib.crc32(mm[lo:hi])
+                                 == footer["sidecar_crc"])
+    rep["ok"] = not rep["chunks_bad"] and rep["sidecar_ok"] is not False
+    return rep
+
+
+def repair_pack(src: str, dst: str,
+                chunk_rows: Optional[int] = None) -> dict:
+    """Rewrite a damaged pack from its salvageable chunks: salvage-open
+    ``src`` (footer loss and CRC-failing groups tolerated), then write a
+    fresh, fully-checksummed pack with a re-derived sidecar at ``dst``.
+    Returns a report with rows recovered and groups quarantined."""
+    before = dict(_IO_STATS)
+    t = read_pack(src, on_error="salvage", sidecar=False)
+    write_pack(t, dst, chunk_rows=chunk_rows or DEFAULT_PACK_CHUNK_ROWS)
+    return {"src": os.fspath(src), "dst": os.fspath(dst),
+            "rows_recovered": len(t),
+            "chunks_quarantined": (_IO_STATS["chunks_quarantined"]
+                                   - before["chunks_quarantined"]),
+            "footer_rebuilt": bool(_IO_STATS["footers_rebuilt"]
+                                   - before["footers_rebuilt"])}
+
+
+# ---------------------------------------------------------------------------
 # reader
 # ---------------------------------------------------------------------------
 
@@ -507,7 +846,7 @@ def _shard_procs_pack(path: str) -> Optional[Set[int]]:
         return None
 
 
-def _open_columns(path: str, footer: dict) -> Dict[str, np.ndarray]:
+def _open_columns_v1(path: str, footer: dict) -> Dict[str, np.ndarray]:
     rows = footer["rows"]
     out = {}
     for c in footer["columns"]:
@@ -516,26 +855,177 @@ def _open_columns(path: str, footer: dict) -> Dict[str, np.ndarray]:
     return out
 
 
-def _open_sidecar(path: str, footer: dict) -> Optional[Dict[str, np.ndarray]]:
+def _assemble_columns(path: str, chunks: List[dict], rows: int,
+                      has_thread: bool, has_messages: bool
+                      ) -> Dict[str, np.ndarray]:
+    """Materialize whole columns from v2 chunk groups: one allocation per
+    column, one memcpy per (group, column) slice — still zero-parse.
+    ``chunks`` must be rebased (contiguous lo/hi over ``rows``)."""
+    out: Dict[str, np.ndarray] = {
+        "ts": np.empty(rows, "<i8"), "et": np.empty(rows, "<i1"),
+        "name": np.empty(rows, "<i4"), "proc": np.empty(rows, "<i4")}
+    if has_thread:
+        out["thread"] = np.zeros(rows, "<i4")
+    if has_messages:
+        out["size"] = np.full(rows, np.nan, "<f8")
+        out["partner"] = np.full(rows, -1, "<i4")
+        out["tag"] = np.zeros(rows, "<i4")
+    if not chunks:
+        return out
+    raw = np.memmap(path, dtype=np.uint8, mode="r")
+    size = raw.shape[0]
+    for ch in chunks:
+        n = ch["hi"] - ch["lo"]
+        off = ch["offset"]
+        for key, dt, nb in ch["cols"]:
+            if off + nb > size:
+                raise TraceReadError(
+                    path, f"chunk group column {key!r} extends past end of "
+                          f"file (truncated pack?) — reopen with "
+                          f"on_error='salvage'", locus=f"byte {off}")
+            if key in out:
+                seg = raw[off:off + nb].view(dt)
+                if len(seg) != n:
+                    raise TraceReadError(
+                        path, f"chunk group column {key!r} has {len(seg)} "
+                              f"rows, index says {n}", locus=f"byte {off}")
+                out[key][ch["lo"]:ch["hi"]] = seg
+            off += nb
+    return out
+
+
+class _GroupColumn:
+    """Lazy ``[lo:hi]`` reads of one column across v2 chunk groups: a
+    zero-copy memmap view when the slice lives in one group, a bounded
+    copy when it crosses groups.  Slots straight into ``_frame_slice``."""
+
+    def __init__(self, src: "_GroupColumnSource", key: str):
+        self._src = src
+        self._key = key
+
+    def __getitem__(self, sl: slice) -> np.ndarray:
+        return self._src.read(self._key, sl.start, sl.stop)
+
+
+class _GroupColumnSource:
+    def __init__(self, path: str, chunks: List[dict], has_thread: bool,
+                 has_messages: bool):
+        self._path = path
+        self._raw = np.memmap(path, dtype=np.uint8, mode="r")
+        self._spans: List[Tuple[int, int, Dict[str, Tuple[int, str, int]]]] \
+            = []
+        for ch in chunks:
+            off = ch["offset"]
+            colmap: Dict[str, Tuple[int, str, int]] = {}
+            for key, dt, nb in ch["cols"]:
+                colmap[key] = (off, dt, nb)
+                off += nb
+            self._spans.append((ch["lo"], ch["hi"], colmap))
+        keys = ["ts", "et", "name", "proc"]
+        if has_thread:
+            keys.append("thread")
+        if has_messages:
+            keys += ["size", "partner", "tag"]
+        self._cols = {k: _GroupColumn(self, k) for k in keys}
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._cols
+
+    def __getitem__(self, key: str) -> _GroupColumn:
+        return self._cols[key]
+
+    def read(self, key: str, lo: int, hi: int) -> np.ndarray:
+        dt = np.dtype(_COL_DTYPE[key])
+        parts: List[np.ndarray] = []
+        size = self._raw.shape[0]
+        for clo, chi, colmap in self._spans:
+            if chi <= lo or clo >= hi:
+                continue
+            s, e = max(lo, clo), min(hi, chi)
+            ent = colmap.get(key)
+            if ent is None:
+                arr = np.full(e - s, _COL_FILL[key], dt)
+            else:
+                off, cdt, nb = ent
+                if off + nb > size:
+                    raise TraceReadError(
+                        self._path, f"chunk group column {key!r} extends "
+                                    f"past end of file (truncated pack?) — "
+                                    f"reopen with on_error='salvage'",
+                        locus=f"byte {off}")
+                arr = self._raw[off:off + nb].view(cdt)[s - clo:e - clo]
+            if s == lo and e == hi:
+                return arr
+            parts.append(arr)
+        if not parts:
+            return np.empty(0, dt)
+        return np.concatenate(parts).astype(dt, copy=False)
+
+
+def _open_sidecar(path: str, footer: dict, on_error: str = "strict"
+                  ) -> Optional[Dict[str, np.ndarray]]:
+    """Memmap the structure sidecar; a corrupt/truncated sidecar degrades
+    gracefully (warning + derive-on-demand) instead of failing the open."""
     meta = footer.get("sidecar")
     if not meta:
         return None
     rows = footer["rows"]
-    return {c["key"]: np.memmap(path, dtype=np.dtype(c["dtype"]), mode="r",
-                                offset=c["offset"], shape=(rows,))
-            for c in meta}
+    try:
+        side = {c["key"]: np.memmap(path, dtype=np.dtype(c["dtype"]),
+                                    mode="r", offset=c["offset"],
+                                    shape=(rows,))
+                for c in meta}
+    except (OSError, ValueError) as e:
+        _IO_STATS["sidecars_dropped"] += 1
+        warnings.warn(f"{path}: structure sidecar unreadable ({e}); falling "
+                      f"back to derive_structure", RuntimeWarning,
+                      stacklevel=3)
+        return None
+    if on_error != "strict" and footer.get("sidecar_crc") is not None:
+        key = _verify_key(path, os.stat(path))
+        if "sidecar" not in _VERIFIED_CLEAN.get(key, ()):
+            lo = meta[0]["offset"]
+            hi = (meta[-1]["offset"]
+                  + rows * np.dtype(meta[-1]["dtype"]).itemsize)
+            with open(path, "rb") as f, \
+                    mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+                ok = hi <= len(mm) and zlib.crc32(mm[lo:hi]) == \
+                    footer["sidecar_crc"]
+            if not ok:
+                _IO_STATS["sidecars_dropped"] += 1
+                warnings.warn(f"{path}: structure sidecar fails CRC; "
+                              f"falling back to derive_structure",
+                              RuntimeWarning, stacklevel=3)
+                return None
+            _mark_verified(key, "sidecar")
+    # even without a CRC pass (strict mode stays zero-scan over the data
+    # columns), the row-index columns feed fancy-indexing — an out-of-range
+    # value from a damaged sidecar must degrade, not crash
+    for key in ("matching", "parent"):
+        if key in side and rows:
+            idx = np.asarray(side[key], np.int64)
+            if int(idx.max(initial=-1)) >= rows or \
+                    int(idx.min(initial=0)) < -1:
+                _IO_STATS["sidecars_dropped"] += 1
+                warnings.warn(
+                    f"{path}: structure sidecar has out-of-range row "
+                    f"indices (corrupt?); falling back to "
+                    f"derive_structure", RuntimeWarning, stacklevel=3)
+                return None
+    return side
 
 
 def _name_table(footer: dict) -> np.ndarray:
     return np.asarray(footer["names"], dtype=object).astype(str)
 
 
-def _frame_slice(cols: Dict[str, np.ndarray], names: np.ndarray,
-                 lo: int, hi: int, uniform: bool) -> EventFrame:
-    """EventFrame over rows [lo, hi) — pure memmap slices, no copies except
-    the small int8→int32 Event Type widening.  ``uniform=True`` (chunked
-    reads) synthesizes absent optional columns so chunks concatenate with
-    every other chunked reader's output."""
+def _frame_slice(cols, names: np.ndarray, lo: int, hi: int,
+                 uniform: bool) -> EventFrame:
+    """EventFrame over rows [lo, hi) — memmap-backed slices (v1 columns or
+    v2 group views), no copies except the small int8→int32 Event Type
+    widening.  ``uniform=True`` (chunked reads) synthesizes absent optional
+    columns so chunks concatenate with every other chunked reader's
+    output."""
     n = hi - lo
     ev = EventFrame({
         TS: cols["ts"][lo:hi],
@@ -576,22 +1066,46 @@ def _localize(side: Dict[str, np.ndarray], ev: EventFrame, lo: int,
 @register_reader("pack", extensions=(".pack",), sniff=_sniff_pack,
                  shard_procs=_shard_procs_pack, priority=30)
 def read_pack(path: str, label: Optional[str] = None,
-              sidecar: bool = True) -> Trace:
-    """Open a pack whole-file: every event column is a zero-copy memmap.
+              sidecar: bool = True, on_error: str = "strict",
+              report=None) -> Trace:
+    """Open a pack whole-file: column data is memmap-backed (v1) or
+    assembled with one memcpy per group slice (v2) — zero parse either way.
 
     With ``sidecar=True`` (default) and a stored sidecar, the derived
     structure columns (matching / depth / parent / inc / exc plus the
     matching-timestamp column) attach directly and the returned Trace is
-    already structured — ``derive_structure`` never runs.
+    already structured — ``derive_structure`` never runs.  A corrupt
+    sidecar never fails the open: it is dropped with a warning and
+    structure derives lazily.
+
+    ``on_error``: ``"strict"`` (default) raises on structural damage with
+    file/offset context; ``"skip_chunk"`` CRC-verifies and quarantines
+    damaged chunk groups; ``"salvage"`` additionally rebuilds a lost
+    footer by trailer scan.  See the module docstring.
     """
+    from ..core.errors import IngestReport
     path = os.fspath(path)
-    footer = read_footer(path)
-    cols = _open_columns(path, footer)
+    report = report if report is not None else IngestReport()
+    quar0 = _IO_STATS["chunks_quarantined"]
+    footer, chunks, intact = _resolve_chunks(path, on_error)
     names = _name_table(footer)
-    rows = footer["rows"]
+    rows = sum(c["hi"] - c["lo"] for c in chunks)
+    report.begin(path)
+    q = _IO_STATS["chunks_quarantined"] - quar0
+    if q:
+        report.skip(path, q, "",
+                    "chunk groups quarantined (CRC/structure fault)")
+    report.add_rows(path, rows)
+    if footer["version"] == 1:
+        cols = _open_columns_v1(path, footer)
+    else:
+        cols = _assemble_columns(path, chunks, rows, footer["has_thread"],
+                                 footer["has_messages"])
     ev = _frame_slice(cols, names, 0, rows, uniform=False)
     t = Trace(ev, label=label or path)
-    side = _open_sidecar(path, footer) if sidecar else None
+    t._ingest = report
+    side = (_open_sidecar(path, footer, on_error)
+            if sidecar and intact else None)
     if side is not None:
         matching = np.asarray(side["matching"], np.int64)
         ev[MATCH] = matching
@@ -650,7 +1164,9 @@ def iter_chunks_pack(path: str, chunk_rows: int,
                      hints: Optional[PlanHints] = None,
                      label: Optional[str] = None,
                      row_range: Optional[tuple] = None,
-                     sidecar: bool = True) -> Iterator[EventFrame]:
+                     sidecar: bool = True,
+                     on_error: str = "strict",
+                     report=None) -> Iterator[EventFrame]:
     """Stream a pack in EventFrame chunks of at most ``chunk_rows`` rows.
 
     Index pushdown runs first: footer chunks whose time range / process set
@@ -661,18 +1177,34 @@ def iter_chunks_pack(path: str, chunk_rows: int,
     restricts the read to those rows (:class:`~repro.core.registry.RowSpan`
     parallel work units).  With a stored sidecar, unfiltered chunks carry
     row-localized structure columns the streaming stitcher consumes instead
-    of re-deriving per chunk.
+    of re-deriving per chunk.  ``on_error`` follows :func:`read_pack`:
+    verifying modes quarantine CRC-failing chunk groups before pushdown,
+    and ``"salvage"`` streams a footer-less pack from its trailer scan.
     """
     path = os.fspath(path)
-    footer = read_footer(path)
-    cols = _open_columns(path, footer)
+    quar0 = _IO_STATS["chunks_quarantined"]
+    footer, fchunks, intact = _resolve_chunks(path, on_error)
     names = _name_table(footer)
-    side = _open_sidecar(path, footer) if sidecar else None
-    r_lo, r_hi = (0, footer["rows"]) if row_range is None else (
+    total = sum(c["hi"] - c["lo"] for c in fchunks)
+    if report is not None and row_range is None:
+        report.begin(path)
+        q = _IO_STATS["chunks_quarantined"] - quar0
+        if q:
+            report.skip(path, q, "",
+                        "chunk groups quarantined (CRC/structure fault)")
+        report.add_rows(path, total)
+    if footer["version"] == 1:
+        cols = _open_columns_v1(path, footer)
+    else:
+        cols = _GroupColumnSource(path, fchunks, footer["has_thread"],
+                                  footer["has_messages"])
+    side = (_open_sidecar(path, footer, on_error)
+            if sidecar and intact else None)
+    r_lo, r_hi = (0, total) if row_range is None else (
         int(row_range[0]), int(row_range[1]))
     # pushdown at footer-chunk granularity, then coalesce surviving runs
     runs: List[List[int]] = []
-    for ch in footer["chunks"]:
+    for ch in fchunks:
         lo, hi = max(ch["lo"], r_lo), min(ch["hi"], r_hi)
         if hi <= lo:
             continue

@@ -30,7 +30,9 @@ from __future__ import annotations
 
 import http.client
 import json
+import random
 import threading
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..core import registry
@@ -51,27 +53,60 @@ class RemoteError(RuntimeError):
         self.code = code
 
 
+#: request targets whose handlers are idempotent: re-sending after a
+#: connection fault cannot change service state beyond what one send
+#: does.  GETs always qualify; the plan-execution POSTs qualify because
+#: a replayed plan coalesces/caches onto the same digest-keyed result.
+_IDEMPOTENT_POSTS = ("/query", "/setquery", "/diagnose")
+
+
 class ServiceClient:
-    """One connection to a trace-query server (see module docstring)."""
+    """One connection to a trace-query server (see module docstring).
+
+    Transport faults on **idempotent** requests (every GET, plus the
+    plan-execution POSTs — replaying a plan is digest-idempotent) are
+    retried up to ``retries`` times with jittered exponential backoff
+    (``backoff * 2^attempt``, capped at ``backoff_max``, each delay
+    uniformly jittered to 50–100%), covering both connection resets at
+    send time and resets *mid-response*.  Non-idempotent requests
+    (``/shutdown``) keep only the classic single stale-keep-alive retry:
+    they are replayed only when the failure hit a **reused** connection,
+    where the overwhelmingly likely cause is the server having closed an
+    idle socket before the request arrived.
+    """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 8731,
-                 tenant: Optional[str] = None, timeout: float = 120.0):
+                 tenant: Optional[str] = None, timeout: float = 120.0,
+                 retries: int = 2, backoff: float = 0.05,
+                 backoff_max: float = 2.0,
+                 deadline_ms: Optional[float] = None):
         self.host = host
         self.port = int(port)
         self.tenant = tenant
         self.timeout = timeout
+        self.retries = max(int(retries), 0)
+        self.backoff = float(backoff)
+        self.backoff_max = float(backoff_max)
+        #: default per-request server-side deadline (ms) attached to every
+        #: plan execution; per-call ``deadline_ms`` overrides
+        self.deadline_ms = deadline_ms
         self._lock = threading.Lock()
         self._conn: Optional[http.client.HTTPConnection] = None
         #: response metadata of the most recent query (digest, cached,
         #: coalesced, elapsed_ms) — handy in tests and benchmarks
         self.last_meta: Dict[str, Any] = {}
+        #: transport retries performed over this client's lifetime
+        self.retry_count = 0
 
     # -- transport ---------------------------------------------------------
     def _request(self, method: str, path: str,
                  payload: Optional[dict] = None) -> dict:
         body = json.dumps(payload).encode() if payload is not None else None
+        idempotent = (method == "GET" or path in _IDEMPOTENT_POSTS)
+        attempts = (self.retries + 1) if idempotent else 2
         with self._lock:
-            for attempt in (0, 1):
+            for attempt in range(attempts):
+                reused = self._conn is not None
                 if self._conn is None:
                     self._conn = http.client.HTTPConnection(
                         self.host, self.port, timeout=self.timeout)
@@ -84,11 +119,18 @@ class ServiceClient:
                     break
                 except (http.client.HTTPException, ConnectionError,
                         BrokenPipeError, OSError):
-                    # stale keep-alive (server restarted / idle timeout):
-                    # reconnect once, then give up
                     self._close_locked()
-                    if attempt:
+                    if not idempotent and not reused:
+                        # fresh connection: the server may have received
+                        # and acted on the request — never replay
                         raise
+                    if attempt + 1 >= attempts:
+                        raise
+                    self.retry_count += 1
+                    if idempotent:
+                        delay = min(self.backoff * (2 ** attempt),
+                                    self.backoff_max)
+                        time.sleep(delay * (0.5 + random.random() * 0.5))
         try:
             out = json.loads(data.decode("utf-8"))
         except ValueError:
@@ -162,7 +204,8 @@ class ServiceClient:
     # -- execution ---------------------------------------------------------
     def _run(self, open_spec: dict, steps: List[dict], op: str, args,
              kwargs, *, cache: Optional[bool], lane: Optional[str],
-             digest_only: bool) -> Any:
+             digest_only: bool,
+             deadline_ms: Optional[float] = None) -> Any:
         payload = {
             "open": open_spec,
             "steps": steps,
@@ -179,6 +222,10 @@ class ServiceClient:
             payload["lane"] = lane
         if digest_only:
             payload["digest_only"] = True
+        if deadline_ms is None:
+            deadline_ms = self.deadline_ms
+        if deadline_ms is not None:
+            payload["deadline_ms"] = float(deadline_ms)
         endpoint = "/setquery" if open_spec["mode"] == "set" else "/query"
         out = self._request("POST", endpoint, payload)
         self.last_meta = {k: out.get(k) for k in
@@ -218,12 +265,16 @@ class RemoteQuery:
 
     def run(self, op_name: str, *args: Any, cache: Optional[bool] = None,
             lane: Optional[str] = None, digest_only: bool = False,
-            **kwargs: Any) -> Any:
+            deadline_ms: Optional[float] = None, **kwargs: Any) -> Any:
         """Execute a registered terminal op server-side; returns the
-        decoded result (or its digest with ``digest_only=True``)."""
+        decoded result (or its digest with ``digest_only=True``).
+        ``deadline_ms`` bounds server-side execution for this call
+        (overriding the client default); past it the service answers 504
+        and cancels the plan at the next chunk boundary."""
         return self._client._run(self._open, self._steps, op_name, args,
                                  kwargs, cache=cache, lane=lane,
-                                 digest_only=digest_only)
+                                 digest_only=digest_only,
+                                 deadline_ms=deadline_ms)
 
     def __getattr__(self, name: str):
         return registry.terminal_op(name, self.run, "RemoteQuery")

@@ -52,6 +52,7 @@ from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import plancache, registry
+from ..core.cancellation import CancelToken, cancel_scope
 from ..core.scheduler import Scheduler, get_scheduler
 from . import protocol
 from .protocol import ProtocolError, canonical_json
@@ -159,13 +160,19 @@ class HandlePool:
     invoke ``get()`` off the event loop for sources with slow opens.
     """
 
-    def __init__(self, max_handles: int = 8):
+    def __init__(self, max_handles: int = 8, breaker_threshold: int = 3,
+                 breaker_cooldown: float = 30.0):
         self.max_handles = max(int(max_handles), 1)
+        self.breaker_threshold = max(int(breaker_threshold), 1)
+        self.breaker_cooldown = float(breaker_cooldown)
         self._lock = threading.Lock()
         self._handles: "OrderedDict[str, _Handle]" = OrderedDict()
+        self._fails: Dict[str, dict] = {}  # key -> consecutive open failures
         self.opens = 0
         self.reopens = 0
         self.evictions = 0
+        self.breaker_trips = 0
+        self.breaker_fastfails = 0
 
     def _ident(self, paths: List[str]) -> tuple:
         from ..core.plancache import _paths_token
@@ -192,8 +199,21 @@ class HandlePool:
                                        processes=spec["processes"])
         return "trace", Trace.open(spec["paths"][0], format=spec["format"])
 
+    def _salvage_hint(self, spec: dict) -> str:
+        p = spec["paths"][0] if spec["paths"] else "<path>"
+        return (f"if the source is a damaged pack, inspect it with "
+                f"`python tools/pack.py --verify {p}` and recover with "
+                f"`--repair`, or reopen with on_error=\"salvage\"")
+
     def get(self, spec: dict) -> _Handle:
-        """The live handle for ``spec`` (opening or reopening as needed)."""
+        """The live handle for ``spec`` (opening or reopening as needed).
+
+        Repeatedly-failing opens trip a per-spec circuit breaker: after
+        ``breaker_threshold`` consecutive failures, requests fast-fail
+        with 422 ``source_corrupt`` (and a salvage hint) for
+        ``breaker_cooldown`` seconds instead of re-burning a lane thread
+        on a source that cannot open.  One probe is admitted when the
+        cooldown lapses; a successful open resets the breaker."""
         key = hashlib.sha256(canonical_json(spec).encode()).hexdigest()
         try:
             ident = self._ident(spec["paths"])
@@ -201,17 +221,42 @@ class HandlePool:
             raise ServiceError(404, "no_such_trace",
                                f"cannot stat trace source: {e}") from None
         with self._lock:
+            b = self._fails.get(key)
+            if (b is not None and b["fails"] >= self.breaker_threshold
+                    and time.time() < b["until"]):
+                self.breaker_fastfails += 1
+                raise ServiceError(
+                    422, "source_corrupt",
+                    f"open failed {b['fails']} consecutive times "
+                    f"(last: {b['last']}); circuit open for another "
+                    f"{b['until'] - time.time():.1f}s — "
+                    + self._salvage_hint(spec))
             h = self._handles.get(key)
             if h is not None and h.ident == ident:
                 self._handles.move_to_end(key)
                 h.uses += 1
+                self._fails.pop(key, None)
                 return h
             stale = h is not None
             try:
                 kind, obj = self._open(spec)
             except (OSError, ValueError) as e:
+                b = self._fails.setdefault(
+                    key, {"fails": 0, "until": 0.0, "last": ""})
+                b["fails"] += 1
+                b["last"] = f"{type(e).__name__}: {e}"
+                b["until"] = time.time() + self.breaker_cooldown
+                if b["fails"] == self.breaker_threshold:
+                    self.breaker_trips += 1
+                if b["fails"] >= self.breaker_threshold:
+                    raise ServiceError(
+                        422, "source_corrupt",
+                        f"open failed {b['fails']} consecutive times "
+                        f"(last: {b['last']}) — "
+                        + self._salvage_hint(spec)) from None
                 raise ServiceError(404, "open_failed",
                                    f"cannot open trace source: {e}") from None
+            self._fails.pop(key, None)
             h = _Handle(key, kind, obj, ident)
             h.uses = 1
             self._handles[key] = h
@@ -226,10 +271,17 @@ class HandlePool:
 
     def stats(self) -> dict:
         with self._lock:
+            now = time.time()
             return {"open": len(self._handles),
                     "max_handles": self.max_handles,
                     "opens": self.opens, "reopens": self.reopens,
                     "evictions": self.evictions,
+                    "breaker_trips": self.breaker_trips,
+                    "breaker_fastfails": self.breaker_fastfails,
+                    "breaker_open": sum(
+                        1 for b in self._fails.values()
+                        if b["fails"] >= self.breaker_threshold
+                        and now < b["until"]),
                     "handles": [{"kind": h.kind, "uses": h.uses,
                                  "key": h.key[:12]}
                                 for h in self._handles.values()]}
@@ -237,6 +289,7 @@ class HandlePool:
     def clear(self) -> None:
         with self._lock:
             self._handles.clear()
+            self._fails.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -260,9 +313,17 @@ class TraceService:
                  max_handles: int = 8, max_active: int = 32,
                  per_tenant: int = 4, tenant_quota: Optional[int] = None,
                  cache_entries: Optional[int] = None,
-                 default_tenant: str = "public"):
+                 default_tenant: str = "public",
+                 default_deadline: Optional[float] = None,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown: float = 30.0):
         self.scheduler = scheduler or get_scheduler()
-        self.handles = HandlePool(max_handles=max_handles)
+        self.handles = HandlePool(max_handles=max_handles,
+                                  breaker_threshold=breaker_threshold,
+                                  breaker_cooldown=breaker_cooldown)
+        #: seconds allowed per request when the client sends no
+        #: ``deadline_ms``; None = unbounded (the historical behavior)
+        self.default_deadline = default_deadline
         self.max_active = max(int(max_active), 1)
         self.per_tenant = max(int(per_tenant), 1)
         self.default_tenant = default_tenant
@@ -400,6 +461,15 @@ class TraceService:
                                "service is draining; no new queries")
         (open_spec, op, spec, steps, args, kwargs, cache_flag, lane,
          digest_only) = self._decode(payload, set_scope)
+        deadline = payload.get("deadline_ms")
+        if deadline is not None:
+            if not isinstance(deadline, (int, float)) or deadline <= 0:
+                raise ProtocolError(
+                    f'"deadline_ms" must be a positive number, '
+                    f'got {deadline!r}')
+            deadline = float(deadline) / 1e3
+        else:
+            deadline = self.default_deadline
         self.counters[lane] += 1
         key = self._wire_key(open_spec, steps, op, payload, digest_only)
 
@@ -455,14 +525,43 @@ class TraceService:
         self._active += 1
         self._idle.clear()
         self._count(tenant, "executed")
+        token = CancelToken("request deadline exceeded")
+        t_start = time.monotonic()
+
+        async def _bounded(fn):
+            """Run ``fn`` on the lane thread within the remaining deadline
+            budget.  On expiry the 504 goes out immediately; the lane
+            thread sees the cancelled token at its next chunk boundary
+            and frees itself cooperatively."""
+            aw = loop.run_in_executor(self.scheduler.lane(lane), fn)
+            if deadline is None:
+                return await aw
+            remaining = deadline - (time.monotonic() - t_start)
+            try:
+                if remaining <= 0:
+                    raise asyncio.TimeoutError
+                return await asyncio.wait_for(aw, remaining)
+            except asyncio.TimeoutError:
+                token.cancel()
+                aw.cancel()  # drop the abandoned wrapper (thread exits at
+                # its next token check; its late result/exception is
+                # discarded instead of logged)
+                self.counters["deadline_exceeded"] = \
+                    self.counters.get("deadline_exceeded", 0) + 1
+                raise ServiceError(
+                    504, "deadline_exceeded",
+                    f"deadline of {deadline * 1e3:.0f} ms exceeded; "
+                    f"execution cancelled at the next chunk boundary"
+                ) from None
+
+        def _exec(handle):
+            with cancel_scope(token):
+                return self._execute(handle, op, steps, args, kwargs,
+                                     cache_flag, digest_only)
+
         try:
-            handle = await loop.run_in_executor(
-                self.scheduler.lane(lane), lambda: self.handles.get(
-                    open_spec))
-            result = await loop.run_in_executor(
-                self.scheduler.lane(lane),
-                lambda: self._execute(handle, op, steps, args, kwargs,
-                                      cache_flag, digest_only))
+            handle = await _bounded(lambda: self.handles.get(open_spec))
+            result = await _bounded(lambda: _exec(handle))
             if key is not None and cache_flag is not False:
                 plancache.store(key, result, tenant=tenant)
             future.set_result(result)
@@ -559,8 +658,9 @@ def _response(status: int, body: dict) -> bytes:
     payload = json.dumps(body).encode()
     reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
               405: "Method Not Allowed", 413: "Payload Too Large",
-              429: "Too Many Requests", 500: "Internal Server Error",
-              503: "Service Unavailable"}.get(status, "Error")
+              422: "Unprocessable Entity", 429: "Too Many Requests",
+              500: "Internal Server Error", 503: "Service Unavailable",
+              504: "Gateway Timeout"}.get(status, "Error")
     head = (f"HTTP/1.1 {status} {reason}\r\n{_JSON_HEADERS}"
             f"Content-Length: {len(payload)}\r\n"
             f"Connection: keep-alive\r\n\r\n")

@@ -6,4 +6,9 @@
 vendored property-testing fallback with the same surface — so the
 property-based suites *run* everywhere instead of silently skipping in
 environments without the dependency.
+
+``repro.testing.faults`` is the fault-injection harness: deterministic
+file corruptors (truncate / bit-flip / garbage append / torn footer) and
+service-level injectors (TCP fault proxy, flaky handle opens) used by
+the robustness suites and the crash-consistency CI gate.
 """

@@ -201,7 +201,10 @@ def _write_rank_pack(path: str, p: int, nprocs: int, events_per_proc: int,
     dst = (p + 1) % nprocs
     cats = np.asarray(_NAMES, dtype=object).astype(str)
     et_cats = np.asarray(_ET_STR)
-    with PackWriter(path) as w:
+    # in-place (non-atomic) write: a killed generator leaves finalized chunk
+    # groups at the destination, exactly what salvage / --repair recover —
+    # the crash-consistency smoke in CI depends on this
+    with PackWriter(path, atomic=False) as w:
         for ts, et, name, size, tag in _rank_batches(
                 p, nprocs, events_per_proc, calls_per_iter, seed,
                 batch_calls):

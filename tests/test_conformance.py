@@ -238,3 +238,180 @@ def test_detector_recovers_pathology_from_any_format(pathology_written):
             "stragglers", cache=False)
         assert len(f) >= 1, fmt
         assert int(f["process"][0]) == gt.process, fmt
+
+
+# ---------------------------------------------------------------------------
+# corruption matrix: every reader x injected damage x error policy
+# ---------------------------------------------------------------------------
+#
+# Closed loop with ``repro.testing.faults``: each registered reader is fed
+# the golden trace damaged in a precisely known way, under both error
+# policies.  The contract is uniform:
+#
+# * ``on_error="strict"`` either fails loudly (a TraceReadError naming
+#   the file) or parses cleanly — it never half-returns;
+# * the lenient policy (``salvage`` for pack, ``skip`` for text formats)
+#   NEVER raises on body damage: it returns the survivors plus an ingest
+#   report accounting for every dropped record/byte;
+# * when both policies succeed, they agree bit-for-bit;
+# * lenient eager and lenient streaming agree bit-for-bit (deterministic
+#   skip: same survivors regardless of execution strategy);
+# * zero-byte inputs are an "empty file" TraceReadError under EVERY
+#   policy — an empty trace is indistinguishable from total data loss,
+#   so no policy invents an empty success.
+
+from repro.core.errors import TraceReadError
+from repro.testing.faults import bit_flip, garbage_append, truncate_at
+
+MATRIX_FMTS = ["jsonl", "csv", "chrome", "otf2j", "pack"]
+LENIENT = {"pack": "salvage"}  # every other reader spells it "skip"
+
+CORRUPTIONS = {
+    "trunc25": lambda s, d: truncate_at(s, d, frac=0.25),
+    "trunc75": lambda s, d: truncate_at(s, d, frac=0.75),
+    "trunc99": lambda s, d: truncate_at(s, d, frac=0.99),
+    "bitflip": lambda s, d: bit_flip(s, d, frac=0.5, count=4, seed=13),
+    "garbage": lambda s, d: garbage_append(s, d, nbytes=97, seed=13),
+}
+
+
+@pytest.fixture(scope="module")
+def matrix_sources(golden, written, tmp_path_factory):
+    """Matrix inputs: the conformance goldens, except pack is re-written
+    with small chunk groups so partial damage has partial survivors."""
+    d = tmp_path_factory.mktemp("matrix_src")
+    paths = dict(written)
+    paths["pack"] = str(d / "golden.pack")
+    write_pack(golden, paths["pack"], chunk_rows=20)
+    return paths
+
+
+@pytest.mark.parametrize("hurt", sorted(CORRUPTIONS))
+@pytest.mark.parametrize("fmt", MATRIX_FMTS)
+def test_corruption_matrix(fmt, hurt, matrix_sources, golden_canonical,
+                           tmp_path):
+    lenient = LENIENT.get(fmt, "skip")
+    dst = str(tmp_path / os.path.basename(matrix_sources[fmt]))
+    CORRUPTIONS[hurt](matrix_sources[fmt], dst)
+
+    # strict: loud failure naming the file, or a clean parse
+    strict_t = None
+    try:
+        strict_t = Trace.open(dst, format=fmt, on_error="strict")
+    except (TraceReadError, ValueError) as e:
+        assert os.path.basename(dst) in str(e), (
+            f"{fmt}/{hurt}: strict error does not name the file: {e}")
+
+    # lenient: returns the survivors, or — only on TOTAL loss — fails
+    # loudly naming the file; it never half-returns silently-wrong data
+    try:
+        t = Trace.open(dst, format=fmt, on_error=lenient)
+    except TraceReadError as e:
+        assert os.path.basename(dst) in str(e), (
+            f"{fmt}/{hurt}: lenient error does not name the file: {e}")
+        return
+    assert len(t.events) <= len(golden_canonical)
+    rpt = t.ingest_report().as_dict()
+    assert rpt["paths"], f"{fmt}/{hurt}: ingest report is empty"
+
+    if len(t.events) == 0:
+        # total loss surfaced as an accounted-for empty trace (e.g. a
+        # single-file JSON body destroyed): the report must say where the
+        # bytes went, and streaming must agree it is empty
+        assert not t.ingest_report().clean, (
+            f"{fmt}/{hurt}: empty result with nothing accounted")
+        st = Trace.open(dst, format=fmt, streaming=True, chunk_rows=61,
+                        on_error=lenient).materialize()
+        assert len(st.events) == 0, f"{fmt}/{hurt}: streaming not empty"
+        return
+
+    # policy coherence: when strict parsed cleanly AND lenient dropped
+    # nothing, the two must agree.  (Pack strict is zero-scan by design:
+    # it can "succeed" over a bit-flipped body that the CRC-verifying
+    # lenient mode quarantines — the report records the divergence.)
+    if strict_t is not None and t.ingest_report().clean:
+        assert_canonical_equal(canonical(strict_t), canonical(t),
+                               f"{fmt}/{hurt} strict-vs-lenient")
+
+    # execution-strategy coherence: streaming skip == eager skip
+    st = Trace.open(dst, format=fmt, streaming=True, chunk_rows=61,
+                    on_error=lenient).materialize()
+    assert_canonical_equal(canonical(st), canonical(t),
+                           f"{fmt}/{hurt} eager-vs-streaming")
+
+
+@pytest.mark.parametrize("fmt", MATRIX_FMTS + ["hlo"])
+def test_empty_file_is_loud_under_every_policy(fmt, tmp_path):
+    ext = {"jsonl": ".jsonl", "csv": ".csv", "chrome": ".json",
+           "otf2j": ".otf2.json", "pack": ".pack", "hlo": ".hlo"}[fmt]
+    p = str(tmp_path / ("empty" + ext))
+    open(p, "w").close()
+    lenient = LENIENT.get(fmt, "skip")
+    for policy in ("strict", lenient):
+        with pytest.raises(TraceReadError) as exc:
+            Trace.open(p, format=fmt, on_error=policy)
+        msg = str(exc.value)
+        assert "empty file" in msg and os.path.basename(p) in msg, (
+            f"{fmt}/{policy}: {msg}")
+
+
+def test_empty_file_auto_sniff_names_sniffers(tmp_path):
+    p = str(tmp_path / "mystery.dat")
+    open(p, "w").close()
+    with pytest.raises(TraceReadError) as exc:
+        Trace.open(p)
+    msg = str(exc.value)
+    assert "empty file" in msg and "Sniffers tried" in msg
+    for fmt in MATRIX_FMTS:
+        assert fmt in msg
+
+
+def test_archive_stream_damage_drops_only_that_location(written, tmp_path,
+                                                        golden_canonical):
+    """OTF2-style directory archives: damage to one location stream file
+    is quarantined at location granularity; definitions damage is always
+    fatal (nothing is decodable without the anchor)."""
+    import shutil
+    src = written["otf2j-dir"]
+    arch = str(tmp_path / "arch")
+    shutil.copytree(src, arch)
+    loc_dir = os.path.join(arch, "locations")
+    streams = sorted(os.listdir(loc_dir))
+    assert len(streams) >= 2
+    victim = os.path.join(loc_dir, streams[0])
+    bit_flip(victim, victim, offsets=[10], seed=0)
+
+    with pytest.raises(TraceReadError, match=os.path.basename(victim)):
+        Trace.open(arch, format="otf2j", on_error="strict")
+
+    t = Trace.open(arch, format="otf2j", on_error="skip")
+    assert 0 < len(t.events) < len(golden_canonical)
+    rpt = t.ingest_report()
+    assert rpt.total_skipped() >= 1
+
+    # streaming sees the identical survivors
+    st = Trace.open(arch, format="otf2j", streaming=True, chunk_rows=61,
+                    on_error="skip").materialize()
+    assert_canonical_equal(canonical(st), canonical(t),
+                           "archive eager-vs-streaming")
+
+    # definitions.json is the unsalvageable anchor: sever it mid-JSON
+    from repro.testing.faults import truncate_at
+    defs = os.path.join(arch, "definitions.json")
+    truncate_at(defs, defs, frac=0.5)
+    for policy in ("strict", "skip"):
+        with pytest.raises(TraceReadError, match="definitions"):
+            Trace.open(arch, format="otf2j", on_error=policy)
+
+
+def test_hlo_corruption_policies(tmp_path):
+    """The HLO text reader honors the same contract: strict raises on an
+    undecodable dump, skip returns an empty trace plus a report."""
+    p = str(tmp_path / "broken.hlo")
+    with open(p, "w") as f:
+        f.write("HloModule busted\n\n%f (x: f32[2]) -> f32[2] {\n  ROOT")
+    with pytest.raises((TraceReadError, ValueError), match="broken.hlo"):
+        Trace.open(p, format="hlo", on_error="strict")
+    t = Trace.open(p, format="hlo", on_error="skip")
+    assert len(t.events) == 0
+    assert t.ingest_report().total_skipped() >= 1

@@ -1,0 +1,467 @@
+"""Closed-loop fault-injection suite.
+
+Every test injects a fault whose ground truth is known exactly (which
+bytes, which chunk group, which connection) via ``repro.testing.faults``
+and then asserts the recovery contract end to end:
+
+* pack integrity: strict opens fail loudly naming the file; salvage
+  keeps precisely the undamaged chunk groups; torn footers rebuild from
+  the chunk-trailer scan with zero row loss;
+* ``tools/pack.py --verify`` / ``--repair`` as a subprocess round trip,
+  including a SIGKILL-mid-write crash-consistency check;
+* transport: the client retries idempotent requests through injected
+  connection resets (including mid-response) and surfaces server-side
+  deadline expiry as 504;
+* the handle pool's circuit breaker trips after repeated injected open
+  failures and recovers after its cooldown.
+"""
+
+import asyncio
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import tracegen
+from repro.core import plancache, registry
+from repro.core.constants import TS
+from repro.core.trace import Trace
+from repro.readers.pack import (io_stats, read_pack, repair_pack,
+                                verify_pack, write_pack)
+from repro.serving.client import RemoteError, ServiceClient
+from repro.serving.tracequery import (ServiceError, TraceServer,
+                                      TraceService)
+from repro.testing.faults import (FaultProxy, bit_flip, flaky_opens,
+                                  garbage_append, torn_footer, truncate_at)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PACK_TOOL = os.path.join(REPO, "tools", "pack.py")
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+@pytest.fixture(scope="module")
+def golden_pack(tmp_path_factory):
+    """A pack with many small chunk groups, so single-group damage has a
+    precisely known blast radius."""
+    d = tmp_path_factory.mktemp("faults")
+    t = tracegen.gol(nprocs=3, iters=10, seed=5)
+    p = str(d / "golden.pack")
+    write_pack(t, p, chunk_rows=40)
+    return p
+
+
+@pytest.fixture()
+def fresh_cache():
+    plancache.clear()
+    yield
+    plancache.clear()
+
+
+# ---------------------------------------------------------------------------
+# file-level injectors: determinism and reports
+# ---------------------------------------------------------------------------
+
+def test_injectors_are_deterministic(golden_pack, tmp_path):
+    a, b = str(tmp_path / "a.pack"), str(tmp_path / "b.pack")
+    ra = bit_flip(golden_pack, a, frac=0.4, count=3, seed=9)
+    rb = bit_flip(golden_pack, b, frac=0.4, count=3, seed=9)
+    assert ra == rb
+    assert open(a, "rb").read() == open(b, "rb").read()
+    ra = garbage_append(golden_pack, a, nbytes=64, seed=9)
+    rb = garbage_append(golden_pack, b, nbytes=64, seed=9)
+    assert open(a, "rb").read() == open(b, "rb").read()
+    r = truncate_at(golden_pack, a, frac=0.25)
+    assert r["cut_at"] == os.path.getsize(a)
+    assert r["lost"] == r["size"] - r["cut_at"]
+
+
+# ---------------------------------------------------------------------------
+# pack salvage: exact blast radius
+# ---------------------------------------------------------------------------
+
+def test_single_group_flip_quarantines_only_that_group(golden_pack,
+                                                       tmp_path):
+    full = read_pack(golden_pack)
+    rep = verify_pack(golden_pack)
+    assert rep["ok"] and rep["chunks_total"] >= 5
+
+    # flip one byte at ~40% of the file: the body of an interior group
+    bad = str(tmp_path / "flip.pack")
+    bit_flip(golden_pack, bad, frac=0.4, count=1, seed=3)
+
+    vrep = verify_pack(bad)
+    assert not vrep["ok"]
+    bad_groups = vrep["chunks_bad"]
+    assert len(bad_groups) >= 1
+
+    # strict is the zero-scan mmap fast path: structure is intact, so it
+    # returns the stored bytes without CRC-checking them (integrity is
+    # what verify_pack and the verifying open modes are for)
+    assert len(read_pack(bad, on_error="strict")) == len(full)
+
+    # salvage: exactly the rows outside the quarantined groups survive
+    before = io_stats()
+    t = read_pack(bad, on_error="salvage")
+    after = io_stats()
+    lost = sum(g["rows"][1] - g["rows"][0] for g in bad_groups)
+    assert len(t) == len(full) - lost
+    assert (after["chunks_quarantined"] - before["chunks_quarantined"]
+            == len(bad_groups))
+
+    # the survivors are byte-identical to the same rows of the original
+    keep = np.ones(len(full), bool)
+    for g in bad_groups:
+        keep[g["rows"][0]:g["rows"][1]] = False
+    np.testing.assert_array_equal(np.asarray(t.events[TS]),
+                                  np.asarray(full.events[TS])[keep])
+
+    # and the ingest report counts the quarantine
+    from repro.core.errors import IngestReport
+    rpt = IngestReport()
+    t2 = read_pack(bad, on_error="salvage", report=rpt)
+    assert rpt.total_skipped() == len(bad_groups)
+    assert len(t2) == len(t)
+
+
+def test_torn_footer_rebuilds_all_rows(golden_pack, tmp_path):
+    full = read_pack(golden_pack)
+    torn = str(tmp_path / "torn.pack")
+    torn_footer(golden_pack, torn)
+    with pytest.raises(ValueError, match="torn.pack"):
+        read_pack(torn, on_error="strict")
+    before = io_stats()
+    t = read_pack(torn, on_error="salvage")
+    after = io_stats()
+    assert after["footers_rebuilt"] - before["footers_rebuilt"] == 1
+    assert len(t) == len(full)
+    np.testing.assert_array_equal(np.asarray(t.events[TS]),
+                                  np.asarray(full.events[TS]))
+
+
+def test_truncation_keeps_intact_prefix(golden_pack, tmp_path):
+    from repro.readers.pack import read_footer
+    full = read_pack(golden_pack)
+    # cut in the middle of an interior chunk group's data, so the groups
+    # before it survive and everything from it on is lost
+    chunks = read_footer(golden_pack)["chunks"]
+    victim = chunks[len(chunks) // 2]
+    cut = str(tmp_path / "cut.pack")
+    truncate_at(golden_pack, cut,
+                offset=victim["offset"] + victim["nbytes"] // 2)
+    t = read_pack(cut, on_error="salvage")
+    n = len(t)
+    assert n == victim["lo"]  # exactly the groups before the cut
+    assert 0 < n < len(full)
+    np.testing.assert_array_equal(np.asarray(t.events[TS]),
+                                  np.asarray(full.events[TS])[:n])
+
+
+def test_garbage_tail_salvages_every_row(golden_pack, tmp_path):
+    full = read_pack(golden_pack)
+    gar = str(tmp_path / "gar.pack")
+    garbage_append(golden_pack, gar, nbytes=512, seed=1)
+    with pytest.raises(ValueError, match="gar.pack"):
+        read_pack(gar, on_error="strict")
+    t = read_pack(gar, on_error="salvage")
+    assert len(t) == len(full)
+
+
+# ---------------------------------------------------------------------------
+# tools/pack.py --verify / --repair round trip
+# ---------------------------------------------------------------------------
+
+def _tool(*argv):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run([sys.executable, PACK_TOOL, *argv],
+                          capture_output=True, text=True, env=env)
+
+
+def test_cli_verify_and_repair(golden_pack, tmp_path):
+    r = _tool("--verify", golden_pack)
+    assert r.returncode == 0 and "OK" in r.stdout
+
+    bad = str(tmp_path / "cli.pack")
+    torn_footer(golden_pack, bad)
+    r = _tool("--verify", bad)
+    assert r.returncode == 1
+    assert "repair" in r.stdout.lower()
+
+    fixed = str(tmp_path / "fixed.pack")
+    r = _tool("--repair", bad, "-o", fixed)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "footer rebuilt" in r.stdout
+    r = _tool("--verify", fixed)
+    assert r.returncode == 0
+
+    full = read_pack(golden_pack)
+    rec = read_pack(fixed)
+    assert len(rec) == len(full)
+    np.testing.assert_array_equal(np.asarray(rec.events[TS]),
+                                  np.asarray(full.events[TS]))
+
+
+def test_crash_consistency_sigkill_mid_write(tmp_path):
+    """SIGKILL a writer partway through a pack write, then assert the
+    survivor contract: strict open fails loudly, --repair recovers every
+    complete chunk group, and the repaired pack verifies clean."""
+    dst = str(tmp_path / "crash.pack")
+    code = (
+        "import sys; sys.path.insert(0, %r)\n"
+        "from repro import tracegen\n"
+        "from repro.readers.pack import write_pack\n"
+        "t = tracegen.gol(nprocs=3, iters=40, seed=2)\n"
+        "print('ready', len(t.events), flush=True)\n"
+        "write_pack(t, %r, chunk_rows=64)\n"
+        "print('done', flush=True)\n" % (os.path.join(REPO, "src"), dst)
+    )
+    proc = subprocess.Popen([sys.executable, "-c", code],
+                            stdout=subprocess.PIPE, text=True)
+    assert proc.stdout.readline().startswith("ready")
+    # kill while the chunked write is in flight (poll for partial bytes)
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        if os.path.exists(dst) and os.path.getsize(dst) > 4096:
+            break
+        if proc.poll() is not None:
+            break
+        time.sleep(0.001)
+    proc.send_signal(signal.SIGKILL)
+    proc.wait()
+    if not os.path.exists(dst) or os.path.getsize(dst) == 0:
+        pytest.skip("writer finished or never started before SIGKILL")
+
+    fixed = str(tmp_path / "recovered.pack")
+    r = _tool("--repair", dst, "-o", fixed)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert _tool("--verify", fixed).returncode == 0
+    rec = read_pack(fixed)
+    # whatever was recovered is a prefix of the source trace, bit-exact
+    t = tracegen.gol(nprocs=3, iters=40, seed=2)
+    src_ts = np.asarray(t.events[TS], np.int64)
+    ts = np.asarray(rec.events[TS])
+    assert len(ts) <= len(src_ts)
+    np.testing.assert_array_equal(ts, src_ts[:len(ts)])
+
+
+# ---------------------------------------------------------------------------
+# transport faults: retry through resets, deadline 504
+# ---------------------------------------------------------------------------
+
+def test_client_retries_through_connection_resets(golden_pack, fresh_cache):
+    local = Trace.open(golden_pack).query().flat_profile()
+    from repro.serving.protocol import result_digest
+
+    async def main():
+        server = await TraceServer(TraceService(), port=0).start()
+
+        def client_work():
+            with FaultProxy("127.0.0.1", server.port,
+                            reset_every=2) as proxy:
+                with ServiceClient("127.0.0.1", proxy.port,
+                                   retries=3, backoff=0.01) as c:
+                    profs = [c.open(golden_pack).query().flat_profile()
+                             for _ in range(6)]
+                    return profs, c.retry_count, dict(proxy.stats)
+
+        out = await asyncio.to_thread(client_work)
+        await server.shutdown(grace=5)
+        return out
+
+    profs, retries, stats = run(main())
+    # every request eventually succeeded despite every 2nd conn dying
+    assert len(profs) == 6
+    for p in profs:
+        assert result_digest(p) == result_digest(local)
+    assert retries >= 1
+    assert stats["resets"] >= 1
+
+
+def test_client_survives_mid_response_reset(golden_pack, fresh_cache):
+    """A reset *after* part of the response was forwarded: the dangerous
+    case — the request executed server-side, and the retry must still
+    converge because plan execution is digest-idempotent."""
+    local = Trace.open(golden_pack).query().flat_profile()
+    from repro.serving.protocol import result_digest
+
+    async def main():
+        server = await TraceServer(TraceService(), port=0).start()
+
+        def client_work():
+            with FaultProxy("127.0.0.1", server.port, reset_every=2,
+                            reset_after_bytes=40) as proxy:
+                with ServiceClient("127.0.0.1", proxy.port,
+                                   retries=4, backoff=0.01) as c:
+                    profs = [c.open(golden_pack).query().flat_profile()
+                             for _ in range(4)]
+                    return profs, dict(proxy.stats)
+
+        out = await asyncio.to_thread(client_work)
+        await server.shutdown(grace=5)
+        return out
+
+    profs, stats = run(main())
+    assert len(profs) == 4
+    for p in profs:
+        assert result_digest(p) == result_digest(local)
+    assert stats["resets"] >= 1
+
+
+def test_deadline_expiry_is_504(golden_pack, fresh_cache):
+    @registry.register_op("_fault_sleep")
+    def _fault_sleep(trace, duration=1.0):
+        time.sleep(float(duration))
+        return float(len(trace.events))
+
+    try:
+        async def main():
+            server = await TraceServer(TraceService(), port=0).start()
+
+            def client_work():
+                with ServiceClient("127.0.0.1", server.port) as c:
+                    q = c.open(golden_pack).query()
+                    t0 = time.monotonic()
+                    with pytest.raises(RemoteError) as exc:
+                        q.run("_fault_sleep", cache=False, deadline_ms=80)
+                    elapsed = time.monotonic() - t0
+                    # generous deadline on the same op succeeds
+                    ok = q.run("_fault_sleep", duration=0.01, cache=False,
+                               deadline_ms=10_000)
+                    return exc.value, elapsed, ok
+
+            out = await asyncio.to_thread(client_work)
+            await server.shutdown(grace=5)
+            return out
+
+        err, elapsed, ok = run(main())
+        assert err.status == 504 and err.code == "deadline_exceeded"
+        assert elapsed < 0.9  # answered long before the 1s op finished
+        assert ok > 0
+    finally:
+        registry._OP_REGISTRY.pop("_fault_sleep", None)
+
+
+def test_streaming_deadline_cancels_at_chunk_boundary(golden_pack,
+                                                      fresh_cache):
+    """An expired deadline on a streaming scan frees the lane thread via
+    cooperative cancellation — the next request runs immediately."""
+    async def main():
+        svc = TraceService()
+        body = {"open": {"paths": [golden_pack], "streaming": True,
+                         "chunk_rows": 16},
+                "op": "flat_profile", "steps": [], "tenant": "t",
+                "args": [], "kwargs": {}, "cache": False,
+                "deadline_ms": 0.0001}
+        with pytest.raises(ServiceError) as exc:
+            await svc.query(body)
+        assert exc.value.status == 504
+        # the lane is free: an undeadlined request completes normally
+        body2 = dict(body)
+        body2.pop("deadline_ms")
+        out = await svc.query(body2)
+        return exc.value, out, svc.counters.get("deadline_exceeded", 0)
+
+    err, out, n504 = run(main())
+    assert err.code == "deadline_exceeded"
+    assert out["ok"] and n504 >= 1
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker on injected open failures
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_and_recovers(golden_pack, fresh_cache):
+    async def main():
+        svc = TraceService(breaker_threshold=3, breaker_cooldown=0.2)
+        body = lambda: {"open": {"paths": [golden_pack],
+                                 "streaming": False},
+                        "op": "flat_profile", "steps": [], "tenant": "t",
+                        "args": [], "kwargs": {}, "cache": False}
+        codes = []
+        with flaky_opens(3) as counter:
+            for _ in range(5):
+                try:
+                    await svc.query(body())
+                    codes.append("ok")
+                except ServiceError as e:
+                    codes.append((e.status, e.code))
+        # wait out the cooldown; the probe open now succeeds (injector
+        # exhausted) and the breaker resets
+        await asyncio.sleep(0.25)
+        out = await svc.query(body())
+        return codes, counter, svc.handles.stats(), out
+
+    codes, counter, stats, out = run(main())
+    # 1st+2nd: plain open_failed; 3rd trips the breaker to 422;
+    # 4th+5th: fast-fail without touching the injector
+    assert codes[0] == (404, "open_failed")
+    assert codes[1] == (404, "open_failed")
+    assert codes[2] == (422, "source_corrupt")
+    assert codes[3] == (422, "source_corrupt")
+    assert codes[4] == (422, "source_corrupt")
+    # only 3 opens reached the injector: the 2 fast-fails never did
+    assert counter["failed"] == 3 and counter["calls"] == 3
+    assert stats["breaker_trips"] >= 1
+    assert stats["breaker_fastfails"] >= 2
+    assert out["ok"]
+
+
+def test_breaker_fastfail_carries_salvage_hint(tmp_path, fresh_cache):
+    bad = str(tmp_path / "bad.pack")
+    with open(bad, "wb") as f:
+        f.write(b"#pipitpack 2\n" + b"\x00" * 64)
+
+    async def main():
+        svc = TraceService(breaker_threshold=2, breaker_cooldown=60.0)
+        body = {"open": {"paths": [bad], "streaming": False},
+                "op": "flat_profile", "steps": [], "tenant": "t",
+                "args": [], "kwargs": {}, "cache": False}
+        last = None
+        for _ in range(3):
+            try:
+                await svc.query(body)
+            except ServiceError as e:
+                last = e
+        return last
+
+    err = run(main())
+    assert err.status == 422 and err.code == "source_corrupt"
+    assert "tools/pack.py" in str(err) and "salvage" in str(err)
+
+
+def test_verified_clean_cache_skips_resweep(golden_pack, tmp_path):
+    """A pack that passed its CRC sweep is not re-swept until the file
+    changes on disk; in-place damage invalidates the cached verdict."""
+    import shutil
+
+    from repro.readers import pack as packmod
+
+    p = str(tmp_path / "clean.pack")
+    shutil.copyfile(golden_pack, p)
+    packmod._VERIFIED_CLEAN.clear()
+
+    packmod.reset_io_stats()
+    t1 = read_pack(p, on_error="salvage")
+    assert io_stats()["verify_cache_hits"] == 0
+    t2 = read_pack(p, on_error="salvage")
+    assert io_stats()["verify_cache_hits"] >= 1
+    assert len(t1.events) == len(t2.events)
+
+    # in-place rewrite: stat identity changes, so the sweep runs again
+    # and the damaged group is quarantined, not served from the cache
+    time.sleep(0.01)  # ensure mtime_ns moves even on coarse filesystems
+    from repro.readers.pack import read_footer
+    victim = read_footer(p)["chunks"][0]
+    bit_flip(p, p, offsets=[victim["offset"] + 5])
+    packmod.reset_io_stats()
+    with pytest.warns(RuntimeWarning, match="quarantined"):
+        t3 = read_pack(p, on_error="salvage")
+    assert io_stats()["verify_cache_hits"] == 0
+    assert io_stats()["chunks_quarantined"] == 1
+    assert len(t3.events) == len(t1.events) - (victim["hi"] - victim["lo"])

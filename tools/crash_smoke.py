@@ -1,0 +1,214 @@
+#!/usr/bin/env python
+"""CI crash-consistency smoke: SIGKILL a pack writer mid-write, repair,
+serve, and require the served digest to match a direct library read.
+
+Closed loop, all gates hard:
+
+1. spawn a ``tracegen.big_trace`` pack write (non-atomic ``PackWriter``)
+   and SIGKILL it once the destination has real chunk groups on disk;
+2. ``tools/pack.py --repair`` must salvage the torn pack (non-empty,
+   verify-clean output);
+3. the recovered rows must be a bit-exact prefix of the same generator's
+   full output (nothing invented, nothing reordered);
+4. a trace-query service over the repaired pack must return a
+   ``flat_profile`` digest identical to a direct ``Trace.open`` — served
+   recovery equals library recovery.
+
+It also emits a **fault matrix** artifact (``--matrix-json``): every
+registered text/pack reader x {truncate 25/75/99%, bit-flip, garbage
+tail} x {strict, lenient} with the observed outcome, so CI archives a
+machine-readable robustness census per commit.
+
+Usage::
+
+    PYTHONPATH=src python tools/crash_smoke.py [--events N]
+        [--matrix-json fault_matrix.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+WRITER = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.tracegen.big import big_trace
+print("ready", flush=True)
+big_trace({out!r}, nprocs=1, events_per_proc={events}, format="pack")
+print("done", flush=True)
+"""
+
+
+def crash_consistency(events: int) -> dict:
+    from repro.core.trace import Trace
+    from repro.readers.pack import verify_pack
+
+    out = {}
+    with tempfile.TemporaryDirectory(prefix="crash_smoke_") as tmp:
+        shard_dir = os.path.join(tmp, "torn")
+        victim = os.path.join(shard_dir, "rank_0.pack")
+        proc = subprocess.Popen(
+            [sys.executable, "-c",
+             WRITER.format(src=os.path.join(REPO, "src"), out=shard_dir,
+                           events=events)],
+            stdout=subprocess.PIPE, text=True)
+        assert proc.stdout.readline().strip() == "ready"
+        # wait for at least one finalized chunk group (250k rows x ~33
+        # bytes/row ~= 8 MB), then kill mid-write of a later group
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            if (os.path.exists(victim)
+                    and os.path.getsize(victim) > 9_000_000):
+                break
+            time.sleep(0.002)
+        else:
+            raise RuntimeError("writer never produced bytes to tear")
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+        out["torn_bytes"] = os.path.getsize(victim)
+
+        repaired = os.path.join(tmp, "repaired.pack")
+        r = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tools", "pack.py"),
+             "--repair", victim, "-o", repaired],
+            capture_output=True, text=True)
+        out["repair_rc"] = r.returncode
+        out["repair_log"] = r.stdout.strip()
+        if r.returncode != 0:
+            raise SystemExit(f"repair failed:\n{r.stdout}{r.stderr}")
+
+        rep = verify_pack(repaired)
+        out["repaired_rows"] = rep["rows"]
+        if not (rep["ok"] and rep["rows"] > 0):
+            raise SystemExit(f"repaired pack not verify-clean: {rep}")
+
+        # recovered rows must be a bit-exact prefix of the full generation
+        import numpy as np
+        from repro.core.constants import TS
+        full_dir = os.path.join(tmp, "full")
+        from repro.tracegen.big import big_trace
+        big_trace(full_dir, nprocs=1, events_per_proc=events, format="pack")
+        got = np.asarray(Trace.open(repaired).events[TS], np.int64)
+        want = np.asarray(
+            Trace.open(os.path.join(full_dir, "rank_0.pack")).events[TS],
+            np.int64)[:len(got)]
+        if not np.array_equal(got, want):
+            raise SystemExit("recovered rows are not a prefix of the "
+                             "generator's output")
+        out["prefix_exact"] = True
+
+        # served digest == library digest over the repaired pack
+        sys.path.insert(0, REPO)
+        from benchmarks.bench_serve import start_server
+        from repro.serving.client import ServiceClient
+        from repro.serving.protocol import result_digest
+        lib_digest = result_digest(
+            Trace.open(repaired).query().run("flat_profile", cache=False))
+        srv, port = start_server()
+        try:
+            c = ServiceClient("127.0.0.1", port, tenant="smoke")
+            served = c.open(repaired).query().run("flat_profile",
+                                                  cache=False)
+            out["served_digest_equal"] = \
+                result_digest(served) == lib_digest
+            c.close()
+        finally:
+            srv.kill()
+            srv.wait(timeout=30)
+        if not out["served_digest_equal"]:
+            raise SystemExit("served digest != library digest")
+    return out
+
+
+def fault_matrix() -> list:
+    """Outcome census: reader x corruption x policy on small goldens."""
+    from repro import tracegen
+    from repro.core.errors import TraceReadError
+    from repro.core.trace import Trace
+    from repro.readers.chrome import write_chrome
+    from repro.readers.csvreader import write_csv
+    from repro.readers.jsonl import write_jsonl
+    from repro.readers.otf2j import write_otf2_json
+    from repro.readers.pack import write_pack
+    from repro.testing.faults import bit_flip, garbage_append, truncate_at
+
+    golden = tracegen.gol(nprocs=3, iters=4, seed=7)
+    writers = {"jsonl": ("g.jsonl", write_jsonl),
+               "csv": ("g.csv", write_csv),
+               "chrome": ("g.json", write_chrome),
+               "otf2j": ("g.otf2.json", write_otf2_json),
+               "pack": ("g.pack",
+                        lambda t, p: write_pack(t, p, chunk_rows=20))}
+    hurts = {"trunc25": lambda s, d: truncate_at(s, d, frac=0.25),
+             "trunc75": lambda s, d: truncate_at(s, d, frac=0.75),
+             "trunc99": lambda s, d: truncate_at(s, d, frac=0.99),
+             "bitflip": lambda s, d: bit_flip(s, d, frac=0.5, count=4,
+                                              seed=13),
+             "garbage": lambda s, d: garbage_append(s, d, nbytes=97,
+                                                    seed=13)}
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="fault_matrix_") as tmp:
+        for fmt, (name, writer) in writers.items():
+            src = os.path.join(tmp, name)
+            writer(golden, src)
+            lenient = "salvage" if fmt == "pack" else "skip"
+            for hurt, injure in hurts.items():
+                dst = os.path.join(tmp, f"{hurt}-{name}")
+                injure(src, dst)
+                for policy in ("strict", lenient):
+                    row = {"format": fmt, "corruption": hurt,
+                           "policy": policy}
+                    try:
+                        t = Trace.open(dst, format=fmt, on_error=policy)
+                        rpt = t.ingest_report()
+                        row.update(outcome="opened",
+                                   rows=len(t.events),
+                                   clean=rpt.clean,
+                                   skipped=rpt.total_skipped())
+                    except (TraceReadError, ValueError) as e:
+                        row.update(outcome="raised",
+                                   error=str(e)[:200],
+                                   names_file=os.path.basename(dst)
+                                   in str(e))
+                    rows.append(row)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--events", type=int, default=2_000_000,
+                    help="events in the torn shard's generator")
+    ap.add_argument("--matrix-json",
+                    help="write the reader x corruption x policy outcome "
+                    "matrix to PATH")
+    args = ap.parse_args(argv)
+
+    result = {"crash_consistency": crash_consistency(args.events)}
+    print(json.dumps(result, indent=2))
+
+    if args.matrix_json:
+        rows = fault_matrix()
+        with open(args.matrix_json, "w") as f:
+            json.dump(rows, f, indent=1)
+        raised_unnamed = [r for r in rows if r["outcome"] == "raised"
+                          and not r["names_file"]]
+        print(f"fault matrix: {len(rows)} cells -> {args.matrix_json}")
+        if raised_unnamed:
+            print("FAIL: errors not naming the damaged file:",
+                  json.dumps(raised_unnamed, indent=1))
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,6 +17,17 @@ Usage::
         [--chunk-rows N]    # footer index granularity (default 250k)
         [--no-sidecar]      # skip the structure sidecar
         [--verify]          # reopen and compare a flat profile digest
+
+Maintenance modes (inputs that are already packs)::
+
+    PYTHONPATH=src python tools/pack.py --verify run.pack
+        # integrity report: per-chunk CRC verdicts + sidecar checksum
+    PYTHONPATH=src python tools/pack.py --repair bad.pack [-o fixed.pack]
+        # salvage-open (footer loss and CRC-failing chunk groups are
+        # tolerated) and rewrite a fresh, fully-checksummed pack
+
+``--verify`` on packs exits non-zero if any pack fails its CRCs;
+``--repair`` exits non-zero only when a pack yields no rows at all.
 """
 
 from __future__ import annotations
@@ -70,6 +81,63 @@ def _digest_source(inp: str, fmt: str) -> str:
     return _digest(Trace(ev))
 
 
+def _is_pack(path: str) -> bool:
+    try:
+        with open(path, "rb") as f:
+            return f.read(11) == b"#pipitpack "
+    except OSError:
+        return False
+
+
+def _verify_mode(inputs: list) -> int:
+    """Integrity-report mode: every input is already a pack."""
+    from repro.readers.pack import verify_pack
+    failures = 0
+    for inp in inputs:
+        try:
+            rep = verify_pack(inp)
+        except (OSError, ValueError) as e:
+            print(f"{inp}: UNREADABLE ({e}) — try --repair")
+            failures += 1
+            continue
+        bad = rep["chunks_bad"]
+        side = {None: "n/a", True: "ok", False: "CORRUPT"}[rep["sidecar_ok"]]
+        verdict = "OK" if rep["ok"] else "DAMAGED"
+        print(f"{inp}: {verdict}  v{rep['version']}, {rep['rows']} rows, "
+              f"{rep['chunks_total']} chunk group(s), {len(bad)} bad, "
+              f"sidecar {side}")
+        for b in bad:
+            print(f"  bad group #{b['index']}: rows "
+                  f"[{b['rows'][0]}, {b['rows'][1]}) at byte {b['offset']}")
+        if rep.get("note"):
+            print(f"  note: {rep['note']}")
+        failures += 0 if rep["ok"] else 1
+    return 1 if failures else 0
+
+
+def _repair_mode(inputs: list, out: str | None) -> int:
+    from repro.readers.pack import repair_pack
+    many = len(inputs) > 1
+    failures = 0
+    for inp in inputs:
+        if out is None:
+            dst = (inp[:-5] if inp.endswith(".pack") else inp) \
+                + ".repaired.pack"
+        elif many or os.path.isdir(out):
+            os.makedirs(out, exist_ok=True)
+            dst = os.path.join(out, os.path.basename(inp))
+        else:
+            dst = out
+        rep = repair_pack(inp, dst)
+        print(f"{inp} -> {dst}  ({rep['rows_recovered']} rows recovered, "
+              f"{rep['chunks_quarantined']} chunk group(s) quarantined"
+              f"{', footer rebuilt' if rep['footer_rebuilt'] else ''})")
+        if rep["rows_recovered"] == 0:
+            print("  NOTHING SALVAGEABLE")
+            failures += 1
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("inputs", nargs="+", help="trace files / archives")
@@ -82,9 +150,19 @@ def main(argv=None) -> int:
     ap.add_argument("--no-sidecar", action="store_true",
                     help="do not store the structure sidecar")
     ap.add_argument("--verify", action="store_true",
-                    help="reopen each pack and check the flat-profile "
-                    "digest against the source")
+                    help="converting: reopen each pack and check the "
+                    "flat-profile digest against the source; on inputs "
+                    "that are already packs: full CRC integrity report")
+    ap.add_argument("--repair", action="store_true",
+                    help="salvage a damaged pack and rewrite it as a "
+                    "fresh, fully-checksummed pack (default output: "
+                    "<stem>.repaired.pack)")
     args = ap.parse_args(argv)
+
+    if args.repair:
+        return _repair_mode(args.inputs, args.out)
+    if args.verify and all(_is_pack(i) for i in args.inputs):
+        return _verify_mode(args.inputs)
 
     from repro.core.trace import Trace
 
