@@ -1,0 +1,197 @@
+"""Live-ingestion acceptance benchmark: incremental re-query cost and
+straggler detection latency.
+
+Two phases, each with a hard target:
+
+* **incremental** — a live handle's re-query after the writer appends
+  +25% more events must cost **< 25%** of a cold recompute over the full
+  committed prefix (the incremental path folds only the new groups into
+  the cached running aggregate), with digest equality against the cold
+  recompute.  The 25% bar is calibrated at the multi-million-event
+  scale; at CI smoke scale fixed per-query overhead (plan key, digest)
+  dominates, so the gate relaxes while digest equality stays strict.
+* **straggler** — over an 8-rank live fleet, one rank stops
+  heartbeating: a single ``LiveTraceSet.refresh()`` sweep must classify
+  it (lagging) and complete in **< 2 s** wall — detection latency is one
+  poll period, not a function of fleet data volume.
+
+Run standalone::
+
+    PYTHONPATH=src python -m benchmarks.bench_live [--events N]
+        [--json PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+DEFAULT_EVENTS = int(os.environ.get("BENCH_LIVE_EVENTS", 4_000_000))
+INCREMENTAL_TARGET = 0.25
+STRAGGLER_TARGET_S = 2.0
+NRANKS = 8
+
+
+def incremental_target(events: int) -> float:
+    return INCREMENTAL_TARGET if events >= 2_000_000 else 0.6
+
+
+def _gen(n: int, proc: int, t0: int):
+    """n synthetic events: properly nested Enter/Leave pairs over a small
+    name pool, integer-ns timestamps starting at t0."""
+    import numpy as np
+
+    from repro.core.constants import (ENTER, ET, LEAVE, MSG_SIZE, NAME,
+                                      PARTNER, PROC, TAG, TS)
+    from repro.core.frame import EventFrame
+    pool = np.asarray([f"fn{i}" for i in range(23)])
+    names = np.repeat(pool[np.random.default_rng(proc * 7919 + t0)
+                           .integers(0, len(pool), (n + 1) // 2)], 2)[:n]
+    et = np.empty(n, dtype=object)
+    et[0::2] = ENTER
+    et[1::2] = LEAVE
+    return EventFrame({
+        TS: np.arange(t0, t0 + n, dtype=np.int64),
+        ET: np.asarray(et, str), NAME: names,
+        PROC: np.full(n, proc, np.int64),
+        PARTNER: np.full(n, -1, np.int64),
+        MSG_SIZE: np.full(n, np.nan),
+        TAG: np.zeros(n, np.int64),
+    })
+
+
+def phase_incremental(workdir: str, events: int) -> dict:
+    from repro.core import plancache
+    from repro.core.streaming import LiveTrace
+    from repro.readers.pack import PackWriter
+    from repro.serving.protocol import result_digest
+
+    plancache.clear()
+    path = os.path.join(workdir, "rank_0.pack")
+    grow = max(events // 4, 10_000)
+    group = max(grow // 4, 2_500)
+
+    w = PackWriter.open_append(path, chunk_rows=group, fsync=False)
+    written = 0
+    while written < events:
+        n = min(group, events - written)
+        w.append(_gen(n, 0, written))
+        written += n
+        w.commit()
+
+    lt = LiveTrace([path])
+    t0 = time.time()
+    base = lt.query().run("flat_profile")
+    cold_initial_s = time.time() - t0
+
+    # writer appends +25%; the live handle re-queries incrementally
+    w.append(_gen(grow, 0, written))
+    w.commit()
+    lt.refresh()
+    t0 = time.time()
+    inc = lt.query().run("flat_profile")
+    incremental_s = time.time() - t0
+
+    # cold recompute over the same committed prefix (no cached aggregate)
+    cold_handle = LiveTrace([path], cache=False)
+    t0 = time.time()
+    cold = cold_handle.query().run("flat_profile", cache=False)
+    cold_s = time.time() - t0
+
+    ratio = incremental_s / cold_s if cold_s > 0 else float("inf")
+    target = incremental_target(events)
+    digests_equal = result_digest(inc) == result_digest(cold)
+    st = plancache.stats()
+    return {"events": events, "grow_events": grow,
+            "rows_final": lt.watermark.rows,
+            "cold_initial_s": round(cold_initial_s, 4),
+            "incremental_s": round(incremental_s, 4),
+            "cold_recompute_s": round(cold_s, 4),
+            "ratio": round(ratio, 4), "target": target,
+            "digests_equal": digests_equal,
+            "live_hits": st["live_hits"], "live_misses": st["live_misses"],
+            "base_digest_changed": result_digest(base) != result_digest(inc),
+            "ok": (digests_equal and ratio < target
+                   and st["live_hits"] >= 1)}
+
+
+def phase_straggler(workdir: str, events: int) -> dict:
+    from repro.core.liveset import LiveTraceSet
+    from repro.runtime.tracer import Tracer
+
+    fleet_dir = os.path.join(workdir, "fleet")
+    os.makedirs(fleet_dir, exist_ok=True)
+    fake = [1000.0]
+    per_rank = max(events // (NRANKS * 8), 2_000)
+    tracers = []
+    for r in range(NRANKS):
+        tr = Tracer(process=r, sink=os.path.join(fleet_dir,
+                                                 f"rank_{r}.pack"),
+                    flush_every=max(per_rank // 2, 500), fsync=False,
+                    wall_clock=lambda: fake[0])
+        for i in range(per_rank):
+            tr.instant("tick", proc=r)
+        tr.flush()
+        tracers.append(tr)
+
+    ls = LiveTraceSet(fleet_dir, lag_timeout=2.0, dead_timeout=60.0,
+                      clock=lambda: fake[0])
+    healthy = list(ls.coverage.included)
+
+    # rank 5 stalls: everyone else heartbeats, it does not
+    fake[0] += 5.0
+    for r in range(NRANKS):
+        if r != 5:
+            tracers[r].flush()
+    t0 = time.time()
+    cov = ls.refresh()
+    detect_s = time.time() - t0
+    lagging = [r for r, i in cov.per_rank.items()
+               if i["status"] == "lagging"]
+    return {"ranks": NRANKS, "events_per_rank": per_rank,
+            "healthy_at_start": len(healthy),
+            "detect_sweep_s": round(detect_s, 4),
+            "target_s": STRAGGLER_TARGET_S,
+            "lagging_detected": lagging,
+            "still_included": 5 in cov.included,
+            "ok": (len(healthy) == NRANKS and lagging == [5]
+                   and 5 in cov.included
+                   and detect_s < STRAGGLER_TARGET_S)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=DEFAULT_EVENTS)
+    ap.add_argument("--json", default=None,
+                    help="also write the result object to this path")
+    args = ap.parse_args()
+
+    result = {"events": args.events, "phases": {}}
+    with tempfile.TemporaryDirectory(prefix="bench_live_") as workdir:
+        result["phases"]["incremental"] = phase_incremental(workdir,
+                                                            args.events)
+        print("incremental:", json.dumps(result["phases"]["incremental"]),
+              flush=True)
+        result["phases"]["straggler"] = phase_straggler(workdir,
+                                                        args.events)
+        print("straggler:", json.dumps(result["phases"]["straggler"]),
+              flush=True)
+
+    result["ok"] = all(p["ok"] for p in result["phases"].values())
+    print(json.dumps(result, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+    if not result["ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

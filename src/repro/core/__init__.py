@@ -22,7 +22,9 @@ from .registry import (PlanHints, get_backend, list_backends, list_ops,
                        list_readers, op_backends, register_backend,
                        register_chunked, register_op, register_reader,
                        register_streaming)
-from .streaming import StreamingTrace, StreamingUnsupported
+from .liveset import Coverage, LiveTraceSet
+from .streaming import (LiveResult, LiveTrace, StreamingTrace,
+                        StreamingUnsupported, Watermark)
 from .trace import Trace
 
 __all__ = [
@@ -35,6 +37,7 @@ __all__ = [
     "register_detector", "get_detector", "list_detectors", "DetectorSpec",
     "Findings", "is_comm_name",
     "StreamingTrace", "StreamingUnsupported",
+    "LiveTrace", "LiveResult", "Watermark", "LiveTraceSet", "Coverage",
     "list_ops", "list_readers",
     "TS", "ET", "NAME", "PROC", "THREAD", "ENTER", "LEAVE", "INSTANT",
     "INC", "EXC", "MSG_SIZE", "PARTNER", "TAG", "MPI_SEND", "MPI_RECV",

@@ -133,10 +133,17 @@ def plan_units(handle, steps: Sequence, n_workers: int) -> List[Any]:
     sizes = [_path_bytes(p) for p in paths]
     total = max(sum(sizes), 1)
     units: List[Any] = []
+    planner = getattr(handle, "plan_units_for", None)
     for p, sz in zip(paths, sizes):
-        spec = registry.resolve_reader(p, handle.format)
         # shares of the worker budget proportional to file size
         want = max(1, round(sz * n_workers / total))
+        if planner is not None:
+            # handle-owned planning (live handles): the units it returns
+            # are authoritative even when there is only one — a whole-path
+            # unit would read past the pinned snapshot watermark
+            units.extend(planner(p, want))
+            continue
+        spec = registry.resolve_reader(p, handle.format)
         sub = None
         if want > 1 and spec.plan_units is not None:
             sub = spec.plan_units(p, want)

@@ -45,7 +45,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["lookup", "store", "plan_key", "clear", "configure", "stats"]
+__all__ = ["lookup", "store", "plan_key", "clear", "configure", "stats",
+           "live_lookup", "live_store", "live_invalidate", "live_plan_key"]
 
 _MAX_ENTRIES = 128
 _ENABLED = True
@@ -57,6 +58,19 @@ _HITS = 0
 _MISSES = 0
 _EVICTIONS = 0
 _TENANT_STATS: Dict[str, Dict[str, int]] = {}
+
+# Live incremental partials (valid-up-to-row semantics): a live handle's
+# plan keeps its running aggregation state here, keyed by live_plan_key —
+# a re-query after the trace grows folds only the new rows into the
+# stored partial instead of recomputing from row 0.  Validity is enforced
+# by per-path prefix fingerprints stored *inside* the entry (group count,
+# end offset, last CRC), not by the key: the same key deliberately
+# matches across growth.  See core/streaming.py::execute_streaming.
+_LIVE: "OrderedDict[str, Any]" = OrderedDict()
+_LIVE_MAX = 32
+_LIVE_HITS = 0
+_LIVE_MISSES = 0
+_LIVE_INVALIDATIONS = 0
 
 # One process-wide reentrant lock guards every counter and both index maps:
 # the trace-query service looks up / stores from worker threads while the
@@ -134,12 +148,14 @@ def _shrink_tenant(tenant: str) -> None:
 
 
 def clear() -> None:
-    """Drop every cached result (explicit invalidation).  Counters and
-    per-tenant usage tallies survive; only the entries go."""
+    """Drop every cached result (explicit invalidation), including live
+    incremental partials.  Counters and per-tenant usage tallies survive;
+    only the entries go."""
     with _LOCK:
         _CACHE.clear()
         _OWNER.clear()
         _TENANT_KEYS.clear()
+        _LIVE.clear()
         for st in _TENANT_STATS.values():
             st["entries"] = 0
 
@@ -152,7 +168,45 @@ def stats() -> dict:
         return {"entries": len(_CACHE), "hits": _HITS, "misses": _MISSES,
                 "evictions": _EVICTIONS, "max_entries": _MAX_ENTRIES,
                 "enabled": _ENABLED, "tenant_quota": _TENANT_QUOTA,
+                "live_entries": len(_LIVE), "live_hits": _LIVE_HITS,
+                "live_misses": _LIVE_MISSES,
+                "live_invalidations": _LIVE_INVALIDATIONS,
                 "tenants": {t: dict(st) for t, st in _TENANT_STATS.items()}}
+
+
+def live_lookup(key: str) -> Any:
+    """The stored incremental partial for ``key``, or None.  The caller
+    owns validity checking (prefix fingerprints live in the entry)."""
+    global _LIVE_HITS, _LIVE_MISSES
+    with _LOCK:
+        ent = _LIVE.get(key)
+        if ent is not None:
+            _LIVE.move_to_end(key)
+            _LIVE_HITS += 1
+            return ent
+        _LIVE_MISSES += 1
+        return None
+
+
+def live_store(key: str, entry: Any) -> None:
+    with _LOCK:
+        _LIVE[key] = entry
+        _LIVE.move_to_end(key)
+        while len(_LIVE) > _LIVE_MAX:
+            _LIVE.popitem(last=False)
+
+
+def live_invalidate(key: Optional[str] = None) -> None:
+    """Drop one live partial (or all of them) — used when a shard's
+    committed prefix stops being a prefix extension (resume truncated a
+    tail, a file was replaced) and on explicit invalidation."""
+    global _LIVE_INVALIDATIONS
+    with _LOCK:
+        if key is None:
+            _LIVE_INVALIDATIONS += len(_LIVE)
+            _LIVE.clear()
+        elif _LIVE.pop(key, None) is not None:
+            _LIVE_INVALIDATIONS += 1
 
 
 def lookup(key: str, tenant: Optional[str] = None) -> Tuple[bool, Any]:
@@ -302,6 +356,12 @@ def _source_token(source, cache_flag: Optional[bool]):
     from .query import _ScanSource, _StreamSource, _TraceSource
     if isinstance(source, _StreamSource):
         h = source.handle
+        if getattr(h, "is_live", False):
+            # live handles execute over a pinned committed-prefix snapshot
+            # — a stat-keyed entry would go stale the moment another
+            # handle pins a newer snapshot of the same (unchanged) file.
+            # They use the live incremental store instead.
+            return None
         if cache_flag is None and not h.cache:
             return None
         return ("stream", _paths_token(h.paths), h.format, h.chunk_rows,
@@ -336,6 +396,35 @@ def plan_key(source, steps, spec, args: tuple, kwargs: dict,
               f"{getattr(fn, '__module__', '')}."
               f"{getattr(fn, '__qualname__', '')}" if fn is not None else "")
         token = (src, _steps_token(steps), op, _norm(args), _norm(kwargs))
+    except (_Undigestable, OSError):
+        return None
+    return hashlib.sha256(repr(token).encode()).hexdigest()
+
+
+def live_plan_key(handle, steps, spec, args: tuple, kwargs: dict
+                  ) -> Optional[str]:
+    """Digest identifying one live plan *across growth*: the handle's
+    paths and read configuration plus the plan/op/arguments — but
+    deliberately **no** stat/content token, because the whole point is
+    that the same key survives the file growing.  Validity (the new
+    prefix really extends the one already folded) is checked against the
+    fingerprints stored inside the live entry, never the key.  None when
+    any component has no exact digest."""
+    import os
+    if not _ENABLED:
+        return None
+    try:
+        rk = {k: v for k, v in handle.reader_kwargs.items()
+              if k not in ("live", "upto_rows", "report")}
+        fn = spec.fn
+        op = (spec.name,
+              f"{getattr(fn, '__module__', '')}."
+              f"{getattr(fn, '__qualname__', '')}" if fn is not None else "")
+        token = ("live",
+                 tuple(os.path.abspath(p) for p in handle.paths),
+                 handle.format, handle.chunk_rows, handle.processes,
+                 _norm(rk), _steps_token(handle._steps),
+                 _steps_token(steps), op, _norm(args), _norm(kwargs))
     except (_Undigestable, OSError):
         return None
     return hashlib.sha256(repr(token).encode()).hexdigest()

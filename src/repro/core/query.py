@@ -560,7 +560,8 @@ class TraceQuery:
             # escape hatches spelled out.
             from .streaming import execute_streaming
             result = execute_streaming(self._source.handle, self._steps,
-                                       spec, args, kwargs)
+                                       spec, args, kwargs,
+                                       cache_flag=cache_flag)
         else:
             trace = self.collect()
             if spec.needs_structure:

@@ -34,6 +34,8 @@ core.  See ``docs/streaming.md`` for the execution model and guarantees.
 
 from __future__ import annotations
 
+import copy
+import threading
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
@@ -44,7 +46,8 @@ from .constants import (DERIVED_COLUMNS, ENTER, ET, EXC, INC, LEAVE, MATCH,
                         NAME, PARENT, PROC, THREAD, TS)
 from .frame import Categorical, EventFrame, concat
 
-__all__ = ["StreamingTrace", "StreamingUnsupported", "StreamAgg",
+__all__ = ["StreamingTrace", "LiveTrace", "Watermark", "LiveResult",
+           "StreamingUnsupported", "StreamAgg",
            "CallBlock", "Chunk", "StreamStats", "StreamContext",
            "execute_streaming", "iter_chunks_fallback", "grow_to",
            "fold_frames", "mask_frames", "stats_from_frames"]
@@ -641,7 +644,8 @@ def fold_frames(frames: Iterator[EventFrame], agg: StreamAgg,
 
 def execute_streaming(handle: "StreamingTrace", steps: Sequence,
                       spec: registry.OpSpec, args: tuple,
-                      kwargs: dict) -> Any:
+                      kwargs: dict, cache_flag: Optional[bool] = None
+                      ) -> Any:
     """Run one registered op out of core over ``handle`` under ``steps``.
 
     When the handle asks for parallel execution (``executor="parallel"`` /
@@ -650,6 +654,13 @@ def execute_streaming(handle: "StreamingTrace", steps: Sequence,
     :func:`repro.core.executor.execute_parallel`; degradations back to the
     serial path always warn with the concrete reason (non-mergeable op,
     spawn-unsafe ``__main__``, nothing to fan out, unsplittable input).
+
+    Live handles (:class:`LiveTrace`) with caching enabled take the
+    **incremental** path: the running aggregation state is kept in the
+    plan cache's live store, a re-query after the trace grew folds only
+    the newly committed rows in, and the result is finalized from a copy
+    — byte-identical to a full recompute over the same committed prefix,
+    because both feed the identical global row sequence.
     """
     if spec.streaming is None:
         raise StreamingUnsupported(
@@ -659,6 +670,13 @@ def execute_streaming(handle: "StreamingTrace", steps: Sequence,
             f"with streaming=False.")
     _validate_steps(steps)
     agg: StreamAgg = spec.streaming(*args, **kwargs)
+    if (getattr(handle, "is_live", False) and handle.cache
+            and cache_flag is not False and not agg.needs_stats
+            and not handle.wants_parallel()):
+        res = _execute_live_incremental(handle, steps, spec, args, kwargs,
+                                        agg)
+        if res is not _NO_INCREMENTAL:
+            return res
     if handle.wants_parallel():
         from . import executor
         try:
@@ -686,6 +704,172 @@ def execute_streaming(handle: "StreamingTrace", steps: Sequence,
                   else (np.empty(0, np.int64), np.empty(0, np.int64)))
     ctx = StreamContext(names, stats, open_calls, proc_max)
     return agg.result(ctx)
+
+
+# ---------------------------------------------------------------------------
+# live incremental execution (valid-up-to-row plan-cache semantics)
+# ---------------------------------------------------------------------------
+
+_NO_INCREMENTAL = object()  # sentinel: fall through to the full pass
+
+
+class _LiveEntry:
+    """Running aggregation state of one live plan: the persistent
+    aggregator / name interner / call stitcher, how many rows of each
+    path have been folded in, and a per-path fingerprint of the folded
+    prefix (group count, last group's offset and CRC) that proves a later
+    snapshot really *extends* it.  Guarded by its own lock — the service
+    can poll the same plan from several lane threads."""
+
+    __slots__ = ("agg", "names", "stitcher", "proc_max", "done", "marks",
+                 "lock")
+
+    def __init__(self, agg: StreamAgg):
+        self.agg = agg
+        self.names = GlobalNames()
+        self.stitcher = CallStitcher() if agg.needs_calls else None
+        self.proc_max = -1
+        self.done: Dict[str, int] = {}    # path -> rows already folded
+        self.marks: Dict[str, tuple] = {}  # path -> prefix fingerprint
+        self.lock = threading.Lock()
+
+
+def _prefix_mark(snap: dict, rows: int) -> tuple:
+    """Fingerprint of the first ``rows`` rows of a committed-prefix
+    snapshot: (groups, last group offset, last group CRC).  ``rows`` is
+    always a group boundary (commits land whole groups)."""
+    chunks = [c for c in snap["chunks"] if c["hi"] <= rows]
+    if not chunks:
+        return (0, 0, 0)
+    last = chunks[-1]
+    return (len(chunks), int(last["offset"]), int(last["crc"]))
+
+
+def _extends(entry: _LiveEntry, handle: "LiveTrace") -> bool:
+    """Does every path's current snapshot extend the prefix the entry has
+    already folded?  False means the shard was rewritten/truncated under
+    us — the partial is garbage and must be dropped."""
+    for p, done in entry.done.items():
+        if done == 0:
+            continue
+        snap = handle._snapshots.get(p)
+        if snap is None or snap["rows"] < done:
+            return False
+        if entry.marks.get(p) != _prefix_mark(snap, done):
+            return False
+    return True
+
+
+def _execute_live_incremental(handle: "LiveTrace", steps: Sequence,
+                              spec: registry.OpSpec, args: tuple,
+                              kwargs: dict, agg: StreamAgg) -> Any:
+    """Incremental fold over a live handle's pinned snapshots.
+
+    Correctness: the rows fed into the persistent aggregator across all
+    calls form the identical global sequence a single full pass would
+    feed (per path, rows [0, pinned) in order; paths in handle order), so
+    first-seen name codes, stitcher carry state and every exactly
+    -combinable partial agree bit-for-bit with a cold recompute over the
+    same committed prefix.  The result is finalized on a deep copy so
+    ``result()`` can never corrupt the stored partial.
+    """
+    from . import plancache
+    from ..readers.pack import iter_chunks_pack
+    key = plancache.live_plan_key(handle, steps, spec, args, kwargs)
+    if key is None:
+        return _NO_INCREMENTAL
+    entry = plancache.live_lookup(key)
+    if entry is not None and type(entry.agg) is not type(agg):
+        entry = None  # key collision across agg classes: never reuse
+    if entry is not None and not _extends(entry, handle):
+        plancache.live_invalidate(key)
+        entry = None
+    fresh = entry is None
+    if fresh:
+        entry = _LiveEntry(agg)
+        entry.agg.begin(None)
+    hints = _steps_hints(steps)
+    kw = {k: v for k, v in handle.reader_kwargs.items()
+          if k not in ("live", "upto_rows", "report")}
+    with entry.lock:
+        try:
+            for p in handle.paths:
+                snap = handle._snapshots.get(p)
+                pinned = snap["rows"] if snap else 0
+                done = entry.done.get(p, 0)
+                if pinned <= done:
+                    continue
+                frames = iter_chunks_pack(p, handle.chunk_rows, hints,
+                                          row_range=(done, pinned),
+                                          live=True, upto_rows=pinned, **kw)
+                pm = fold_frames(mask_frames(frames, steps, handle.label),
+                                 entry.agg, entry.names, entry.stitcher)
+                entry.proc_max = max(entry.proc_max, pm)
+                entry.done[p] = pinned
+                entry.marks[p] = _prefix_mark(snap, pinned)
+        except Exception:
+            # a partially-updated entry is unusable; drop it.  A fresh
+            # entry's failure is a genuine execution error (the full pass
+            # would hit it too) — propagate.  A reused entry may fail on
+            # state the full pass would not see (e.g. cross-path time
+            # -order interleaving that only violates sortedness when fed
+            # incrementally) — fall back to the full recompute.
+            plancache.live_invalidate(key)
+            if fresh:
+                raise
+            return _NO_INCREMENTAL
+        plancache.live_store(key, entry)
+        final_agg = copy.deepcopy(entry.agg)
+        final_names = copy.deepcopy(entry.names)
+        open_calls = (entry.stitcher.open_calls() if entry.stitcher
+                      else (np.empty(0, np.int64), np.empty(0, np.int64)))
+        proc_max = entry.proc_max
+    ctx = StreamContext(final_names, None, open_calls, proc_max)
+    return final_agg.result(ctx)
+
+
+class Watermark:
+    """Valid-up-to marker of a live read: the result covers exactly
+    ``rows`` committed rows (per-path breakdown in ``per_path``) with
+    events up to ``ts_max``.  ``finalized`` means every shard has sealed
+    its footer — nothing more will ever arrive."""
+
+    __slots__ = ("rows", "ts_max", "per_path", "finalized")
+
+    def __init__(self, per_path: Dict[str, dict]):
+        self.per_path = {p: dict(w) for p, w in per_path.items()}
+        self.rows = sum(w["rows"] for w in self.per_path.values())
+        ts = [w["ts_max"] for w in self.per_path.values()
+              if w["ts_max"] is not None]
+        self.ts_max = max(ts) if ts else None
+        self.finalized = (all(w["finalized"]
+                              for w in self.per_path.values())
+                          if self.per_path else False)
+
+    def as_dict(self) -> dict:
+        return {"rows": self.rows, "ts_max": self.ts_max,
+                "finalized": self.finalized,
+                "per_path": {p: dict(w) for p, w in self.per_path.items()}}
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Watermark(rows={self.rows}, ts_max={self.ts_max}, "
+                f"finalized={self.finalized})")
+
+
+class LiveResult:
+    """A live query's value plus the watermark it is valid up to."""
+
+    __slots__ = ("value", "watermark")
+
+    def __init__(self, value: Any, watermark: Watermark):
+        self.value = value
+        self.watermark = watermark
+
+    def __iter__(self):  # tuple-style unpacking: value, watermark
+        return iter((self.value, self.watermark))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"LiveResult({self.value!r}, {self.watermark!r})"
 
 
 # ---------------------------------------------------------------------------
@@ -892,3 +1076,120 @@ class StreamingTrace:
 
     def __getattr__(self, name: str):
         return registry.terminal_op(name, self.run, "StreamingTrace")
+
+
+class LiveTrace(StreamingTrace):
+    """A still-growing trace opened live: plans execute over the
+    **committed prefix** pinned at the last :meth:`refresh`, and results
+    carry a :class:`Watermark` saying exactly how far they are valid.
+
+    The handle snapshots each shard's committed prefix (group index +
+    name table) when created and on every ``refresh()``; every read —
+    serial, parallel (row-span work units), stats — is pinned to that
+    snapshot, so a writer committing mid-query cannot leak rows into the
+    result and eager == streaming == parallel digests hold on the prefix.
+    With caching on (default), repeated terminal ops take the incremental
+    path: only rows committed since the previous call are folded into the
+    cached running aggregate (see :func:`execute_streaming`).
+
+    A shard that does not exist yet, or has no committed groups, reads as
+    empty — a live pipeline where data hasn't arrived is not an error.
+    """
+
+    is_live = True
+
+    def __init__(self, paths, format: str = "auto",
+                 chunk_rows: int = DEFAULT_CHUNK_ROWS,
+                 label: Optional[str] = None,
+                 processes: Optional[int] = None, executor: str = "auto",
+                 cache: bool = True, **reader_kwargs):
+        if format not in ("auto", "pack"):
+            raise ValueError(
+                f"live=True requires pack shards (the append/commit "
+                f"protocol is a pack v2 feature), got format={format!r}")
+        # workers inherit live semantics through reader_kwargs: a RowSpan
+        # unit resolves the committed prefix, never a (missing) footer
+        reader_kwargs = dict(reader_kwargs)
+        reader_kwargs["live"] = True
+        super().__init__(paths, format="pack", chunk_rows=chunk_rows,
+                         label=label, processes=processes, executor=executor,
+                         cache=cache, **reader_kwargs)
+        self._snapshots: Dict[str, dict] = {}
+        self.refresh()
+
+    # -- snapshot control ----------------------------------------------------
+    def refresh(self) -> Watermark:
+        """Re-snapshot every shard's committed prefix and return the new
+        :attr:`watermark`.  Cheap on unchanged shards (incremental cursor
+        in the pack layer); invalidates this handle's cached stats and
+        work-unit plans, which were pinned to the old snapshot."""
+        from ..readers.pack import committed_prefix
+        self._snapshots = {p: committed_prefix(p) for p in self.paths}
+        self._stats0 = None
+        self._units_cache.clear()
+        return self.watermark
+
+    @property
+    def watermark(self) -> Watermark:
+        """The pinned snapshot's validity marker (per-path breakdown
+        included) — what every result of this handle is valid up to."""
+        return Watermark({p: s["watermark"]
+                          for p, s in self._snapshots.items()})
+
+    # -- pinned plumbing -----------------------------------------------------
+    def _iter_frames(self, hints: Optional[registry.PlanHints] = None
+                     ) -> Iterator[EventFrame]:
+        from ..readers.pack import iter_chunks_pack
+        from .cancellation import check_cancelled
+        kw = {k: v for k, v in self.reader_kwargs.items()
+              if k not in ("live", "upto_rows")}
+        for p in self.paths:
+            snap = self._snapshots.get(p)
+            pinned = snap["rows"] if snap else 0
+            if pinned == 0:
+                continue
+            for frame in iter_chunks_pack(p, self.chunk_rows, hints,
+                                          live=True, upto_rows=pinned,
+                                          **kw):
+                check_cancelled()
+                yield frame
+
+    def plan_units_for(self, path: str, n_units: int) -> List[Any]:
+        """Authoritative work units for one shard, bounded by the pinned
+        snapshot: RowSpans aligned to committed group boundaries.  The
+        parallel planner uses these instead of the registry planner
+        (whose footer read would fail on an unfinalized shard — and whose
+        whole-path fallback would read past the watermark)."""
+        snap = self._snapshots.get(path)
+        chunks = snap["chunks"] if snap else []
+        if not chunks:
+            return []
+        if n_units <= 1 or len(chunks) == 1:
+            return [registry.RowSpan(path, 0, chunks[-1]["hi"])]
+        groups = registry.even_groups(chunks, n_units)
+        return [registry.RowSpan(path, g[0]["lo"], g[-1]["hi"])
+                for g in groups]
+
+    def with_steps(self, steps: Sequence) -> "LiveTrace":
+        """Clone carrying plan ``steps`` that **shares this handle's
+        pinned snapshots** (by reference): a set query over live members
+        sees one consistent watermark, and a refresh on the parent moves
+        every bound plan forward together."""
+        clone = copy.copy(self)
+        clone._steps = tuple(steps)
+        clone._stats0 = None
+        return clone
+
+    # -- watermarked results -------------------------------------------------
+    def run_with_watermark(self, op_name: str, *args: Any,
+                           **kwargs: Any) -> LiveResult:
+        """Run a terminal op and return ``LiveResult(value, watermark)``
+        — the watermark captured from the pinned snapshot the execution
+        actually covered."""
+        wm = self.watermark
+        return LiveResult(self.query().run(op_name, *args, **kwargs), wm)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        wm = self.watermark
+        return (f"LiveTrace(label={self.label!r}, {len(self.paths)} "
+                f"path(s), rows={wm.rows}, finalized={wm.finalized})")

@@ -81,7 +81,7 @@ class Trace:
 
     @classmethod
     def open(cls, path, format: str = "auto", streaming: bool = False,
-             chunk_rows: Optional[int] = None,
+             live: bool = False, chunk_rows: Optional[int] = None,
              processes: Optional[int] = None, executor: str = "auto",
              cache: bool = True, **kw):
         """Open a trace of any registered format.
@@ -103,10 +103,23 @@ class Trace:
         byte-identical merges — see docs/streaming.md), and ``cache=False``
         opts the handle out of the plan-result cache
         (:mod:`repro.core.plancache`).
+
+        ``live=True`` (implies streaming) returns a
+        :class:`~repro.core.streaming.LiveTrace` over still-growing
+        append-mode pack shards: plans execute over the committed prefix
+        pinned at the last ``refresh()``, results carry a ``watermark``,
+        and repeated queries fold only newly committed rows into a cached
+        running aggregate — see docs/robustness.md § Live ingestion.
         """
         import os
         from .. import readers  # noqa: F401 — populates the reader registry
         from .registry import resolve_reader
+        if live:
+            from .streaming import DEFAULT_CHUNK_ROWS, LiveTrace
+            return LiveTrace(path, format=format,
+                             chunk_rows=chunk_rows or DEFAULT_CHUNK_ROWS,
+                             processes=processes, executor=executor,
+                             cache=cache, **kw)
         if streaming:
             from .streaming import DEFAULT_CHUNK_ROWS, StreamingTrace
             return StreamingTrace(path, format=format,

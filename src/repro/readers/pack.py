@@ -94,7 +94,8 @@ from ..core.trace import Trace
 
 __all__ = ["write_pack", "read_pack", "PackWriter", "read_footer",
            "content_id", "io_stats", "reset_io_stats", "verify_pack",
-           "repair_pack", "scan_chunk_groups", "DEFAULT_PACK_CHUNK_ROWS"]
+           "repair_pack", "scan_chunk_groups", "committed_prefix",
+           "DEFAULT_PACK_CHUNK_ROWS"]
 
 MAGIC = b"#pipitpack 1\n"
 MAGIC2 = b"#pipitpack 2\n"
@@ -143,17 +144,21 @@ _IO_STATS = {"chunks_read": 0, "chunks_skipped": 0, "chunks_quarantined": 0,
              "verify_cache_hits": 0}
 
 #: aspects ("chunks", "sidecar") whose CRC sweep passed, keyed by
-#: (abspath, size, mtime_ns, inode) — a verified-clean file needs no
-#: re-sweep until it changes on disk, so steady-state verifying reopens
-#: (service handle revalidation, repeated queries) cost the same as a
-#: strict open.  Failures are never cached: damage is re-diagnosed on
-#: every open.
+#: (abspath, size, mtime_ns, inode, committed-group count) — a
+#: verified-clean file needs no re-sweep until it changes on disk, so
+#: steady-state verifying reopens (service handle revalidation, repeated
+#: queries) cost the same as a strict open.  The group count is part of
+#: the key because append workloads can grow a pack within one mtime
+#: granule on coarse-mtime filesystems; size alone is not enough once a
+#: finalize rewrites the tail in place.  Failures are never cached:
+#: damage is re-diagnosed on every open.
 _VERIFIED_CLEAN: Dict[tuple, set] = {}
 _VERIFIED_CLEAN_MAX = 256
 
 
-def _verify_key(path: str, st: os.stat_result) -> tuple:
-    return (os.path.abspath(path), st.st_size, st.st_mtime_ns, st.st_ino)
+def _verify_key(path: str, st: os.stat_result, n_groups: int = -1) -> tuple:
+    return (os.path.abspath(path), st.st_size, st.st_mtime_ns, st.st_ino,
+            int(n_groups))
 
 
 def _mark_verified(key: tuple, aspect: str) -> None:
@@ -291,7 +296,22 @@ class PackWriter:
     -consistency mode).
 
     Usable as a context manager: leaving the ``with`` block without having
-    called :meth:`finish` (including via an exception) aborts the write.
+    called :meth:`finish` (including via an exception) aborts the write —
+    except in append mode, where the committed prefix is durable data and
+    abort merely closes the file.
+
+    **Append mode** (:meth:`open_append`): the writer targets ``path``
+    in place and exposes :meth:`commit`.  Each commit flushes the
+    buffered rows as one self-describing chunk group — the CRC'd trailer
+    *is* the commit record — and (with ``fsync=True``) makes it durable,
+    so a reader at any instant sees exactly the committed prefix and a
+    SIGKILLed writer loses at most the uncommitted tail.
+    :func:`committed_prefix` / ``live=True`` reads consume that prefix
+    while the writer is still running; :meth:`finalize` seals the footer
+    (after which the file is a perfectly ordinary pack).  Reopening an
+    existing append shard resumes after its last committed group,
+    truncating any uncommitted tail (and, when resuming a *finalized*
+    pack, its footer/sidecar — a new finalize rewrites them).
 
     Timestamps are stored as integer nanoseconds; float timestamps
     quantize by truncation, exactly like every text writer in this repo
@@ -300,21 +320,15 @@ class PackWriter:
     """
 
     def __init__(self, path: str, chunk_rows: int = DEFAULT_PACK_CHUNK_ROWS,
-                 atomic: bool = True):
+                 atomic: bool = True, append: bool = False,
+                 fsync: bool = False):
         self.path = os.fspath(path)
         self.chunk_rows = int(chunk_rows)
         if self.chunk_rows <= 0:
             raise ValueError("chunk_rows must be positive")
-        self.atomic = bool(atomic)
-        d = os.path.dirname(os.path.abspath(self.path)) or "."
-        if self.atomic:
-            fd, self._tmp = tempfile.mkstemp(prefix=".pack_tmp_", dir=d)
-            self._out = os.fdopen(fd, "wb")
-        else:
-            self._tmp = self.path
-            self._out = open(self.path, "wb")
-        self._out.write(MAGIC2)
-        self._off = len(MAGIC2)
+        self.append_mode = bool(append)
+        self.atomic = bool(atomic) and not self.append_mode
+        self._fsync = bool(fsync)
         self._buf: List[Dict[str, np.ndarray]] = []
         self._buf_rows = 0
         self._flushed = 0  # rows written out in finalized groups
@@ -326,6 +340,86 @@ class PackWriter:
         self._has_messages = False
         self._hash = hashlib.sha256()
         self._finished = False
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        if self.atomic:
+            fd, self._tmp = tempfile.mkstemp(prefix=".pack_tmp_", dir=d)
+            self._out = os.fdopen(fd, "wb")
+        else:
+            self._tmp = self.path
+            if self.append_mode and os.path.exists(self.path) \
+                    and os.path.getsize(self.path) > 0:
+                self._resume()
+                return
+            self._out = open(self.path, "wb")
+        self._out.write(MAGIC2)
+        self._off = len(MAGIC2)
+
+    @classmethod
+    def open_append(cls, path: str,
+                    chunk_rows: int = DEFAULT_PACK_CHUNK_ROWS,
+                    fsync: bool = True) -> "PackWriter":
+        """Open ``path`` as an append-mode shard (creating it if absent,
+        resuming after its last committed group otherwise).  ``fsync=True``
+        (default) makes every :meth:`commit` durable before it returns —
+        the crash-consistency contract live readers rely on."""
+        return cls(path, chunk_rows=chunk_rows, atomic=False, append=True,
+                   fsync=fsync)
+
+    def _resume(self) -> None:
+        """Rebuild writer state from ``path``'s committed prefix and
+        truncate the uncommitted tail (or the footer/sidecar of a
+        finalized pack being reopened for append)."""
+        snap = committed_prefix(self.path)
+        self._chunks = [dict(c) for c in snap["chunks"]]
+        self._names = list(snap["names"])
+        self._name_code = {s: i for i, s in enumerate(self._names)}
+        self._names_written = len(self._names)
+        self._flushed = snap["rows"]
+        self._has_thread = bool(snap["has_thread"])
+        self._has_messages = bool(snap["has_messages"])
+        if self._chunks:
+            last = self._chunks[-1]
+            self._off = (last["offset"] + last["nbytes"] + last["tlen"]
+                         + 8 + len(CHUNK_MAGIC))
+        else:
+            self._off = len(MAGIC2)
+        self._out = open(self.path, "r+b")
+        # re-feed the content hash with the committed column bytes so a
+        # later finalize produces the same content_id a fresh writer would
+        for ch in self._chunks:
+            self._out.seek(ch["offset"])
+            self._hash.update(self._out.read(ch["nbytes"]))
+        self._out.seek(self._off)
+        self._out.truncate(self._off)
+        _FOOTER_CACHE.pop(self.path, None)
+        _LIVE_SCAN.pop(os.path.abspath(self.path), None)
+
+    @property
+    def watermark(self) -> dict:
+        """The committed watermark of this writer: rows/groups durable on
+        disk (buffered-but-uncommitted rows are *not* included)."""
+        return {"rows": self._flushed, "groups": len(self._chunks),
+                "ts_min": (min(c["ts_min"] for c in self._chunks)
+                           if self._chunks else None),
+                "ts_max": (max(c["ts_max"] for c in self._chunks)
+                           if self._chunks else None),
+                "bytes": self._off, "finalized": self._finished}
+
+    def commit(self) -> dict:
+        """Flush all buffered rows as one committed chunk group and make
+        it durable (``fsync=True`` writers).  The group trailer + CRC +
+        magic are the commit record: once they hit the disk, the group is
+        part of the committed prefix every concurrent/live reader sees.
+        Returns the new :attr:`watermark`.  A commit with no buffered
+        rows just syncs and returns the current watermark."""
+        if self._finished:
+            raise RuntimeError("PackWriter already finished")
+        if self._buf_rows:
+            self._flush_group(self._buf_rows)
+        self._out.flush()
+        if self._fsync:
+            os.fsync(self._out.fileno())
+        return self.watermark
 
     # -- context manager ---------------------------------------------------
     def __enter__(self) -> "PackWriter":
@@ -459,12 +553,15 @@ class PackWriter:
     # -- finish ------------------------------------------------------------
     def abort(self) -> None:
         """Discard the partial write (atomic staging file, or the in-place
-        partial pack) without finishing."""
+        partial pack) without finishing.  Append-mode shards are *not*
+        unlinked: the committed prefix is durable data — abort just stops
+        writing, exactly like a crash after the last commit."""
         self._out.close()
-        try:
-            os.unlink(self._tmp)
-        except OSError:
-            pass
+        if not self.append_mode:
+            try:
+                os.unlink(self._tmp)
+            except OSError:
+                pass
         self._finished = True
 
     def finish(self, sidecar: Any = "auto",
@@ -527,12 +624,24 @@ class PackWriter:
         self._out.write(blob)
         self._out.write(struct.pack("<Q", len(blob)))
         self._out.write(TAIL_MAGIC)
+        self._out.flush()
+        if self._fsync:
+            os.fsync(self._out.fileno())
         self._out.close()
         if self.atomic:
             os.replace(self._tmp, self.path)
         self._finished = True
         _FOOTER_CACHE.pop(self.path, None)
+        _LIVE_SCAN.pop(os.path.abspath(self.path), None)
         return self.path
+
+    def finalize(self, sidecar: Any = "auto") -> str:
+        """Seal the append shard: flush the remaining buffered rows,
+        derive + write the structure sidecar, and write the footer.  The
+        file becomes an ordinary finalized pack (strict opens, sidecar
+        fast path, content id).  Alias for :meth:`finish` — named for the
+        append/finalize protocol."""
+        return self.finish(sidecar=sidecar)
 
     def _store_flags(self) -> Dict[str, bool]:
         """Which optional columns any group stored (footer-level view;
@@ -726,6 +835,164 @@ def _salvage_footer(path: str) -> dict:
             "sidecar": None, "sidecar_crc": None, "content_id": None}
 
 
+# ---------------------------------------------------------------------------
+# committed prefix — the read side of the append/commit protocol
+# ---------------------------------------------------------------------------
+
+#: incremental forward-scan cache for still-growing shards, keyed by
+#: abspath: {"ino", "pos", "groups", "names", "tail"} where ``pos`` is the
+#: byte just past the last accepted group and ``tail`` the 16 bytes ending
+#: at ``pos`` (trailer length + CRC + group magic).  A poll over a live
+#: shard then re-reads only the newly committed bytes; any rewrite under
+#: the cursor (inode change, shrink, tail mismatch — e.g. a resume
+#: truncated the file) forces a full rescan.
+_LIVE_SCAN: Dict[str, dict] = {}
+_LIVE_SCAN_MAX = 64
+_TAIL_CHECK = 8 + len(CHUNK_MAGIC)
+
+
+def _snapshot(chunks: List[dict], names: List[str], has_thread: bool,
+              has_messages: bool, nbytes: int, finalized: bool) -> dict:
+    rows = chunks[-1]["hi"] if chunks else 0
+    return {
+        "rows": rows, "chunks": chunks, "names": names,
+        "has_thread": bool(has_thread), "has_messages": bool(has_messages),
+        "procs": sorted({int(p) for c in chunks for p in c["procs"]}),
+        "finalized": bool(finalized),
+        "watermark": {
+            "rows": rows, "groups": len(chunks),
+            "ts_min": (min(c["ts_min"] for c in chunks) if chunks else None),
+            "ts_max": (max(c["ts_max"] for c in chunks) if chunks else None),
+            "bytes": int(nbytes), "finalized": bool(finalized)},
+    }
+
+
+def committed_prefix(path: str) -> dict:
+    """Snapshot the committed prefix of a pack: the maximal contiguous run
+    of CRC-clean chunk groups starting at the header, with no footer
+    required.  This is the read side of the append/commit protocol — at
+    any instant (mid-write, post-SIGKILL) the snapshot equals what a clean
+    writer stopped at the same commit would have produced, byte for byte.
+
+    Returns ``{rows, chunks, names, has_thread, has_messages, procs,
+    finalized, watermark}``: ``chunks`` are footer-style records (row
+    coordinates are contiguous from 0 by construction) and ``watermark``
+    is ``{rows, groups, ts_min, ts_max, bytes, finalized}``.  A missing,
+    empty, or header-only file yields an empty snapshot — a live shard
+    that has not committed yet is data that hasn't arrived, not an error.
+    Finalized packs take the footer fast path.  Repeated calls on a
+    growing shard scan only the new bytes (incremental cursor cache).
+    """
+    path = os.fspath(path)
+    apath = os.path.abspath(path)
+    try:
+        st = os.stat(path)
+    except OSError:
+        return _snapshot([], [], False, False, 0, finalized=False)
+    size = st.st_size
+    if size <= len(MAGIC2):
+        with open(path, "rb") as f:
+            head = f.read(len(MAGIC2))
+        if head and not MAGIC2.startswith(head):
+            raise TraceReadError(path, "not a pipitpack v2 file (append/"
+                                       "live reads need the v2 header)")
+        return _snapshot([], [], False, False, size, finalized=False)
+    try:
+        footer = read_footer(path)
+    except (OSError, ValueError):
+        footer = None
+    if footer is not None:
+        if footer["version"] != VERSION:
+            raise TraceReadError(
+                path, "v1 pack has no chunk groups (append/live requires "
+                      "format version 2)")
+        chunks = [dict(c) for c in footer["chunks"]]
+        return _snapshot(chunks, list(footer["names"]),
+                         footer["has_thread"], footer["has_messages"],
+                         size, finalized=True)
+    groups: List[dict] = []
+    names: List[str] = []
+    pos = len(MAGIC2)
+    with open(path, "rb") as f, \
+            mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ) as mm:
+        if bytes(mm[:len(MAGIC2)]) != MAGIC2:
+            raise TraceReadError(path, "not a pipitpack v2 file (append/"
+                                       "live reads need the v2 header)")
+        ent = _LIVE_SCAN.get(apath)
+        if (ent is not None and ent["ino"] == st.st_ino
+                and size >= ent["pos"]
+                and bytes(mm[ent["pos"] - _TAIL_CHECK:ent["pos"]])
+                == ent["tail"]):
+            groups = list(ent["groups"])
+            names = list(ent["names"])
+            pos = ent["pos"]
+        search = pos
+        while True:
+            mpos = mm.find(CHUNK_MAGIC, search)
+            if mpos == -1:
+                break
+            rec = _parse_group_at(mm, mpos)
+            if rec is None:
+                # magic bytes inside column data — keep looking for the
+                # real end of the group that starts at ``pos``
+                search = mpos + 1
+                continue
+            if (rec["offset"] == pos and rec["seq"] == len(groups)
+                    and rec["lo"] == (groups[-1]["hi"] if groups else 0)
+                    and rec["name_base"] == len(names)):
+                groups.append(rec)
+                names.extend(rec["new_names"])
+                pos = mpos + len(CHUNK_MAGIC)
+                search = pos
+                continue
+            if rec["offset"] >= pos:
+                # a valid group *not* starting at the cursor: the group at
+                # ``pos`` is torn or uncommitted — the committed prefix
+                # (strict by definition) ends here
+                break
+            search = mpos + 1
+        if groups:
+            if apath not in _LIVE_SCAN and len(_LIVE_SCAN) >= _LIVE_SCAN_MAX:
+                _LIVE_SCAN.clear()
+            _LIVE_SCAN[apath] = {
+                "ino": st.st_ino, "pos": pos, "groups": list(groups),
+                "names": list(names),
+                "tail": bytes(mm[pos - _TAIL_CHECK:pos])}
+    stored = {k for g in groups for k, _d, _n in g["cols"]}
+    chunks = [{k: g[k] for k in ("lo", "hi", "ts_min", "ts_max", "procs",
+                                 "offset", "nbytes", "tlen", "crc", "cols")}
+              for g in groups]
+    return _snapshot(chunks, names, "thread" in stored, "size" in stored,
+                     pos, finalized=False)
+
+
+def _resolve_live(path: str, upto_rows: Optional[int]
+                  ) -> Tuple[dict, List[dict]]:
+    """Footer-equivalent view of a (possibly still-growing) pack's
+    committed prefix, truncated to ``upto_rows`` when given.  Live plans
+    pin their snapshot watermark at planning time, and commits only ever
+    land whole groups, so ``upto_rows`` always falls on a group boundary
+    — execution never reads past what the planner saw even if the file
+    grows mid-read."""
+    snap = committed_prefix(path)
+    chunks = snap["chunks"]
+    if upto_rows is not None:
+        chunks = [c for c in chunks if c["hi"] <= int(upto_rows)]
+    stored = {k for ch in chunks for k, _d, _n in ch["cols"]}
+    footer = {"version": VERSION, "live": True,
+              "rows": chunks[-1]["hi"] if chunks else 0,
+              "chunk_rows": max((c["hi"] - c["lo"] for c in chunks),
+                                default=DEFAULT_PACK_CHUNK_ROWS),
+              "columns": [{"key": k, "dtype": d} for k, _c, d in _EVENT_COLS
+                          if k in stored],
+              "names": snap["names"],
+              "has_thread": snap["has_thread"],
+              "has_messages": snap["has_messages"],
+              "chunks": chunks, "procs": snap["procs"],
+              "sidecar": None, "sidecar_crc": None, "content_id": None}
+    return footer, chunks
+
+
 def _resolve_chunks(path: str, on_error: str) -> Tuple[dict, List[dict], bool]:
     """Open policy front door: returns ``(footer, chunks, intact)`` where
     ``chunks`` are the surviving chunk records rebased to the surviving
@@ -751,7 +1018,7 @@ def _resolve_chunks(path: str, on_error: str) -> Tuple[dict, List[dict], bool]:
     # v2 + verifying mode: CRC every chunk, quarantine failures.  A file
     # that already passed a full sweep is not re-swept until it changes.
     st = os.stat(path)
-    key = _verify_key(path, st)
+    key = _verify_key(path, st, len(footer["chunks"]))
     if "chunks" in _VERIFIED_CLEAN.get(key, ()):
         _IO_STATS["verify_cache_hits"] += 1
         return footer, list(footer["chunks"]), True
@@ -982,7 +1249,8 @@ def _open_sidecar(path: str, footer: dict, on_error: str = "strict"
                       stacklevel=3)
         return None
     if on_error != "strict" and footer.get("sidecar_crc") is not None:
-        key = _verify_key(path, os.stat(path))
+        key = _verify_key(path, os.stat(path),
+                          len(footer.get("chunks", ())))
         if "sidecar" not in _VERIFIED_CLEAN.get(key, ()):
             lo = meta[0]["offset"]
             hi = (meta[-1]["offset"]
@@ -1067,7 +1335,8 @@ def _localize(side: Dict[str, np.ndarray], ev: EventFrame, lo: int,
                  shard_procs=_shard_procs_pack, priority=30)
 def read_pack(path: str, label: Optional[str] = None,
               sidecar: bool = True, on_error: str = "strict",
-              report=None) -> Trace:
+              report=None, live: bool = False,
+              upto_rows: Optional[int] = None) -> Trace:
     """Open a pack whole-file: column data is memmap-backed (v1) or
     assembled with one memcpy per group slice (v2) — zero parse either way.
 
@@ -1082,12 +1351,22 @@ def read_pack(path: str, label: Optional[str] = None,
     file/offset context; ``"skip_chunk"`` CRC-verifies and quarantines
     damaged chunk groups; ``"salvage"`` additionally rebuilds a lost
     footer by trailer scan.  See the module docstring.
+
+    ``live=True`` reads the **committed prefix** of a (possibly still
+    -growing) append-mode shard: no footer needed, no warnings for the
+    expected-missing tail, empty trace when nothing has committed yet.
+    ``upto_rows`` pins the read to an earlier watermark (always a group
+    boundary) so concurrent growth cannot leak into the result.
     """
     from ..core.errors import IngestReport
     path = os.fspath(path)
     report = report if report is not None else IngestReport()
     quar0 = _IO_STATS["chunks_quarantined"]
-    footer, chunks, intact = _resolve_chunks(path, on_error)
+    if live or upto_rows is not None:
+        footer, chunks = _resolve_live(path, upto_rows)
+        intact = False  # live prefixes carry no sidecar; derive lazily
+    else:
+        footer, chunks, intact = _resolve_chunks(path, on_error)
     names = _name_table(footer)
     rows = sum(c["hi"] - c["lo"] for c in chunks)
     report.begin(path)
@@ -1166,7 +1445,9 @@ def iter_chunks_pack(path: str, chunk_rows: int,
                      row_range: Optional[tuple] = None,
                      sidecar: bool = True,
                      on_error: str = "strict",
-                     report=None) -> Iterator[EventFrame]:
+                     report=None, live: bool = False,
+                     upto_rows: Optional[int] = None
+                     ) -> Iterator[EventFrame]:
     """Stream a pack in EventFrame chunks of at most ``chunk_rows`` rows.
 
     Index pushdown runs first: footer chunks whose time range / process set
@@ -1180,10 +1461,16 @@ def iter_chunks_pack(path: str, chunk_rows: int,
     of re-deriving per chunk.  ``on_error`` follows :func:`read_pack`:
     verifying modes quarantine CRC-failing chunk groups before pushdown,
     and ``"salvage"`` streams a footer-less pack from its trailer scan.
+    ``live`` / ``upto_rows`` follow :func:`read_pack`: stream the
+    committed prefix of a still-growing shard, pinned to a watermark.
     """
     path = os.fspath(path)
     quar0 = _IO_STATS["chunks_quarantined"]
-    footer, fchunks, intact = _resolve_chunks(path, on_error)
+    if live or upto_rows is not None:
+        footer, fchunks = _resolve_live(path, upto_rows)
+        intact = False
+    else:
+        footer, fchunks, intact = _resolve_chunks(path, on_error)
     names = _name_table(footer)
     total = sum(c["hi"] - c["lo"] for c in fchunks)
     if report is not None and row_range is None:
@@ -1195,9 +1482,11 @@ def iter_chunks_pack(path: str, chunk_rows: int,
         report.add_rows(path, total)
     if footer["version"] == 1:
         cols = _open_columns_v1(path, footer)
-    else:
+    elif fchunks:
         cols = _GroupColumnSource(path, fchunks, footer["has_thread"],
                                   footer["has_messages"])
+    else:
+        cols = {}  # nothing committed yet — no bytes to map
     side = (_open_sidecar(path, footer, on_error)
             if sidecar and intact else None)
     r_lo, r_hi = (0, total) if row_range is None else (

@@ -40,24 +40,28 @@ from ..core.filters import Filter
 from . import protocol
 
 __all__ = ["RemoteError", "ServiceClient", "RemoteTrace", "RemoteTraceSet",
-           "RemoteQuery"]
+           "RemoteLiveTrace", "RemoteQuery"]
 
 
 class RemoteError(RuntimeError):
-    """A non-2xx service response; carries the HTTP status and the
-    service's machine-readable error code."""
+    """A non-2xx service response; carries the HTTP status, the service's
+    machine-readable error code, and any extra error fields (``extra``)
+    the service attached — e.g. ``retry_after_ms`` on a live-session
+    stall."""
 
-    def __init__(self, status: int, code: str, message: str):
+    def __init__(self, status: int, code: str, message: str,
+                 extra: Optional[dict] = None):
         super().__init__(f"[{status} {code}] {message}")
         self.status = status
         self.code = code
+        self.extra = extra or {}
 
 
 #: request targets whose handlers are idempotent: re-sending after a
 #: connection fault cannot change service state beyond what one send
 #: does.  GETs always qualify; the plan-execution POSTs qualify because
 #: a replayed plan coalesces/caches onto the same digest-keyed result.
-_IDEMPOTENT_POSTS = ("/query", "/setquery", "/diagnose")
+_IDEMPOTENT_POSTS = ("/query", "/setquery", "/diagnose", "/live")
 
 
 class ServiceClient:
@@ -138,8 +142,11 @@ class ServiceClient:
                               f"non-JSON response ({len(data)} bytes)")
         if resp.status >= 400 or not out.get("ok", False):
             err = out.get("error") or {}
+            extra = {k: v for k, v in err.items()
+                     if k not in ("code", "message")}
             raise RemoteError(resp.status, err.get("code", "error"),
-                              err.get("message", "request failed"))
+                              err.get("message", "request failed"),
+                              extra=extra)
         return out
 
     def _close_locked(self) -> None:
@@ -188,6 +195,34 @@ class ServiceClient:
                 "processes": processes, "executor": executor}
         return RemoteTrace(self, spec)
 
+    def open_live(self, path, chunk_rows: Optional[int] = None,
+                  processes: Optional[int] = None,
+                  executor: str = "auto") -> "RemoteLiveTrace":
+        """A remote live handle over still-growing pack shard(s): polls go
+        to ``/live`` and come back watermarked (see
+        :meth:`RemoteLiveTrace.poll`)."""
+        paths = ([str(p) for p in path]
+                 if isinstance(path, (list, tuple)) else [str(path)])
+        spec = {"mode": "live", "paths": paths, "format": "auto",
+                "streaming": False, "chunk_rows": chunk_rows,
+                "processes": processes, "executor": executor}
+        return RemoteLiveTrace(self, spec)
+
+    def open_liveset(self, root: str, pattern: str = "rank_*.pack",
+                     lag_timeout: float = 2.0, dead_timeout: float = 10.0,
+                     chunk_rows: Optional[int] = None,
+                     processes: Optional[int] = None,
+                     executor: str = "auto") -> "RemoteLiveTrace":
+        """A remote rank-failure-tolerant live handle over an N-rank shard
+        directory: results carry a coverage report, and degraded coverage
+        comes back as a 206 partial response naming the missing ranks."""
+        spec = {"mode": "liveset", "paths": [str(root)],
+                "pattern": pattern, "lag_timeout": float(lag_timeout),
+                "dead_timeout": float(dead_timeout), "format": "auto",
+                "streaming": False, "chunk_rows": chunk_rows,
+                "processes": processes, "executor": executor}
+        return RemoteLiveTrace(self, spec)
+
     def open_set(self, paths: Sequence, format: str = "auto",
                  processes: Optional[int] = None,
                  labels: Optional[Sequence[str]] = None,
@@ -234,6 +269,38 @@ class ServiceClient:
         if digest_only:
             return out["digest"]
         return protocol.decode_value(out["result"])
+
+    def live_poll(self, open_spec: dict, op: str, args=(), kwargs=None,
+                  *, steps: Optional[List[dict]] = None,
+                  session: str = "default", min_advance_rows: int = 1,
+                  digest_only: bool = False) -> dict:
+        """One ``/live`` poll.  Returns the response dict with ``result``
+        decoded in place: ``{value, watermark, coverage?, partial,
+        missing_ranks?, advanced_rows, digest, session}``.  A stalled
+        watermark raises :class:`RemoteError` with ``code
+        "watermark_stalled"`` and ``extra["retry_after_ms"]``; a degraded
+        liveset answer arrives as a 206 with ``partial: True`` — a
+        *successful* response here, not an error."""
+        payload: Dict[str, Any] = {
+            "open": open_spec, "op": op,
+            "steps": list(steps or []),
+            "args": [protocol.encode_value(a) for a in args],
+            "kwargs": {str(k): protocol.encode_value(v)
+                       for k, v in (kwargs or {}).items()},
+            "session": session, "min_advance_rows": int(min_advance_rows),
+        }
+        if self.tenant is not None:
+            payload["tenant"] = self.tenant
+        if digest_only:
+            payload["digest_only"] = True
+        out = self._request("POST", "/live", payload)
+        self.last_meta = {k: out.get(k) for k in
+                          ("digest", "elapsed_ms", "tenant", "partial",
+                           "advanced_rows")}
+        res = dict(out)
+        res["value"] = (protocol.decode_value(out["result"])
+                        if "result" in out else None)
+        return res
 
 
 class RemoteQuery:
@@ -316,6 +383,30 @@ class RemoteTrace:
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"RemoteTrace({self._open['paths']!r})"
+
+
+class RemoteLiveTrace:
+    """Remote stand-in for a live (still-growing) trace or rank fleet.
+
+    ``poll("flat_profile")`` executes over the committed prefix and
+    returns the watermarked (and, for lisets, coverage-annotated)
+    response.  Build windowed polls with the same step builders as
+    :class:`RemoteQuery` via ``query()`` then ``poll_query``."""
+
+    def __init__(self, client: ServiceClient, open_spec: dict):
+        self._client = client
+        self._open = open_spec
+
+    def poll(self, op_name: str, *args: Any, session: str = "default",
+             min_advance_rows: int = 1, digest_only: bool = False,
+             steps: Optional[List[dict]] = None, **kwargs: Any) -> dict:
+        return self._client.live_poll(
+            self._open, op_name, args, kwargs, steps=steps,
+            session=session, min_advance_rows=min_advance_rows,
+            digest_only=digest_only)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"RemoteLiveTrace({self._open['paths']!r})"
 
 
 class RemoteTraceSet:

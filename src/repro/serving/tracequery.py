@@ -33,7 +33,10 @@ rather than just remote:
 
 The HTTP surface is deliberately tiny (``asyncio.start_server`` + manual
 HTTP/1.1, keep-alive): ``POST /query`` and ``POST /setquery`` execute
-plans, ``GET /stats`` exposes service/cache/scheduler counters, ``GET
+plans, ``POST /live`` polls a watermarked live session over still-growing
+shards (min-watermark-advance backpressure via 429 ``watermark_stalled``;
+degraded rank coverage via 206 partial responses naming the missing
+ranks), ``GET /stats`` exposes service/cache/scheduler counters, ``GET
 /ops`` lists the registered terminal ops, ``GET /health`` answers
 liveness, and ``POST /shutdown`` drains gracefully (in-flight work
 finishes; new queries get 503).  :mod:`repro.serving.client` wraps the
@@ -65,12 +68,16 @@ _JSON_HEADERS = "Content-Type: application/json\r\n"
 
 class ServiceError(Exception):
     """A request the service refuses; carries the HTTP status and a stable
-    machine-readable code clients can branch on."""
+    machine-readable code clients can branch on.  ``extra`` (optional
+    dict) is merged into the wire error body — e.g. ``retry_after_ms`` on
+    a live-session stall."""
 
-    def __init__(self, status: int, code: str, message: str):
+    def __init__(self, status: int, code: str, message: str,
+                 extra: Optional[dict] = None):
         super().__init__(message)
         self.status = status
         self.code = code
+        self.extra = extra or {}
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +91,7 @@ class _Handle:
 
     def __init__(self, key: str, kind: str, obj, ident: tuple):
         self.key = key
-        self.kind = kind            # "trace" | "stream" | "set"
+        self.kind = kind    # "trace" | "stream" | "set" | "live" | "liveset"
         self.obj = obj
         self.ident = ident          # _paths_token at open time
         self.lock = threading.Lock()
@@ -104,7 +111,8 @@ class _Handle:
         idempotent caches (chunk stats, work-unit plans), so concurrent
         plans over one pack handle are safe — that is what lets the
         interactive lane make progress while bulk scans hammer the same
-        pack.
+        pack.  Live handles serialize too: ``refresh()`` moves the pinned
+        snapshot and the incremental fold mutates a running aggregate.
         """
         return self.kind != "stream"
 
@@ -127,9 +135,12 @@ def _normalize_open(spec: Any) -> dict:
         raise ProtocolError(f'open spec "paths" must be a non-empty list '
                             f'of strings, got {paths!r}')
     mode = spec.get("mode", "trace")
-    if mode not in ("trace", "set"):
-        raise ProtocolError(f'open mode must be "trace" or "set", '
-                            f'got {mode!r}')
+    if mode not in ("trace", "set", "live", "liveset"):
+        raise ProtocolError(f'open mode must be "trace", "set", "live" or '
+                            f'"liveset", got {mode!r}')
+    if mode == "liveset" and len(paths) != 1:
+        raise ProtocolError('mode "liveset" takes exactly one path: the '
+                            'shard directory')
     labels = spec.get("labels")
     if labels is not None and (not isinstance(labels, (list, tuple))
                                or len(labels) != len(paths)):
@@ -146,6 +157,10 @@ def _normalize_open(spec: Any) -> dict:
         "executor": str(spec.get("executor", "auto")),
         "labels": [str(x) for x in labels] if labels is not None else None,
     }
+    if mode == "liveset":
+        out["pattern"] = str(spec.get("pattern", "rank_*.pack"))
+        out["lag_timeout"] = float(spec.get("lag_timeout", 2.0))
+        out["dead_timeout"] = float(spec.get("dead_timeout", 10.0))
     return out
 
 
@@ -181,6 +196,20 @@ class HandlePool:
     def _open(self, spec: dict):
         from ..core.diff import TraceSet
         from ..core.trace import Trace
+        if spec["mode"] == "live":
+            from ..core.streaming import DEFAULT_CHUNK_ROWS, LiveTrace
+            return "live", LiveTrace(
+                spec["paths"], format=spec["format"],
+                chunk_rows=spec["chunk_rows"] or DEFAULT_CHUNK_ROWS,
+                processes=spec["processes"], executor=spec["executor"])
+        if spec["mode"] == "liveset":
+            from ..core.liveset import LiveTraceSet
+            return "liveset", LiveTraceSet(
+                spec["paths"][0], pattern=spec["pattern"],
+                lag_timeout=spec["lag_timeout"],
+                dead_timeout=spec["dead_timeout"],
+                chunk_rows=spec["chunk_rows"],
+                processes=spec["processes"], executor=spec["executor"])
         if spec["mode"] == "set":
             return "set", TraceSet.open(
                 spec["paths"], format=spec["format"],
@@ -218,8 +247,14 @@ class HandlePool:
         try:
             ident = self._ident(spec["paths"])
         except OSError as e:
-            raise ServiceError(404, "no_such_trace",
-                               f"cannot stat trace source: {e}") from None
+            if spec.get("mode") in ("live", "liveset"):
+                # a live shard that hasn't appeared yet reads as empty —
+                # not an error; identity settles once data arrives
+                ident = ("live-pending",) + tuple(spec["paths"])
+            else:
+                raise ServiceError(404, "no_such_trace",
+                                   f"cannot stat trace source: {e}") \
+                    from None
         with self._lock:
             b = self._fails.get(key)
             if (b is not None and b["fails"] >= self.breaker_threshold
@@ -232,9 +267,16 @@ class HandlePool:
                     f"{b['until'] - time.time():.1f}s — "
                     + self._salvage_hint(spec))
             h = self._handles.get(key)
-            if h is not None and h.ident == ident:
+            if h is not None and (h.ident == ident
+                                  or h.kind in ("live", "liveset")):
+                # live handles are never reopened on identity drift — the
+                # backing shards *grow by design*; the live() path calls
+                # obj.refresh() to advance the pinned snapshot in place,
+                # which preserves the incremental aggregate state a
+                # reopen would discard
                 self._handles.move_to_end(key)
                 h.uses += 1
+                h.ident = ident
                 self._fails.pop(key, None)
                 return h
             stale = h is not None
@@ -337,9 +379,14 @@ class TraceService:
         self._flights: Dict[str, _Flight] = {}
         self._tenant_sems: Dict[str, asyncio.Semaphore] = {}
         self._tenant_waiting: Dict[str, int] = {}
+        #: live polling sessions: (tenant, handle key, session id) →
+        #: {rows, served_at, polls, stalls} — the watermark each session
+        #: last saw, for min-advance admission / backpressure
+        self._live_sessions: Dict[tuple, dict] = {}
         self.counters: Dict[str, int] = {
             "requests": 0, "executed": 0, "coalesced": 0, "cache_hits": 0,
-            "rejected": 0, "errors": 0, "interactive": 0, "bulk": 0}
+            "rejected": 0, "errors": 0, "interactive": 0, "bulk": 0,
+            "live_polls": 0, "live_stalled": 0, "live_partial": 0}
         self.tenant_counters: Dict[str, Dict[str, int]] = {}
 
     # -- bookkeeping -------------------------------------------------------
@@ -372,6 +419,9 @@ class TraceService:
             open_spec["mode"] = "set"
         elif open_spec["mode"] == "set":
             raise ProtocolError('mode "set" plans go to /setquery')
+        elif open_spec["mode"] in ("live", "liveset"):
+            raise ProtocolError(
+                f'mode {open_spec["mode"]!r} plans go to /live')
         op = payload.get("op")
         if not isinstance(op, str):
             raise ProtocolError('request needs an "op" name')
@@ -582,6 +632,172 @@ class TraceService:
             if self._active == 0:
                 self._idle.set()
 
+    # -- live sessions -----------------------------------------------------
+    def _decode_live(self, payload: dict):
+        if not isinstance(payload, dict):
+            raise ProtocolError("request body must be a JSON object")
+        open_spec = _normalize_open(payload.get("open"))
+        if open_spec["mode"] == "trace":
+            open_spec["mode"] = "live"   # bare path on /live means live
+        if open_spec["mode"] not in ("live", "liveset"):
+            raise ProtocolError('/live takes mode "live" or "liveset"; '
+                                'finalized sources go to /query')
+        op = payload.get("op")
+        if not isinstance(op, str):
+            raise ProtocolError('request needs an "op" name')
+        spec = registry.get_op(op)
+        if spec is None:
+            raise ProtocolError(f"unknown analysis op {op!r}; registered: "
+                                f"{registry.list_ops()}")
+        if spec.scope == "set":
+            raise ProtocolError(
+                f"{op!r} is a set-scoped op; live sessions execute "
+                f"single-scope ops over the (combined) committed prefix")
+        steps = protocol.decode_steps(payload.get("steps") or [])
+        args = tuple(protocol.decode_value(x)
+                     for x in (payload.get("args") or []))
+        kwargs_wire = payload.get("kwargs") or {}
+        if not isinstance(kwargs_wire, dict):
+            raise ProtocolError('"kwargs" must be an object')
+        kwargs = {str(k): protocol.decode_value(v)
+                  for k, v in kwargs_wire.items()}
+        min_advance = payload.get("min_advance_rows", 1)
+        if not isinstance(min_advance, int) or min_advance < 0:
+            raise ProtocolError('"min_advance_rows" must be a '
+                                'non-negative integer')
+        session = str(payload.get("session", "default"))
+        digest_only = bool(payload.get("digest_only", False))
+        return open_spec, op, steps, args, kwargs, min_advance, session, \
+            digest_only
+
+    def _poll_live(self, open_spec: dict, op: str, steps, args, kwargs,
+                   min_advance: int, skey: tuple,
+                   digest_only: bool) -> dict:
+        """Lane-thread body of one /live poll: refresh the pinned snapshot,
+        admit by watermark advance, execute over the committed prefix."""
+        handle = self.handles.get(open_spec)
+        with handle.lock:
+            if handle.kind == "liveset":
+                cov = handle.obj.refresh()
+                wm = handle.obj.watermark
+                if wm is None:
+                    raise ServiceError(
+                        503, "no_survivors",
+                        f"every rank under {open_spec['paths'][0]!r} is "
+                        f"dead or absent — refusing to serve an empty "
+                        f"result as healthy",
+                        extra={"coverage": cov.as_dict()})
+                lt = handle.obj.trace()
+            else:
+                cov = None
+                wm = handle.obj.refresh()
+                lt = handle.obj
+            sess = self._live_sessions.get(skey)
+            prev_rows = sess["rows"] if sess is not None else None
+            advanced = wm.rows - (prev_rows or 0)
+            if (sess is not None and min_advance > 0
+                    and wm.rows - sess["rows"] < min_advance
+                    and not wm.finalized):
+                # tenant polls faster than the writers commit: push back
+                # instead of re-serving (and re-encoding) the same prefix
+                sess["polls"] += 1
+                sess["stalls"] += 1
+                raise ServiceError(
+                    429, "watermark_stalled",
+                    f"watermark advanced {wm.rows - sess['rows']} row(s) "
+                    f"since this session's last poll "
+                    f"(min_advance_rows={min_advance}); poll slower",
+                    extra={"retry_after_ms": 250,
+                           "watermark": wm.as_dict()})
+            q = protocol.apply_steps(lt.query(), steps)
+            t0 = time.perf_counter()
+            value = q.run(op, *args, **kwargs)
+            elapsed = time.perf_counter() - t0
+            if sess is None:
+                sess = self._live_sessions[skey] = {
+                    "rows": 0, "polls": 0, "stalls": 0, "served_at": 0.0}
+            sess["rows"] = wm.rows
+            sess["polls"] += 1
+            sess["served_at"] = time.time()
+            out = {"ok": True, "watermark": wm.as_dict(),
+                   "advanced_rows": advanced, "session": skey[2],
+                   "partial": False,
+                   "digest": protocol.result_digest(value),
+                   "elapsed_ms": round(elapsed * 1e3, 3)}
+            if cov is not None:
+                out["coverage"] = cov.as_dict()
+                if cov.degraded:
+                    # 206-style partial result: the missing ranks are
+                    # named in the response, never silently dropped
+                    out["partial"] = True
+                    out["missing_ranks"] = list(cov.missing)
+            if not digest_only:
+                out["result"] = protocol.encode_value(value)
+            return out
+
+    async def live(self, payload: dict) -> dict:
+        """One poll of a live session: refresh the committed prefix,
+        enforce min-watermark-advance backpressure, execute the op over
+        the survivors, and annotate the result with watermark + coverage.
+        Degraded liveset coverage comes back ``partial: True`` (wire
+        status 206)."""
+        tenant = self._tenant(payload if isinstance(payload, dict) else {})
+        self._count(tenant, "requests")
+        if self.draining:
+            self._count(tenant, "rejected")
+            raise ServiceError(503, "draining",
+                               "service is draining; no new queries")
+        (open_spec, op, steps, args, kwargs, min_advance, session,
+         digest_only) = self._decode_live(payload)
+        if self._active >= self.max_active:
+            self._count(tenant, "rejected")
+            raise ServiceError(429, "saturated",
+                               f"service at max_active={self.max_active}; "
+                               f"retry later")
+        waiting = self._tenant_waiting.get(tenant, 0)
+        if waiting >= self.per_tenant * 4:
+            self._count(tenant, "rejected")
+            raise ServiceError(429, "tenant_saturated",
+                               f"tenant {tenant!r} has {waiting} queued "
+                               f"requests (limit {self.per_tenant * 4})")
+        self._tenant_waiting[tenant] = waiting + 1
+        try:
+            await self._sem(tenant).acquire()
+        finally:
+            self._tenant_waiting[tenant] -= 1
+        self._active += 1
+        self._idle.clear()
+        self._count(tenant, "live_polls")
+        # the session key pins continuity to the open spec, not the pool
+        # object: a pool eviction must not reset a tenant's watermark
+        skey = (tenant,
+                hashlib.sha256(canonical_json(open_spec).encode())
+                .hexdigest(), session)
+        loop = asyncio.get_running_loop()
+        try:
+            result = await loop.run_in_executor(
+                self.scheduler.lane("interactive"),
+                lambda: self._poll_live(open_spec, op, steps, args, kwargs,
+                                        min_advance, skey, digest_only))
+            self._count(tenant, "executed")
+            if result.get("partial"):
+                self._count(tenant, "live_partial")
+            return dict(result, tenant=tenant)
+        except ServiceError as e:
+            if e.code == "watermark_stalled":
+                self._count(tenant, "live_stalled")
+            else:
+                self._count(tenant, "errors")
+            raise
+        except BaseException:
+            self._count(tenant, "errors")
+            raise
+        finally:
+            self._sem(tenant).release()
+            self._active -= 1
+            if self._active == 0:
+                self._idle.set()
+
     # -- introspection / lifecycle ----------------------------------------
     def ops(self) -> dict:
         out = []
@@ -600,7 +816,8 @@ class TraceService:
                                 draining=self.draining,
                                 max_active=self.max_active,
                                 per_tenant=self.per_tenant,
-                                in_flight_plans=len(self._flights)),
+                                in_flight_plans=len(self._flights),
+                                live_sessions=len(self._live_sessions)),
                 "tenants": {t: dict(c)
                             for t, c in self.tenant_counters.items()},
                 "plancache": plancache.stats(),
@@ -656,7 +873,8 @@ async def _read_request(reader: asyncio.StreamReader):
 
 def _response(status: int, body: dict) -> bytes:
     payload = json.dumps(body).encode()
-    reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
+    reason = {200: "OK", 206: "Partial Content", 400: "Bad Request",
+              404: "Not Found",
               405: "Method Not Allowed", 413: "Payload Too Large",
               422: "Unprocessable Entity", 429: "Too Many Requests",
               500: "Internal Server Error", 503: "Service Unavailable",
@@ -722,7 +940,7 @@ class TraceServer:
                 self.shutdown(float(payload.get(
                     "grace", self.drain_timeout))))
             return 200, {"ok": True, "draining": True}
-        if path not in ("/query", "/setquery", "/diagnose"):
+        if path not in ("/query", "/setquery", "/diagnose", "/live"):
             return 404, {"ok": False, "error": {"code": "not_found",
                                                 "message": path}}
         try:
@@ -743,14 +961,20 @@ class TraceServer:
                 kwargs["detectors"] = detectors
                 payload["kwargs"] = kwargs
         try:
+            if path == "/live":
+                result = await svc.live(payload)
+                # a degraded-coverage result is correct but incomplete:
+                # 206 tells the client which ranks are missing
+                return (206 if result.get("partial") else 200), result
             result = await svc.query(payload, set_scope=(path == "/setquery"))
             return 200, result
         except ProtocolError as e:
             return 400, {"ok": False, "error": {"code": "protocol",
                                                 "message": str(e)}}
         except ServiceError as e:
-            return e.status, {"ok": False,
-                              "error": {"code": e.code, "message": str(e)}}
+            err = {"code": e.code, "message": str(e)}
+            err.update(e.extra)
+            return e.status, {"ok": False, "error": err}
         except Exception as e:  # op raised: report, keep serving
             return 500, {"ok": False, "error": {
                 "code": "op_failed", "message": f"{type(e).__name__}: {e}",

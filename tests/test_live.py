@@ -1,0 +1,519 @@
+"""Live trace ingestion tests: crash-consistent appends, watermarked
+incremental queries, rank-failure-tolerant degraded queries, and the
+service's /live sessions.
+
+The load-bearing properties:
+
+* **commit record** — a chunk group is visible iff its trailer record is
+  fully durable; any truncation/SIGKILL point yields exactly the
+  committed prefix, with the same rows a clean writer stopped at that
+  commit produces;
+* **pinned snapshot** — a live handle executes over the committed prefix
+  captured at ``refresh()``; eager == streaming == parallel digests hold
+  on that prefix, and incremental re-query equals cold recompute;
+* **degraded coverage** — killing ranks removes them from query results
+  *explicitly* (named in the coverage report), never silently.
+"""
+
+import asyncio
+import os
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import plancache
+from repro.core.liveset import Coverage, LiveTraceSet
+from repro.core.streaming import LiveTrace
+from repro.core.trace import Trace
+from repro.readers.pack import PackWriter, committed_prefix, read_pack
+from repro.runtime.tracer import Tracer, read_heartbeat, write_heartbeat
+from repro.serving.protocol import ProtocolError, result_digest
+from repro.serving.tracequery import ServiceError, TraceService
+from repro.tracegen.big import big_trace
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _events(n, proc=0, t0=0):
+    """A synthetic nested-call event frame: n events, int-ns timestamps."""
+    from repro.core.constants import (ENTER, ET, LEAVE, MSG_SIZE, NAME,
+                                      PARTNER, PROC, TAG, TS)
+    from repro.core.frame import EventFrame
+    names = np.asarray([f"fn{i % 7}" for i in range(n)])
+    et = np.asarray([ENTER if i % 2 == 0 else LEAVE for i in range(n)])
+    # alternating Enter/Leave of the same name → always properly nested
+    names = np.repeat(names[: (n + 1) // 2], 2)[:n]
+    return EventFrame({
+        TS: np.arange(t0, t0 + n, dtype=np.int64),
+        ET: et, NAME: names,
+        PROC: np.full(n, proc, np.int64),
+        PARTNER: np.full(n, -1, np.int64),
+        MSG_SIZE: np.full(n, np.nan), TAG: np.zeros(n, np.int64),
+    })
+
+
+def _grow(path, n_commits=3, rows_per=120, proc=0):
+    """Append ``n_commits`` committed groups; returns the writer."""
+    w = PackWriter.open_append(path, fsync=False)
+    base = committed_prefix(path)["rows"]
+    for c in range(n_commits):
+        w.append(_events(rows_per, proc=proc, t0=(base + c * rows_per)))
+        w.commit()
+    return w
+
+
+@pytest.fixture()
+def fresh_cache():
+    plancache.clear()
+    yield
+    plancache.clear()
+
+
+# ---------------------------------------------------------------------------
+# append / commit / finalize protocol
+# ---------------------------------------------------------------------------
+
+def test_append_commit_finalize_roundtrip(tmp_path):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=3, rows_per=100)
+    assert w.watermark["rows"] == 300
+    assert w.watermark["groups"] == 3
+    # committed prefix readable while the writer is still open
+    snap = committed_prefix(p)
+    assert snap["rows"] == 300 and not snap["finalized"]
+    t = read_pack(p, live=True)
+    assert len(t.events) == 300
+    w.finalize(sidecar=False)
+    snap = committed_prefix(p)
+    assert snap["finalized"]
+    # sealed shard is an ordinary pack
+    assert len(Trace.open(p).events) == 300
+
+
+def test_uncommitted_tail_is_invisible(tmp_path):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=2, rows_per=100)
+    # buffered rows past the last commit must not leak to readers
+    w.append(_events(50, t0=200))
+    assert committed_prefix(p)["rows"] == 200
+    assert len(read_pack(p, live=True).events) == 200
+    w.commit()
+    assert committed_prefix(p)["rows"] == 250
+
+
+def test_crash_consistency_any_truncation_point(tmp_path):
+    """Property: truncating the shard at *any* byte yields exactly the
+    longest prefix of whole commits — and the surviving rows match what a
+    clean writer stopped at that commit wrote (digest equality)."""
+    p = str(tmp_path / "full.pack")
+    w = _grow(p, n_commits=4, rows_per=80)
+    data = open(p, "rb").read()
+    w.finalize(sidecar=False)
+
+    # reference digests: clean writers stopped after k commits
+    ref = {}
+    for k in range(5):
+        rp = str(tmp_path / f"ref{k}.pack")
+        if k:
+            _grow(rp, n_commits=k, rows_per=80).finalize(sidecar=False)
+        else:
+            PackWriter.open_append(rp, fsync=False)
+        ref[k] = (committed_prefix(rp)["rows"],
+                  result_digest(read_pack(rp, live=True).events)
+                  if k else None)
+
+    boundaries = sorted({0, len(data)} | set(range(0, len(data), 211)))
+    seen_rows = set()
+    for cut in boundaries:
+        t = str(tmp_path / "cut.pack")
+        with open(t, "wb") as f:
+            f.write(data[:cut])
+        plancache.clear()
+        snap = committed_prefix(t)
+        assert snap["rows"] % 80 == 0, f"partial commit visible at {cut}"
+        k = snap["rows"] // 80
+        seen_rows.add(k)
+        if k:
+            got = result_digest(read_pack(t, live=True).events)
+            assert got == ref[k][1], f"cut at {cut}: prefix != clean stop"
+    # the sweep actually exercised several distinct commit counts
+    assert len(seen_rows) >= 3
+
+
+def test_resume_append_after_torn_tail(tmp_path):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=2, rows_per=100)
+    w._out.close()
+    # tear: garbage + half a group beyond the last commit
+    with open(p, "ab") as f:
+        f.write(os.urandom(37))
+    w2 = PackWriter.open_append(p, fsync=False)
+    assert w2.watermark["rows"] == 200   # resume truncated the tear
+    w2.append(_events(60, t0=200))
+    w2.commit()
+    w2.finalize(sidecar=False)
+    assert len(Trace.open(p).events) == 260
+
+
+def test_committed_prefix_missing_and_empty(tmp_path):
+    missing = str(tmp_path / "nope.pack")
+    assert committed_prefix(missing)["rows"] == 0
+    p = str(tmp_path / "empty.pack")
+    PackWriter.open_append(p, fsync=False)
+    assert committed_prefix(p)["rows"] == 0
+    lt = LiveTrace([missing, p])
+    assert lt.watermark.rows == 0
+    prof = lt.query().flat_profile()
+    assert len(prof) == 0
+
+
+# ---------------------------------------------------------------------------
+# watermarked incremental queries
+# ---------------------------------------------------------------------------
+
+def test_livetrace_pinning_and_refresh(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=2, rows_per=100)
+    lt = LiveTrace([p])
+    assert lt.watermark.rows == 200
+    w.append(_events(100, t0=200))
+    w.commit()
+    # pinned: the old snapshot does not see the new commit ...
+    assert lt.watermark.rows == 200
+    assert len(lt.query().run("flat_profile")) > 0
+    # ... until refresh
+    wm = lt.refresh()
+    assert wm.rows == 300
+
+
+def test_incremental_requery_equals_cold(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=2, rows_per=120)
+    lt = LiveTrace([p])
+    d1 = result_digest(lt.query().run("flat_profile"))
+    st = plancache.stats()
+    assert st["live_entries"] == 1 and st["live_misses"] >= 1
+    for _ in range(3):
+        w.append(_events(120, t0=committed_prefix(p)["rows"]))
+        w.commit()
+        lt.refresh()
+        inc = lt.query().run("flat_profile")
+        cold = LiveTrace([p], cache=False).query().run("flat_profile",
+                                                       cache=False)
+        assert result_digest(inc) == result_digest(cold)
+    assert plancache.stats()["live_hits"] >= 3
+    assert d1 != result_digest(lt.query().run("flat_profile"))
+
+
+def test_eager_streaming_parallel_agree_on_prefix(tmp_path, fresh_cache):
+    shard_dir = tmp_path / "fleet"
+    big_trace(str(shard_dir), nprocs=3, events_per_proc=900,
+              calls_per_iter=30, seed=5, format="pack")
+    paths = sorted(str(q) for q in shard_dir.glob("*.pack"))
+    lt = LiveTrace(paths)
+    eager_trace = Trace.open(paths)
+    assert lt.watermark.rows == len(eager_trace.events)
+    serial = lt.query().run("flat_profile")
+    par = LiveTrace(paths, processes=2,
+                    executor="parallel").query().run("flat_profile")
+    eager = eager_trace.query().flat_profile()
+    assert result_digest(serial) == result_digest(par)
+    assert result_digest(serial) == result_digest(eager)
+
+
+def test_run_with_watermark(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    _grow(p, n_commits=2, rows_per=100)
+    lt = LiveTrace([p])
+    value, wm = lt.run_with_watermark("flat_profile")
+    assert wm.rows == 200 and not wm.finalized
+    assert len(value) > 0
+    assert wm.as_dict()["per_path"][os.path.abspath(p)]["rows"] == 200
+
+
+def test_incremental_invalidated_by_rewrite(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=2, rows_per=100)
+    lt = LiveTrace([p])
+    lt.query().run("flat_profile")
+    w._out.close()
+    os.unlink(p)
+    _grow(p, n_commits=1, rows_per=64)     # different content, same path
+    lt.refresh()
+    got = lt.query().run("flat_profile")
+    cold = LiveTrace([p], cache=False).query().run("flat_profile",
+                                                   cache=False)
+    assert result_digest(got) == result_digest(cold)
+
+
+def test_open_live_via_trace_open(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    _grow(p, n_commits=1, rows_per=100)
+    lt = Trace.open(p, live=True)
+    assert isinstance(lt, LiveTrace)
+    assert lt.watermark.rows == 100
+    with pytest.raises(ValueError):
+        Trace.open(p, live=True, format="csv")
+
+
+# ---------------------------------------------------------------------------
+# tracer: bounded buffer, heartbeats
+# ---------------------------------------------------------------------------
+
+def test_tracer_bounded_buffer_spills_to_shard(tmp_path):
+    sink = str(tmp_path / "rank_0.pack")
+    tr = Tracer(process=0, sink=sink, flush_every=64, fsync=False)
+    for i in range(400):
+        tr.instant("tick")
+        assert len(tr.ts) < 64          # the buffer never exceeds the bound
+    snap = committed_prefix(sink)
+    assert snap["rows"] + len(tr.ts) == 400
+    hb = read_heartbeat(sink)
+    assert hb["rank"] == 0 and hb["events"] == snap["rows"]
+    assert not hb["final"]
+    tr.close()
+    assert read_heartbeat(sink)["final"]
+    assert len(Trace.open(sink).events) == 400
+
+
+def test_tracer_heartbeat_on_wall_clock(tmp_path):
+    fake = [1000.0]
+    sink = str(tmp_path / "rank_0.pack")
+    tr = Tracer(process=1, sink=sink, flush_every=100_000,
+                heartbeat_interval=1.0, fsync=False,
+                wall_clock=lambda: fake[0])
+    for i in range(300):
+        tr.instant("x")
+    assert committed_prefix(sink)["rows"] == 0   # under both thresholds
+    fake[0] += 5.0
+    for i in range(300):                          # next 256-boundary flushes
+        tr.instant("x")
+    assert committed_prefix(sink)["rows"] > 0
+    tr.close(finalize=False)
+    # unfinalized shard still reads fully via the committed prefix
+    assert committed_prefix(sink)["rows"] == 600
+    assert not committed_prefix(sink)["finalized"]
+
+
+def test_tracer_without_sink_warns_once_keeps_events(tmp_path):
+    tr = Tracer(max_buffer_events=10)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for i in range(25):
+            tr.instant("x")
+    warned = [w for w in caught if issubclass(w.category, RuntimeWarning)]
+    assert len(warned) == 1
+    assert "sink" in str(warned[0].message)
+    assert len(tr.to_trace().events) == 25       # nothing dropped
+
+
+# ---------------------------------------------------------------------------
+# rank-failure tolerance
+# ---------------------------------------------------------------------------
+
+def _fleet(tmp_path, nranks, clock, rows=120):
+    tracers = []
+    for r in range(nranks):
+        tr = Tracer(process=r, sink=str(tmp_path / f"rank_{r}.pack"),
+                    flush_every=50, fsync=False, wall_clock=clock)
+        for i in range(rows):
+            with tr.span(f"fn{i % 5}", proc=r):
+                pass
+        tr.flush()
+        tracers.append(tr)
+    return tracers
+
+
+def test_liveset_classification_and_degraded_query(tmp_path, fresh_cache):
+    fake = [1000.0]
+    clock = lambda: fake[0]                                     # noqa: E731
+    tracers = _fleet(tmp_path, 4, clock)
+    ls = LiveTraceSet(str(tmp_path), lag_timeout=2.0, dead_timeout=10.0,
+                      clock=clock)
+    cov = ls.coverage
+    assert cov.included == [0, 1, 2, 3] and not cov.degraded
+    base_rows = ls.watermark.rows
+
+    # rank 3 stops heartbeating; the rest keep committing
+    fake[0] += 5.0
+    for r in range(3):
+        tracers[r].instant("t", proc=r)
+        tracers[r].flush()
+    cov = ls.refresh()
+    assert cov.per_rank[3]["status"] == "lagging"
+    assert 3 in cov.included                     # laggards still included
+
+    fake[0] += 8.0
+    for r in range(3):
+        tracers[r].flush()
+    val, cov, wm = ls.run("flat_profile")
+    assert cov.per_rank[3]["status"] == "dead"
+    assert cov.missing == [3] and cov.degraded
+    assert cov.per_rank[3]["rows"] > 0           # its prefix still reported
+    assert wm.rows == base_rows - cov.per_rank[3]["rows"] + 3
+    assert len(val) > 0
+    assert cov.staleness_spread >= 0
+    d = cov.as_dict()
+    assert d["missing"] == [3] and d["per_rank"]["3"]["status"] == "dead"
+
+
+def test_liveset_survivor_digest_matches_direct_open(tmp_path, fresh_cache):
+    fake = [1000.0]
+    clock = lambda: fake[0]                                     # noqa: E731
+    _fleet(tmp_path, 3, clock)
+    # kill rank 1's heartbeat only
+    write_heartbeat(str(tmp_path / "rank_1.pack"), 1, 240, 1, 1,
+                    wall=fake[0] - 100.0)
+    ls = LiveTraceSet(str(tmp_path), clock=clock)
+    val, cov, wm = ls.run("flat_profile")
+    assert cov.missing == [1]
+    direct = LiveTrace([str(tmp_path / "rank_0.pack"),
+                        str(tmp_path / "rank_2.pack")],
+                       cache=False).query().run("flat_profile", cache=False)
+    assert result_digest(val) == result_digest(direct)
+
+
+def test_liveset_final_heartbeat_never_goes_dead(tmp_path, fresh_cache):
+    fake = [1000.0]
+    clock = lambda: fake[0]                                     # noqa: E731
+    tracers = _fleet(tmp_path, 2, clock)
+    tracers[1].close()                            # clean shutdown
+    fake[0] += 100.0
+    tracers[0].flush()
+    ls = LiveTraceSet(str(tmp_path), clock=clock)
+    assert ls.coverage.per_rank[1]["status"] == "live"
+    assert ls.coverage.per_rank[1]["finalized"]
+    assert not ls.coverage.degraded
+
+
+def test_liveset_all_dead_raises(tmp_path, fresh_cache):
+    fake = [1000.0]
+    clock = lambda: fake[0]                                     # noqa: E731
+    _fleet(tmp_path, 2, clock)
+    fake[0] += 1000.0
+    ls = LiveTraceSet(str(tmp_path), clock=clock)
+    assert ls.coverage.missing == [0, 1]
+    with pytest.raises(RuntimeError, match="no surviving ranks"):
+        ls.run("flat_profile")
+    # empty dir is also a hard error, not an empty result
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(RuntimeError):
+        LiveTraceSet(str(empty), clock=clock).run("flat_profile")
+
+
+def test_coverage_report_shape():
+    cov = Coverage({
+        0: {"status": "live", "path": "a", "rows": 10, "ts_max": 100,
+            "finalized": False, "heartbeat_age": 0.1},
+        1: {"status": "dead", "path": "b", "rows": 4, "ts_max": 40,
+            "finalized": False, "heartbeat_age": 99.0},
+        2: {"status": "lagging", "path": "c", "rows": 8, "ts_max": 70,
+            "finalized": False, "heartbeat_age": 3.0},
+    })
+    assert cov.ranks_total == 3
+    assert cov.included == [0, 2] and cov.missing == [1]
+    assert cov.staleness_spread == 30            # 100 - 70, dead excluded
+    assert cov.degraded
+
+
+# ---------------------------------------------------------------------------
+# service live sessions
+# ---------------------------------------------------------------------------
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+def test_service_live_poll_backpressure_and_growth(tmp_path, fresh_cache):
+    p = str(tmp_path / "rank_0.pack")
+    w = _grow(p, n_commits=2, rows_per=100)
+    svc = TraceService()
+    body = {"open": {"path": p, "mode": "live"}, "op": "flat_profile",
+            "tenant": "t"}
+    out = run(svc.live(body))
+    assert out["ok"] and out["watermark"]["rows"] == 200
+    assert out["advanced_rows"] == 200 and not out["partial"]
+
+    # same session, no growth → 429 watermark_stalled with retry hint
+    with pytest.raises(ServiceError) as exc:
+        run(svc.live(body))
+    assert exc.value.status == 429
+    assert exc.value.code == "watermark_stalled"
+    assert exc.value.extra["retry_after_ms"] > 0
+    assert svc.counters["live_stalled"] == 1
+
+    # a different session is admitted independently
+    out2 = run(svc.live(dict(body, session="other")))
+    assert out2["ok"]
+
+    # growth unblocks the stalled session
+    w.append(_events(80, t0=200))
+    w.commit()
+    out3 = run(svc.live(body))
+    assert out3["watermark"]["rows"] == 280 and out3["advanced_rows"] == 80
+    assert svc.counters["live_polls"] == 4
+
+
+def test_service_liveset_partial_responses(tmp_path, fresh_cache):
+    for r in range(3):
+        tr = Tracer(process=r, sink=str(tmp_path / f"rank_{r}.pack"),
+                    flush_every=40, fsync=False)
+        for i in range(80):
+            with tr.span(f"fn{i % 5}", proc=r):
+                pass
+        tr.flush()
+    svc = TraceService()
+    body = {"open": {"path": str(tmp_path), "mode": "liveset",
+                     "lag_timeout": 5.0, "dead_timeout": 60.0},
+            "op": "flat_profile", "min_advance_rows": 0, "tenant": "t"}
+    out = run(svc.live(body))
+    assert not out["partial"] and out["coverage"]["included"] == [0, 1, 2]
+
+    # back-date rank 2's heartbeat past dead_timeout → 206-style partial
+    write_heartbeat(str(tmp_path / "rank_2.pack"), 2, 160, 1, 9,
+                    wall=time.time() - 120.0)
+    out = run(svc.live(body))
+    assert out["partial"] and out["missing_ranks"] == [2]
+    assert out["coverage"]["per_rank"]["2"]["status"] == "dead"
+    assert svc.counters["live_partial"] == 1
+
+    # all ranks dead → 503 no_survivors, coverage attached to the error
+    for r in (0, 1):
+        write_heartbeat(str(tmp_path / f"rank_{r}.pack"), r, 160, 1, 9,
+                        wall=time.time() - 120.0)
+    with pytest.raises(ServiceError) as exc:
+        run(svc.live(body))
+    assert exc.value.status == 503 and exc.value.code == "no_survivors"
+    assert exc.value.extra["coverage"]["missing"] == [0, 1, 2]
+
+
+def test_query_endpoint_rejects_live_modes(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    _grow(p, n_commits=1, rows_per=50)
+    svc = TraceService()
+    with pytest.raises(ProtocolError, match="/live"):
+        run(svc.query({"open": {"path": p, "mode": "live"},
+                       "op": "flat_profile"}))
+    with pytest.raises(ProtocolError):
+        run(svc.live({"open": {"path": p, "mode": "set"},
+                      "op": "flat_profile"}))
+
+
+def test_live_handle_not_reopened_on_growth(tmp_path, fresh_cache):
+    p = str(tmp_path / "a.pack")
+    w = _grow(p, n_commits=1, rows_per=100)
+    svc = TraceService()
+    body = {"open": {"path": p, "mode": "live"}, "op": "flat_profile",
+            "tenant": "t"}
+    run(svc.live(body))
+    for _ in range(3):
+        w.append(_events(60, t0=committed_prefix(p)["rows"]))
+        w.commit()
+        run(svc.live(body))
+    st = svc.handles.stats()
+    assert st["opens"] == 1 and st["reopens"] == 0

@@ -465,3 +465,32 @@ def test_materialize_and_multi_shard_open(tmp_path):
     mat = st.materialize()
     assert MATCH not in mat.events or mat._structured
     assert len(mat) == len(merged)
+
+
+def test_verify_key_includes_committed_group_count(tmp_path):
+    """Append workloads can grow a pack within one stat granule: the
+    verified-clean key must change whenever the committed-group count
+    does, or a CRC sweep of the short file would vouch for bytes it never
+    read (regression for the append/finalize protocol)."""
+    p = str(tmp_path / "a.pack")
+    w = PackWriter.open_append(p, fsync=False)
+    ev = tg.gol(nprocs=2, iters=2, seed=3).events
+    w.append(ev)
+    w.commit()
+    st = os.stat(p)
+    k2 = packmod._verify_key(p, st, 2)
+    k3 = packmod._verify_key(p, st, 3)
+    assert k2 != k3                      # same stat, different prefix
+    packmod._mark_verified(k2, "chunks")
+    assert "chunks" not in packmod._VERIFIED_CLEAN.get(k3, ())
+
+    # behavioral: finalize, verified read, then append-resume + refinalize
+    # — the re-read must sweep (and see) the new group, not reuse the old
+    # verified entry
+    w.finalize(sidecar=False)
+    rows1 = len(read_pack(p).events)
+    w2 = PackWriter.open_append(p, fsync=False)
+    w2.append(ev)
+    w2.commit()
+    w2.finalize(sidecar=False)
+    assert len(read_pack(p).events) == 2 * rows1

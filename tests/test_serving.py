@@ -604,3 +604,78 @@ def test_patterns_ops_through_plan_and_service(pack_paths, fresh_cache):
         assert resp["digest"] == result_digest(local), op
         wire = protocol.decode_value(json.loads(json.dumps(resp["result"])))
         assert result_digest(wire) == result_digest(local), op
+
+
+def test_breaker_recovers_after_repair(tmp_path, fresh_cache):
+    """Circuit-breaker recovery: a pack whose opens trip the breaker keeps
+    fast-failing 422 only until the operator repairs it — after the
+    cooldown the half-open probe sees the repaired file and the breaker
+    closes (it must not serve 422s forever)."""
+    import os
+    import subprocess
+    import sys
+
+    out = tmp_path / "trc"
+    big_trace(str(out), nprocs=1, events_per_proc=300, calls_per_iter=20,
+              seed=3, format="pack")
+    path = sorted(str(p) for p in out.glob("*.pack"))[0]
+    good = Trace.open(path).flat_profile()
+
+    # damage: tear off the footer AND the tail of the last chunk group so
+    # the strict open raises
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[: int(len(data) * 0.6)])
+
+    async def main():
+        service = TraceService(breaker_threshold=2, breaker_cooldown=30.0)
+        codes = []
+        for _ in range(4):
+            try:
+                await one(service, payload([path], "flat_profile"))
+                codes.append("ok")
+            except ServiceError as e:
+                codes.append((e.status, e.code))
+        assert codes[1] == (422, "source_corrupt")    # breaker tripped
+        assert codes[3] == (422, "source_corrupt")    # fast-fail, no open
+        st = service.handles.stats()
+        assert st["breaker_trips"] == 1
+        assert st["breaker_fastfails"] >= 1
+        assert st["breaker_open"] == 1
+
+        # operator repairs the pack with the CLI, atomically swapping the
+        # salvaged rewrite into place
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        fixed = path + ".fixed"
+        proc = subprocess.run(
+            [sys.executable, os.path.join(repo, "tools", "pack.py"),
+             "--repair", path, "-o", fixed],
+            capture_output=True, text=True, cwd=repo)
+        assert proc.returncode == 0, proc.stderr
+        os.replace(fixed, path)
+
+        # before the cooldown lapses the breaker still fast-fails —
+        # repair does not bypass the half-open schedule
+        try:
+            await one(service, payload([path], "flat_profile"))
+            probed_early = True
+        except ServiceError as e:
+            probed_early = False
+            assert e.code == "source_corrupt"
+        assert not probed_early
+
+        # cooldown lapses (aged directly rather than sleeping it out)
+        for b in service.handles._fails.values():
+            b["until"] = 0.0
+        res = await one(service, payload([path], "flat_profile"))
+        assert res["ok"]                              # probe closed it
+        res2 = await one(service, payload([path], "flat_profile",
+                                          kwargs={}))
+        assert res2["ok"]
+        assert service.handles.stats()["breaker_open"] == 0
+        return res
+
+    res = run(main())
+    # the repaired pack serves the salvageable prefix: same op, fewer or
+    # equal rows than the pristine original
+    assert res["digest"] != "" and len(good) > 0

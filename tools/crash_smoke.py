@@ -14,6 +14,14 @@ Closed loop, all gates hard:
    ``flat_profile`` digest identical to a direct ``Trace.open`` — served
    recovery equals library recovery.
 
+It also runs a **live-ingest smoke** (``--skip-live`` to omit): an
+8-rank live writer fleet (``Tracer`` with append-mode sinks +
+heartbeats) is polled twice through :class:`LiveTraceSet` asserting
+per-rank watermark monotonicity, two ranks are SIGKILLed mid-commit, and
+after ``dead_timeout`` the degraded query must cover exactly the six
+survivors (dead ranks named in the coverage report) with eager ==
+streaming == parallel digests over the committed prefix.
+
 It also emits a **fault matrix** artifact (``--matrix-json``): every
 registered text/pack reader x {truncate 25/75/99%, bit-flip, garbage
 tail} x {strict, lenient} with the observed outcome, so CI archives a
@@ -22,7 +30,7 @@ machine-readable robustness census per commit.
 Usage::
 
     PYTHONPATH=src python tools/crash_smoke.py [--events N]
-        [--matrix-json fault_matrix.json]
+        [--matrix-json fault_matrix.json] [--skip-live]
 """
 
 from __future__ import annotations
@@ -130,6 +138,114 @@ def crash_consistency(events: int) -> dict:
     return out
 
 
+LIVE_WRITER = """
+import sys, time
+sys.path.insert(0, {src!r})
+from repro.runtime.tracer import Tracer
+tr = Tracer(process={rank}, sink={sink!r}, flush_every=2000,
+            heartbeat_interval=0.2, fsync=False)
+print("ready", flush=True)
+i = 0
+while True:
+    with tr.span("fn%d" % (i % 11), proc={rank}):
+        tr.instant("tick", proc={rank})
+    i += 1
+    if i % 2000 == 0:
+        time.sleep(0.01)   # pace the loop so the fleet outlives the polls
+"""
+
+NRANKS = 8
+KILL_RANKS = (2, 5)
+
+
+def live_ingest() -> dict:
+    """8-rank live fleet: watermark monotonicity under growth, SIGKILL
+    two ranks, survivor-only degraded queries with digest agreement."""
+    from repro.core.liveset import LiveTraceSet
+    from repro.core.streaming import LiveTrace
+    from repro.readers.pack import committed_prefix
+    from repro.serving.protocol import result_digest
+
+    out = {}
+    with tempfile.TemporaryDirectory(prefix="live_smoke_") as tmp:
+        sinks = [os.path.join(tmp, f"rank_{r}.pack")
+                 for r in range(NRANKS)]
+        procs = [subprocess.Popen(
+            [sys.executable, "-c",
+             LIVE_WRITER.format(src=os.path.join(REPO, "src"),
+                                rank=r, sink=sinks[r])],
+            stdout=subprocess.PIPE, text=True) for r in range(NRANKS)]
+        try:
+            for p in procs:
+                assert p.stdout.readline().strip() == "ready"
+            deadline = time.time() + 120
+            while time.time() < deadline:
+                if all(committed_prefix(s)["rows"] > 0 for s in sinks):
+                    break
+                time.sleep(0.01)
+            else:
+                raise RuntimeError("fleet never committed rows")
+
+            ls = LiveTraceSet(tmp, lag_timeout=1.5, dead_timeout=4.0)
+            cov = ls.coverage
+            if cov.included != list(range(NRANKS)):
+                raise SystemExit(f"fleet not fully live: {cov.as_dict()}")
+            wm1 = {r: cov.per_rank[r]["rows"] for r in cov.included}
+
+            time.sleep(0.6)
+            cov = ls.refresh()
+            wm2 = {r: cov.per_rank[r]["rows"] for r in cov.included}
+            if any(wm2[r] < wm1[r] for r in wm1):
+                raise SystemExit(f"watermark went backwards: {wm1} {wm2}")
+            if sum(wm2.values()) <= sum(wm1.values()):
+                raise SystemExit("fleet-wide watermark did not advance "
+                                 f"between polls: {wm1} {wm2}")
+            out["watermarks_monotone"] = True
+            out["rows_poll1"] = sum(wm1.values())
+            out["rows_poll2"] = sum(wm2.values())
+
+            for r in KILL_RANKS:
+                procs[r].send_signal(signal.SIGKILL)
+                procs[r].wait()
+            time.sleep(4.5)   # past dead_timeout; survivors keep writing
+
+            cov = ls.refresh()
+            survivors = [r for r in range(NRANKS) if r not in KILL_RANKS]
+            if cov.included != survivors or cov.missing != list(KILL_RANKS):
+                raise SystemExit(
+                    f"wrong degraded coverage: {cov.as_dict()}")
+            out["missing_ranks"] = cov.missing
+            out["survivor_rows"] = ls.watermark.rows
+            out["staleness_spread"] = cov.staleness_spread
+            # dead ranks' committed prefixes still reported, durable
+            if any(cov.per_rank[r]["rows"] <= 0 for r in KILL_RANKS):
+                raise SystemExit("dead ranks lost their committed prefix")
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+            for p in procs:
+                p.wait()
+
+        # fleet fully stopped: the committed prefixes are frozen, so
+        # eager == streaming == parallel must agree digest-for-digest
+        spaths = [sinks[r] for r in range(NRANKS) if r not in KILL_RANKS]
+        serial = LiveTrace(spaths, cache=False)
+        d_stream = result_digest(
+            serial.query().run("flat_profile", cache=False))
+        d_eager = result_digest(
+            serial.materialize().query().run("flat_profile", cache=False))
+        d_par = result_digest(
+            LiveTrace(spaths, processes=2, executor="parallel",
+                      cache=False).query().run("flat_profile", cache=False))
+        out["digests_agree"] = (d_stream == d_eager == d_par)
+        if not out["digests_agree"]:
+            raise SystemExit(
+                f"digest disagreement on committed prefix: "
+                f"stream={d_stream} eager={d_eager} par={d_par}")
+    return out
+
+
 def fault_matrix() -> list:
     """Outcome census: reader x corruption x policy on small goldens."""
     from repro import tracegen
@@ -191,9 +307,13 @@ def main(argv=None) -> int:
     ap.add_argument("--matrix-json",
                     help="write the reader x corruption x policy outcome "
                     "matrix to PATH")
+    ap.add_argument("--skip-live", action="store_true",
+                    help="skip the live-ingest rank-failure smoke")
     args = ap.parse_args(argv)
 
     result = {"crash_consistency": crash_consistency(args.events)}
+    if not args.skip_live:
+        result["live_ingest"] = live_ingest()
     print(json.dumps(result, indent=2))
 
     if args.matrix_json:

@@ -25,6 +25,10 @@ Maintenance modes (inputs that are already packs)::
     PYTHONPATH=src python tools/pack.py --repair bad.pack [-o fixed.pack]
         # salvage-open (footer loss and CRC-failing chunk groups are
         # tolerated) and rewrite a fresh, fully-checksummed pack
+    PYTHONPATH=src python tools/pack.py --watermark rank_0.pack
+        # committed-prefix watermark of a live (append-mode) shard:
+        # rows/groups/bytes committed, ts range, finalized flag, and the
+        # heartbeat record if the writing rank left one
 
 ``--verify`` on packs exits non-zero if any pack fails its CRCs;
 ``--repair`` exits non-zero only when a pack yields no rows at all.
@@ -138,6 +142,31 @@ def _repair_mode(inputs: list, out: str | None) -> int:
     return 1 if failures else 0
 
 
+def _watermark_mode(inputs: list) -> int:
+    """Committed-prefix report for live append-mode shards (works on
+    finalized packs too — there the watermark is just the whole file)."""
+    import json
+
+    from repro.readers.pack import committed_prefix
+    from repro.runtime.tracer import read_heartbeat
+    failures = 0
+    for inp in inputs:
+        try:
+            snap = committed_prefix(inp)
+        except (OSError, ValueError) as e:
+            print(f"{inp}: UNREADABLE ({e})")
+            failures += 1
+            continue
+        out = dict(snap["watermark"], path=inp)
+        hb = read_heartbeat(inp)
+        if hb is not None:
+            age = time.time() - hb["wall"] if hb.get("wall") else None
+            out["heartbeat"] = dict(
+                hb, age_s=round(age, 3) if age is not None else None)
+        print(json.dumps(out))
+    return 1 if failures else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("inputs", nargs="+", help="trace files / archives")
@@ -157,8 +186,14 @@ def main(argv=None) -> int:
                     help="salvage a damaged pack and rewrite it as a "
                     "fresh, fully-checksummed pack (default output: "
                     "<stem>.repaired.pack)")
+    ap.add_argument("--watermark", action="store_true",
+                    help="print each shard's committed-prefix watermark "
+                    "(+ heartbeat, if any) as one JSON line — for "
+                    "inspecting live append-mode shards")
     args = ap.parse_args(argv)
 
+    if args.watermark:
+        return _watermark_mode(args.inputs)
     if args.repair:
         return _repair_mode(args.inputs, args.out)
     if args.verify and all(_is_pack(i) for i in args.inputs):
